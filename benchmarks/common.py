@@ -1,0 +1,156 @@
+"""Shared benchmark machinery: cached contexts, curve runner, CSV/JSON out."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IndexConfig, RairsIndex, build_index, dco_summary,
+                        ground_truth, per_query_recall, recall_at_k)
+from repro.data import make_dataset
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+NPROBES = (1, 2, 4, 8, 16, 32, 64)
+
+_CTX_CACHE: Dict[Tuple[str, int], "BenchContext"] = {}
+
+
+@dataclasses.dataclass
+class BenchContext:
+    name: str
+    x: jnp.ndarray
+    q: jnp.ndarray
+    metric: str
+    nlist: int
+    centroids: jnp.ndarray
+    codebook: object
+    _gt: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    _idx: Dict[tuple, RairsIndex] = dataclasses.field(default_factory=dict)
+
+    def gt(self, k: int) -> np.ndarray:
+        if k not in self._gt:
+            self._gt[k] = ground_truth(self.x, self.q, k, metric=self.metric)
+        return self._gt[k]
+
+    def index(self, strategy: str, seil: bool, **over) -> RairsIndex:
+        key = (strategy, seil, tuple(sorted(over.items())))
+        if key not in self._idx:
+            cfg = IndexConfig(nlist=self.nlist, strategy=strategy, seil=seil,
+                              metric=self.metric, **over)
+            self._idx[key] = build_index(
+                jax.random.PRNGKey(0), self.x, cfg,
+                centroids=self.centroids, codebook=self.codebook)
+        return self._idx[key]
+
+
+def get_context(dataset: str, nlist: int = 256, n_queries: Optional[int] = None
+                ) -> BenchContext:
+    ckey = (dataset, nlist)
+    if ckey in _CTX_CACHE:
+        ctx = _CTX_CACHE[ckey]
+    else:
+        x, q, spec = make_dataset(dataset)
+        cfg = IndexConfig(nlist=nlist, metric=spec.metric)
+        base = build_index(jax.random.PRNGKey(0), x, cfg)
+        ctx = BenchContext(name=dataset, x=x, q=q, metric=spec.metric,
+                           nlist=nlist, centroids=base.centroids,
+                           codebook=base.codebook)
+        ctx._idx[("rair", True, ())] = base
+        _CTX_CACHE[ckey] = ctx
+    if n_queries is not None and n_queries < ctx.q.shape[0]:
+        return dataclasses.replace(
+            ctx, q=ctx.q[:n_queries],
+            _gt={k: v[:n_queries] for k, v in ctx._gt.items()},
+            _idx=ctx._idx)
+    return ctx
+
+
+def timed_search(idx: RairsIndex, q, *, k, nprobe, k_factor=10,
+                 chunk: int = 256, repeats: int = 1):
+    """Run chunked search; returns (merged result arrays, us_per_query)."""
+    nq = q.shape[0]
+    outs = []
+    # warmup/compile on first chunk shape
+    first = min(chunk, nq)
+    idx.search(q[:first], k=k, nprobe=nprobe, k_factor=k_factor
+               ).ids.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        outs = []
+        for s in range(0, nq, chunk):
+            qc = q[s:s + chunk]
+            if qc.shape[0] < first and s > 0:
+                pad = first - qc.shape[0]
+                qc = jnp.concatenate([qc, qc[:1].repeat(pad, 0)], 0)
+                r = idx.search(qc, k=k, nprobe=nprobe, k_factor=k_factor)
+                r = jax.tree.map(lambda a: a[:q[s:s + chunk].shape[0]], r)
+            else:
+                r = idx.search(qc, k=k, nprobe=nprobe, k_factor=k_factor)
+            outs.append(jax.tree.map(np.asarray, r))
+    dt = (time.perf_counter() - t0) / repeats
+    merged = jax.tree.map(lambda *a: np.concatenate(a, 0), *outs)
+    return merged, dt / nq * 1e6
+
+
+def curve(ctx: BenchContext, idx: RairsIndex, *, k: int = 10,
+          k_factor: int = 10, nprobes=NPROBES) -> List[dict]:
+    """Recall/DCO curve via the dense scoring path (== blocked path; the
+    GEMM is shared across the nprobe sweep).  Wall-clock QPS is measured
+    separately at operating points (see qps_at) — the paper itself switches
+    to DCO after Fig. 7 because QPS is run-to-run noisy."""
+    from repro.core.dense import dense_search_multi
+    gt = ctx.gt(k)
+    probes = tuple(p for p in nprobes if p <= ctx.nlist)
+    results = dense_search_multi(idx, ctx.q, nprobes=probes, k=k,
+                                 k_factor=k_factor)
+    rows = []
+    for p, res in zip(probes, results):
+        s = dco_summary(res)
+        rows.append({
+            "nprobe": p,
+            "recall": recall_at_k(res.ids, gt),
+            "dco": s["total_dco"],
+            "approx_dco": s["approx_dco"],
+        })
+    return rows
+
+
+def qps_at(ctx: BenchContext, idx: RairsIndex, *, nprobe: int, k: int = 10,
+           k_factor: int = 10, nq: int = 64) -> float:
+    """us/query of the deployment (blocked) path at one operating point."""
+    q = ctx.q[:nq]
+    _, us = timed_search(idx, q, k=k, nprobe=nprobe, k_factor=k_factor,
+                         chunk=32)
+    return us
+
+
+def at_recall(rows: List[dict], target: float, field: str) -> Optional[float]:
+    """Linear interpolation of `field` at the target recall, walking the
+    curve in nprobe order (monotone-envelope: first crossing wins)."""
+    rows = sorted(rows, key=lambda r: r.get("nprobe", r[field]))
+    prev = None
+    for r in rows:
+        if r["recall"] >= target:
+            if prev is None or r["recall"] <= prev["recall"]:
+                return float(r[field])
+            w = (target - prev["recall"]) / (r["recall"] - prev["recall"])
+            return float(prev[field] + w * (r[field] - prev[field]))
+        if prev is None or r["recall"] > prev["recall"]:
+            prev = r
+    return None  # target unreachable
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)

@@ -1,0 +1,273 @@
+"""Roofline report: three terms per (arch x shape) on the 16x16 mesh.
+
+Sources (see EXPERIMENTS.md §Roofline for the methodology note):
+  * compute term   — exact global HLO FLOPs from the unrolled cost pass
+    (launch_results/cost/*.json; XLA counts while bodies once, so the
+    production scanned lowering cannot be used for totals — validated
+    in tests/test_dryrun.py) divided by chips x peak;
+  * memory term    — analytic minimum HBM traffic (params, caches,
+    activations; formulas below), the fusion-realistic bound.  The
+    unfused HLO bytes from the cost pass are reported as the upper
+    bracket;
+  * collective term — analytic wire bytes of the sharding schedule
+    (megatron TP all-reduces, DP grad reduction, ZeRO RS/AG, EP
+    all-to-all, paged gathers), cross-checked against the collective-op
+    inventory parsed from the compiled 256-dev HLO (dryrun/*.json).
+
+Hardware: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI
+per chip. chips=256 (single pod; the pod axis is pure DP on top).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES
+from repro.launch.shapes import LONG_KNN_CFG
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+TP = 16           # model axis
+DP = 16           # data axis
+BF16 = 2
+F32 = 4
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "launch_results")
+
+
+def _param_counts(cfg) -> Dict[str, float]:
+    """#params by group: dense (always active), expert (MoE), embed table."""
+    from repro.models.transformer import ParamSpec, param_specs
+    import jax
+    dense = expert = embed = 0
+    def walk(tree, in_moe=False):
+        nonlocal dense, expert, embed
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                walk(v, in_moe or k == "moe")
+            elif isinstance(v, ParamSpec):
+                n = float(np.prod(v.shape))
+                if k == "embed":
+                    embed += n
+                elif in_moe and k in ("w_gate", "w_up", "w_down") \
+                        and len(v.shape) == 4:
+                    expert += n
+                else:
+                    dense += n
+    walk(param_specs(cfg))
+    return {"dense": dense, "expert": expert, "embed": embed}
+
+
+def model_flops(arch: str, shape: str, **_) -> float:
+    """'Useful' FLOPs: 6*N_active*T train / 2*N_active*T inference,
+    plus exact-attention (or SSD / retrieval) context terms."""
+    cfg = ARCHS[arch]
+    info = SHAPES[shape]
+    b, s = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+    pc = _param_counts(cfg)
+    n_active = pc["dense"] + pc["expert"] * (
+        cfg.moe_top_k / cfg.moe_experts if cfg.moe_experts else 0.0)
+    n_attn_layers = sum(m == "attn" for m, _ in cfg.slot_kinds()) \
+        * cfg.n_periods
+    hd, h = cfg.hd, cfg.n_heads
+
+    if kind == "train":
+        t = b * s
+        attn = 6 * n_attn_layers * (2 * t * s * h * hd) / 2  # causal half
+        return 6 * n_active * t + attn
+    if kind == "prefill":
+        t = b * s
+        attn = 2 * n_attn_layers * (2 * t * s * h * hd) / 2
+        return 2 * n_active * t + attn
+    if kind == "decode":
+        attn = n_attn_layers * (2 * 2 * b * s * cfg.n_kv_heads
+                                * (h // cfg.n_kv_heads) * hd)
+        return 2 * n_active * b + attn
+    # long_decode
+    if cfg.attn_every == 0:   # rairs_knn: retrieved subset, not full S
+        kc = LONG_KNN_CFG
+        keys = kc.nprobe * kc.max_blocks_per_list * kc.block + kc.window
+        attn = n_attn_layers * (2 * 2 * b * keys * h * hd)
+        return 2 * n_active * b + attn
+    attn = n_attn_layers * (2 * 2 * b * s * h * hd)
+    return 2 * n_active * b + attn
+
+
+def analytic_bytes(arch: str, shape: str, tp: int = TP, dp: int = DP,
+                   kv_bytes: int = BF16, knn_cfg=None) -> float:
+    """Min HBM traffic per device per step (fusion-ideal)."""
+    global TP, DP
+    TP_, DP_ = TP, DP
+    cfg = ARCHS[arch]
+    info = SHAPES[shape]
+    b, s = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+    pc = _param_counts(cfg)
+    n_total = pc["dense"] + pc["expert"] + pc["embed"]
+    p_local = n_total / tp              # TP-sharded weights
+    act_bytes_tok = cfg.d_model * cfg.n_layers * 12 * BF16  # ~6 rw tensors
+
+    if kind == "train":
+        accum = 8
+        tok_local = b * s / dp
+        # fwd+bwd param reads per microbatch (remat ~3x) + grad write/read
+        w = accum * 3 * p_local * F32 + 4 * p_local * F32
+        opt = 6 * p_local * F32 / dp   # ZeRO-1 moments
+        acts = tok_local * act_bytes_tok
+        return w + opt + acts
+    if kind == "prefill":
+        tok_local = b * s / dp
+        return p_local * BF16 + tok_local * act_bytes_tok / 6
+    if kind == "decode":
+        n_attn_layers = sum(m == "attn" for m, _ in cfg.slot_kinds()) \
+            * cfg.n_periods
+        kv = (2 * n_attn_layers * (b / dp) * s
+              * cfg.n_kv_heads * cfg.hd / tp * kv_bytes)
+        ssm_layers = cfg.n_layers - n_attn_layers
+        ssm = (2 * ssm_layers * (b / dp) * cfg.ssm_heads
+               * cfg.ssm_head_dim * cfg.ssm_state * F32) if ssm_layers else 0
+        return p_local * BF16 + kv + ssm
+    # long_decode
+    if cfg.attn_every == 0:
+        kc = knn_cfg or LONG_KNN_CFG
+        n_attn_layers = cfg.n_layers
+        gathered = (2 * n_attn_layers * cfg.n_kv_heads * kc.nprobe
+                    * kc.max_blocks_per_list * kc.block * cfg.hd * kv_bytes
+                    / CHIPS)
+        cent = n_attn_layers * cfg.n_kv_heads * kc.nlist * cfg.hd * F32 \
+            / CHIPS
+        return p_local * BF16 + gathered + cent
+    n_attn_layers = sum(m == "attn" for m, _ in cfg.slot_kinds()) \
+        * cfg.n_periods
+    kv = 2 * n_attn_layers * b * s * cfg.n_kv_heads * cfg.hd * BF16 / CHIPS
+    ssm_layers = cfg.n_layers - n_attn_layers
+    ssm = 2 * ssm_layers * b * cfg.ssm_heads * cfg.ssm_head_dim \
+        * cfg.ssm_state * F32
+    return p_local * BF16 + kv + ssm
+
+
+def analytic_collective_bytes(arch: str, shape: str, tp: int = TP,
+                              dp: int = DP, grad_bytes: int = F32,
+                              kv_bytes: int = BF16, knn_cfg=None) -> float:
+    """Wire bytes per device per step under the declared schedule."""
+    cfg = ARCHS[arch]
+    info = SHAPES[shape]
+    b, s = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+    pc = _param_counts(cfg)
+    n_total = pc["dense"] + pc["expert"] + pc["embed"]
+    d = cfg.d_model
+    L = cfg.n_layers
+    n_attn = sum(m == "attn" for m, _ in cfg.slot_kinds()) * cfg.n_periods
+    n_moe = sum(ml == "moe" for _, ml in cfg.slot_kinds()) * cfg.n_periods
+
+    if kind == "train":
+        tok_local = b * s / dp
+        # megatron TP: 2 all-reduce / layer fwd + 2 bwd, ring: 2x payload
+        tpb = L * 4 * (tok_local * d * BF16) * 2 * (tp - 1) / tp
+        # DP grad all-reduce (ring 2x) in f32 over TP-sharded grads
+        dpg = 2 * (n_total / tp) * grad_bytes * (dp - 1) / dp * 2
+        # EP all-to-all: top_k dispatch+combine per moe layer
+        ep = n_moe * 2 * (tok_local * d * BF16) * (cfg.moe_top_k or 0)
+        return tpb + dpg + ep
+    if kind == "prefill":
+        tok_local = b * s / dp
+        tpb = L * 2 * (tok_local * d * BF16) * 2 * (tp - 1) / tp
+        ep = n_moe * 2 * (tok_local * d * BF16) * (cfg.moe_top_k or 0)
+        return tpb + ep
+    if kind == "decode":
+        tok_local = b / dp
+        tpb = L * 2 * (tok_local * d * BF16) * 2 * (tp - 1) / tp
+        ep = n_moe * 2 * (tok_local * d * BF16) * (cfg.moe_top_k or 0)
+        return tpb + ep
+    # long_decode, b=1 replicated activations; paged gathers cross-device
+    if cfg.attn_every == 0:
+        kc = knn_cfg or LONG_KNN_CFG
+        gathered = (2 * cfg.n_layers * cfg.n_kv_heads * kc.nprobe
+                    * kc.max_blocks_per_list * kc.block * cfg.hd * kv_bytes)
+        # blocks sharded over data: (DP-1)/DP of gathered bytes cross links
+        return gathered * (dp - 1) / dp / dp + L * 2 * d * BF16 * 2
+    return L * 2 * d * BF16 * 2   # TP all-reduces on a single token
+
+
+def load_results():
+    cost, dry = {}, {}
+    cdir = os.path.join(ROOT, "cost")
+    ddir = os.path.join(ROOT, "dryrun")
+    for fn in os.listdir(cdir):
+        r = json.load(open(os.path.join(cdir, fn)))
+        cost[(r["arch"], r["shape"])] = r
+    for fn in os.listdir(ddir):
+        r = json.load(open(os.path.join(ddir, fn)))
+        if r.get("status") == "skipped":
+            continue
+        dry[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return cost, dry
+
+
+def roofline_row(arch: str, shape: str, cost, dry) -> Optional[dict]:
+    c = cost.get((arch, shape))
+    if c is None or c.get("status") != "ok":
+        return None
+    d1 = dry.get((arch, shape, False), {})
+    flops = c["flops"]
+    t_comp = flops / (CHIPS * PEAK)
+    abytes = analytic_bytes(arch, shape)
+    t_mem = abytes / HBM
+    cbytes = analytic_collective_bytes(arch, shape)
+    t_coll = cbytes / ICI
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(arch, shape)
+    total = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": arch, "shape": shape,
+        "hlo_flops": flops,
+        "model_flops": mf,
+        "useful_ratio": mf / flops,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[0],
+        "roofline_frac": t_comp / total,   # fraction of peak if bound there
+        "hlo_unfused_bytes": c.get("bytes_accessed"),
+        "collectives_in_hlo": sorted(
+            (d1.get("collective_bytes") or {}).keys()),
+        "compile_s_pod1": d1.get("compile_s"),
+    }
+
+
+def report(out_path: Optional[str] = None):
+    cost, dry = load_results()
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = roofline_row(arch, shape, cost, dry)
+            if r:
+                rows.append(r)
+    lines = ["| arch | shape | HLO FLOPs | useful | compute s | memory s |"
+             " collective s | bound | roofline |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['hlo_flops']:.3e} "
+            f"| {r['useful_ratio']:.2f} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| {r['bottleneck']} | {r['roofline_frac']:.2f} |")
+    text = "\n".join(lines)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    return rows, text
+
+
+if __name__ == "__main__":
+    rows, text = report(os.path.join(ROOT, "roofline.json"))
+    print(text)

@@ -1,0 +1,66 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (see DESIGN.md §6).  Prints
+``name,us_per_call,derived`` CSV; raw rows go to benchmarks/results/.
+``--full`` widens datasets/queries; ``--only fig8`` runs one bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import suite
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    main_sets = ("sift1m", "msong", "gist", "openai") if args.full \
+        else ("sift1m",)
+    benches = [
+        ("fig5", lambda: suite.bench_cells()),
+        ("fig7_k10", lambda: suite.bench_recall_curves(main_sets, k=10,
+                                                       quick=not args.full)),
+        ("fig7_k1", lambda: suite.bench_recall_curves(("sift1m",), k=1,
+                                                      quick=True)),
+        ("fig8", lambda: suite.bench_nprobe()),
+        ("fig9", lambda: suite.bench_cdf()),
+        ("fig10", lambda: suite.bench_top100()),
+        ("fig11", lambda: suite.bench_latency()),
+        ("fig12", lambda: suite.bench_insert_delete()),
+        ("fig13a", lambda: suite.bench_ablation()),
+        ("table4", lambda: suite.bench_memory(
+            main_sets if args.full else ("sift1m",))),
+        ("fig14", lambda: suite.bench_multi_assign()),
+        ("fig15a", lambda: suite.bench_lambda()),
+        ("fig15b", lambda: suite.bench_ncands()),
+        ("fig16", lambda: suite.bench_block_size()),
+        ("fig17", lambda: suite.bench_seil_soar()),
+        ("table3", lambda: suite.bench_match_table(
+            main_sets if args.full else ("sift1m",))),
+        ("kernels", lambda: suite.bench_kernels()),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},NaN,FAILED")
+        sys.stderr.write(f"[bench {name}: {time.perf_counter()-t0:.1f}s]\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""One benchmark per paper table/figure (see DESIGN.md §6 for the map).
+
+Each ``bench_*`` function emits ``name,us_per_call,derived`` CSV rows and
+saves raw rows to benchmarks/results/*.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IndexConfig, build_index, dco_summary, insert_batch,
+                        per_query_recall, recall_at_k)
+from repro.core.assign import candidate_lists, rair_assign
+from repro.core.seil import build_id_map, cell_stats, delete_ids, \
+    vectors_in_large_cells
+
+from .common import (NPROBES, at_recall, curve, emit, get_context, qps_at,
+                     save_json, timed_search)
+
+# paper-name -> (strategy, seil) presets
+SOLUTIONS = {
+    "IVFPQfs": ("single", False),
+    "NaiveRA": ("naive", False),
+    "SOARL2": ("soar", False),
+    "RAIR": ("rair", False),
+    "SRAIR": ("srair", False),
+    "RAIRS": ("rair", True),
+    "SRAIRS": ("srair", True),
+}
+
+
+def bench_recall_curves(datasets=("sift1m",), k=10, quick=True):
+    """Fig 7a/7b/7c: recall-QPS and recall-DCO across solutions."""
+    out = {}
+    names = ("IVFPQfs", "NaiveRA", "SOARL2", "SRAIRS", "RAIRS") if quick \
+        else tuple(SOLUTIONS)
+    for ds in datasets:
+        ctx = get_context(ds, n_queries=500 if quick else None)
+        for name in names:
+            strat, seil = SOLUTIONS[name]
+            rows = curve(ctx, ctx.index(strat, seil), k=k)
+            out[f"{ds}/{name}"] = rows
+        target = 0.99 if k == 1 else 0.9
+        base = at_recall(out[f"{ds}/IVFPQfs"], target, "dco")
+        ours = at_recall(out[f"{ds}/RAIRS"], target, "dco")
+        dr = (base / ours) if (base and ours) else float("nan")
+        # wall-clock speedup at the target-recall operating point (blocked
+        # deployment path, matched-recall nprobes)
+        pb = at_recall(out[f"{ds}/IVFPQfs"], target, "nprobe")
+        pr = at_recall(out[f"{ds}/RAIRS"], target, "nprobe")
+        if pb and pr:
+            usb = qps_at(ctx, ctx.index("single", False),
+                         nprobe=max(1, round(pb)), k=k)
+            usr = qps_at(ctx, ctx.index("rair", True),
+                         nprobe=max(1, round(pr)), k=k)
+            qr = usb / usr
+        else:
+            qr = float("nan")
+        emit(f"fig7_recall_curves/{ds}/k{k}", 0.0,
+             f"dco_speedup@{target}={dr:.3f}x qps_speedup@{target}={qr:.3f}x")
+    save_json(f"fig7_recall_curves_k{k}", out)
+    return out
+
+
+def bench_nprobe(dataset="sift1m"):
+    """Fig 8: recall vs nprobe — RAIRS reaches target recall at ~half the
+    nprobe of single assignment."""
+    ctx = get_context(dataset, n_queries=500)
+    out = {}
+    for name in ("IVFPQfs", "NaiveRA", "RAIRS", "SRAIRS"):
+        strat, seil = SOLUTIONS[name]
+        rows = curve(ctx, ctx.index(strat, seil), k=10)
+        out[name] = [{"nprobe": r["nprobe"], "recall": r["recall"]}
+                     for r in rows]
+    # nprobe (interpolated) to hit recall 0.9
+    def probe_at(name):
+        return at_recall([{"recall": r["recall"], "nprobe": r["nprobe"]}
+                          for r in out[name]], 0.9, "nprobe")
+    pb, pr = probe_at("IVFPQfs"), probe_at("RAIRS")
+    ratio = (pr / pb) if (pb and pr) else float("nan")
+    emit("fig8_nprobe", 0.0, f"nprobe_ratio_RAIRS/IVFPQfs@0.9={ratio:.3f}")
+    save_json("fig8_nprobe", out)
+    return out
+
+
+def bench_cdf(dataset="sift1m"):
+    """Fig 9: per-query recall and DCO CDFs at matched ~0.9 recall."""
+    from repro.core.dense import dense_search
+    ctx = get_context(dataset, n_queries=1000)
+    out = {}
+    for name, probe in (("IVFPQfs", 16), ("RAIRS", 8)):
+        strat, seil = SOLUTIONS[name]
+        res = dense_search(ctx.index(strat, seil), ctx.q, k=10,
+                           nprobe=probe)
+        rec = per_query_recall(res.ids, ctx.gt(10))
+        dco = np.asarray(res.approx_dco) + np.asarray(res.refine_dco)
+        out[name] = {
+            "recall_mean": float(rec.mean()),
+            "recall_p10": float(np.percentile(rec, 10)),
+            "frac_recall_ge_0.8": float((rec >= 0.8).mean()),
+            "dco_mean": float(dco.mean()),
+            "dco_p99": float(np.percentile(dco, 99)),
+            "dco_p99_over_mean": float(np.percentile(dco, 99) / dco.mean()),
+        }
+    emit("fig9_cdf", 0.0,
+         f"rairs_p99/mean={out['RAIRS']['dco_p99_over_mean']:.2f} "
+         f"dco_mean_ratio={out['RAIRS']['dco_mean']/out['IVFPQfs']['dco_mean']:.3f}")
+    save_json("fig9_cdf", out)
+    return out
+
+
+def bench_top100(dataset="sift1m"):
+    """Fig 10: top-100 queries (K_FACTOR=4 per paper §6.1)."""
+    ctx = get_context(dataset, n_queries=300)
+    out = {}
+    for name in ("IVFPQfs", "NaiveRA", "SOARL2", "RAIRS"):
+        strat, seil = SOLUTIONS[name]
+        out[name] = curve(ctx, ctx.index(strat, seil), k=100, k_factor=4,
+                          nprobes=(4, 8, 16, 32, 64))
+    b = at_recall(out["IVFPQfs"], 0.9, "dco")
+    r = at_recall(out["RAIRS"], 0.9, "dco")
+    emit("fig10_top100", 0.0,
+         f"dco_speedup@0.9={(b / r) if (b and r) else float('nan'):.3f}x")
+    save_json("fig10_top100", out)
+    return out
+
+
+def bench_latency(dataset="sift1m"):
+    """Fig 11: one-query-at-a-time latency (B=1, no batch amortization)."""
+    ctx = get_context(dataset, n_queries=64)
+    out = {}
+    probes = {"IVFPQfs": 16, "NaiveRA": 16, "SRAIRS": 8, "RAIRS": 8}
+    for name in ("IVFPQfs", "NaiveRA", "SRAIRS", "RAIRS"):
+        strat, seil = SOLUTIONS[name]
+        idx = ctx.index(strat, seil)
+        res, us = timed_search(idx, ctx.q, k=10, nprobe=probes[name], chunk=1)
+        out[name] = {"us_per_query": us,
+                     "recall": recall_at_k(res.ids, ctx.gt(10))}
+    emit("fig11_latency", out["RAIRS"]["us_per_query"],
+         f"latency_ratio_vs_IVFPQfs="
+         f"{out['RAIRS']['us_per_query']/out['IVFPQfs']['us_per_query']:.3f}")
+    save_json("fig11_latency", out)
+    return out
+
+
+def bench_insert_delete(dataset="sift1m"):
+    """Fig 12: insertion/deletion throughput, RAIRS vs IVFPQfs."""
+    ctx = get_context(dataset)
+    n = ctx.x.shape[0]
+    n0 = int(n * 0.8)
+    batch = (n - n0) // 5
+    out = {}
+    for name in ("IVFPQfs", "RAIRS"):
+        strat, seil = SOLUTIONS[name]
+        cfg = IndexConfig(nlist=ctx.nlist, strategy=strat, seil=seil,
+                          metric=ctx.metric)
+        idx = build_index(jax.random.PRNGKey(0), ctx.x[:n0], cfg,
+                          centroids=ctx.centroids, codebook=ctx.codebook)
+        t0 = time.perf_counter()
+        for b in range(5):
+            s = n0 + b * batch
+            idx = insert_batch(idx, ctx.x[s:s + batch])
+        t_ins = time.perf_counter() - t0
+        id_map = build_id_map(idx.arrays)
+        rng = np.random.default_rng(0)
+        victims = rng.choice(n, size=5 * batch, replace=False)
+        t0 = time.perf_counter()
+        arrays = idx.arrays
+        for b in range(5):
+            arrays = delete_ids(arrays, id_map,
+                                victims[b * batch:(b + 1) * batch])
+        t_del = time.perf_counter() - t0
+        out[name] = {"insert_vec_per_s": 5 * batch / t_ins,
+                     "delete_vec_per_s": 5 * batch / t_del}
+    rel_i = out["RAIRS"]["insert_vec_per_s"] / out["IVFPQfs"]["insert_vec_per_s"]
+    rel_d = out["RAIRS"]["delete_vec_per_s"] / out["IVFPQfs"]["delete_vec_per_s"]
+    emit("fig12_insert_delete", 0.0,
+         f"insert_rel={rel_i:.3f} delete_rel={rel_d:.3f}")
+    save_json("fig12_insert_delete", out)
+    return out
+
+
+def _dco_at(ctx, name, target=0.9, k=10, **over):
+    strat, seil = SOLUTIONS[name]
+    rows = curve(ctx, ctx.index(strat, seil, **over), k=k)
+    return at_recall(rows, target, "approx_dco")
+
+
+def bench_ablation(dataset="sift1m"):
+    """Fig 13a: DCO at ~target recall for NaiveRA/SRAIR/RAIR x (SEIL on/off)."""
+    ctx = get_context(dataset, n_queries=500)
+    out = {}
+    for base, strat in (("NaiveRA", "naive"), ("SRAIR", "srair"),
+                        ("RAIR", "rair")):
+        for seil in (False, True):
+            rows = curve(ctx, ctx.index(strat, seil), k=10)
+            out[f"{base}{'+SEIL' if seil else ''}"] = {
+                "dco@0.9": at_recall(rows, 0.9, "approx_dco"),
+                "rows": rows,
+            }
+    try:
+        gain = 1 - (out["RAIR+SEIL"]["dco@0.9"] / out["RAIR"]["dco@0.9"])
+    except TypeError:
+        gain = float("nan")
+    emit("fig13a_ablation", 0.0, f"seil_dco_cut_on_RAIR={gain:.3%}")
+    save_json("fig13a_ablation", out)
+    return out
+
+
+def bench_memory(datasets=("sift1m", "msong", "gist")):
+    """Table 4 / Fig 13b: IVF-PQ module memory across solutions."""
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        row = {}
+        for name in ("IVFPQfs", "NaiveRA", "RAIR", "RAIRS"):
+            strat, seil = SOLUTIONS[name]
+            idx = ctx.index(strat, seil)
+            row[name] = idx.stats.logical_bytes
+        strat, seil = SOLUTIONS["NaiveRA"]
+        idx = ctx.index("naive", True)
+        row["NaiveRA+SEIL"] = idx.stats.logical_bytes
+        out[ds] = row
+        emit(f"table4_memory/{ds}", 0.0,
+             f"rairs/naive={row['RAIRS']/row['NaiveRA']:.3f} "
+             f"naive+seil/naive={row['NaiveRA+SEIL']/row['NaiveRA']:.3f}")
+    save_json("table4_memory", out)
+    return out
+
+
+def bench_multi_assign(dataset="sift1m"):
+    """Fig 14: aggr functions for 3-assignment; m in {1,2,3,4} (strict,
+    SEIL off per paper)."""
+    ctx = get_context(dataset, n_queries=300)
+    out = {}
+    for aggr in ("max", "min", "avg"):
+        rows = curve(ctx, ctx.index("srair", False, multi_m=3, aggr=aggr),
+                     k=10, nprobes=(2, 4, 8, 16, 32))
+        out[f"aggr_{aggr}"] = {"dco@0.9": at_recall(rows, 0.9, "approx_dco"),
+                               "rows": rows}
+    for m, name in ((1, "IVFPQfs"), (2, "SRAIR")):
+        strat, seil = SOLUTIONS[name]
+        rows = curve(ctx, ctx.index(strat, seil), k=10,
+                     nprobes=(2, 4, 8, 16, 32))
+        out[f"m{m}"] = {"dco@0.9": at_recall(rows, 0.9, "approx_dco"),
+                        "rows": rows}
+    for m in (3, 4):
+        rows = curve(ctx, ctx.index("srair", False, multi_m=m, aggr="max"),
+                     k=10, nprobes=(2, 4, 8, 16, 32))
+        out[f"m{m}"] = {"dco@0.9": at_recall(rows, 0.9, "approx_dco"),
+                        "rows": rows}
+    d = {k: v["dco@0.9"] for k, v in out.items()}
+    emit("fig14_multi_assign", 0.0,
+         " ".join(f"{k}={v:.0f}" if v else f"{k}=NA" for k, v in d.items()))
+    save_json("fig14_multi_assign", out)
+    return out
+
+
+def bench_lambda(dataset="sift1m"):
+    """Fig 15a: lambda sweep for RAIRS."""
+    ctx = get_context(dataset, n_queries=300)
+    out = {}
+    for lam in (0.0, 0.25, 0.5, 0.75, 1.0):
+        rows = curve(ctx, ctx.index("rair", True, lam=lam), k=10,
+                     nprobes=(2, 4, 8, 16, 32))
+        out[f"lam{lam}"] = {"dco@0.9": at_recall(rows, 0.9, "approx_dco"),
+                            "rows": rows}
+    d = {k: v["dco@0.9"] for k, v in out.items()}
+    emit("fig15a_lambda", 0.0,
+         " ".join(f"{k}={v:.0f}" if v else f"{k}=NA" for k, v in d.items()))
+    save_json("fig15a_lambda", out)
+    return out
+
+
+def bench_ncands(dataset="sift1m", lam=0.5):
+    """Fig 15b: CDF of the true AIR-argmin rank among distance-sorted lists."""
+    ctx = get_context(dataset)
+    x = ctx.x[:20000]
+    cid, cd2 = candidate_lists(x, ctx.centroids, ctx.nlist)
+    c = ctx.centroids[cid]
+    r = c - x[:, None, :]
+    loss = cd2 + lam * jnp.einsum("nd,ncd->nc", r[:, 0], r)
+    true_rank = np.asarray(jnp.argmin(loss, axis=1))
+    cdf = {f"rank<={t}": float((true_rank <= t).mean())
+           for t in (1, 2, 5, 10, 20, 50)}
+    emit("fig15b_ncands", 0.0, f"rank<=10={cdf['rank<=10']:.4f}")
+    save_json("fig15b_ncands", cdf)
+    return cdf
+
+
+def bench_block_size(dataset="sift1m"):
+    """Fig 16: block-size sweep — misc fraction grows, SEIL saving shrinks."""
+    from repro.core.dense import dense_search
+    ctx = get_context(dataset, n_queries=300)
+    out = {}
+    for blk in (16, 32, 64, 128):
+        idx = ctx.index("rair", True, block=blk)
+        misc_frac = idx.stats.n_misc_items / max(idx.stats.n_items_stored, 1)
+        res = dense_search(idx, ctx.q, k=10, nprobe=16)
+        out[f"blk{blk}"] = {
+            "misc_item_frac": misc_frac,
+            "large_cell_frac": vectors_in_large_cells(idx.assigns, blk),
+            "dco@nprobe16": dco_summary(res)["approx_dco"],
+        }
+    emit("fig16_block_size", 0.0,
+         " ".join(f"blk{b}_misc={out[f'blk{b}']['misc_item_frac']:.3f}"
+                  for b in (16, 32, 64, 128)))
+    save_json("fig16_block_size", out)
+    return out
+
+
+def bench_seil_soar(dataset="t2i"):
+    """Fig 17: SEIL applied to SOAR under inner product."""
+    ctx = get_context(dataset, n_queries=500)
+    out = {}
+    for seil in (False, True):
+        rows = curve(ctx, ctx.index("soar", seil), k=10,
+                     nprobes=(2, 4, 8, 16, 32))
+        out[f"SOAR{'+SEIL' if seil else ''}"] = rows
+    b = at_recall(out["SOAR"], 0.7, "approx_dco")
+    s = at_recall(out["SOAR+SEIL"], 0.7, "approx_dco")
+    emit("fig17_seil_soar", 0.0,
+         f"seil_dco_cut={1 - (s / b) if (b and s) else float('nan'):.3%}")
+    save_json("fig17_seil_soar", out)
+    return out
+
+
+def bench_match_table(datasets=("sift1m", "msong", "gist")):
+    """Table 3: %% of vectors with identical 2nd choice under SOARL2 vs AIR."""
+    out = {}
+    for ds in datasets:
+        ctx = get_context(ds)
+        x = ctx.x[:30000]
+        a_air = np.asarray(rair_assign(x, ctx.centroids, metric="air",
+                                       strict=True))
+        a_soar = np.asarray(rair_assign(x, ctx.centroids, metric="soar",
+                                        strict=True))
+        match = float((a_air == a_soar).all(axis=1).mean())
+        out[ds] = match
+        emit(f"table3_match/{ds}", 0.0, f"match={match:.4f}")
+    save_json("table3_match", out)
+    return out
+
+
+def bench_cells(dataset="sift1m"):
+    """Fig 5: cell-size skew after redundant assignment."""
+    ctx = get_context(dataset)
+    idx = ctx.index("rair", True)
+    sizes = cell_stats(idx.assigns)["cell_sizes"]
+    out = {
+        "n_cells": int(len(sizes)),
+        "frac_vectors_in_large_cells": vectors_in_large_cells(idx.assigns),
+        "max_cell": int(sizes.max()),
+        "p99_cell": float(np.percentile(sizes, 99)),
+    }
+    emit("fig5_cells", 0.0,
+         f"large_cell_frac={out['frac_vectors_in_large_cells']:.3f} "
+         f"max_cell={out['max_cell']}")
+    save_json("fig5_cells", out)
+    return out
+
+
+def bench_kernels():
+    """Kernel microbench: jnp oracle vs Pallas path on one workload.
+    (CPU interpret-mode timing is NOT TPU perf — roofline covers that.)"""
+    from repro.kernels.ops import pq_scan_paged
+    from repro.kernels.ref import pq_scan_paged_ref
+    key = jax.random.PRNGKey(0)
+    b, m, kk, tb, blk, s = 8, 64, 16, 512, 32, 64
+    k1, k2, k3 = jax.random.split(key, 3)
+    lut = jax.random.normal(k1, (b, m, kk), jnp.float32)
+    codes = jax.random.randint(k2, (tb, blk, m), 0, kk).astype(jnp.uint8)
+    idx = jax.random.randint(k3, (b, s), 0, tb, jnp.int32)
+    out = {}
+    for name, fn in (("jnp_ref", pq_scan_paged_ref),
+                     ("pallas_interpret", pq_scan_paged)):
+        fn(lut, codes, idx).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn(lut, codes, idx).block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        out[name] = us
+        emit(f"kernel_pq_scan/{name}", us,
+             f"items={b * s * blk} us_per_item={us / (b * s * blk):.3f}")
+    save_json("kernel_pq_scan", out)
+    return out

@@ -1,0 +1,49 @@
+"""RAIRS-kNN paged attention: the paper's index serving a long KV cache.
+
+Clusters the keys of a synthetic attention cache with k-means, assigns
+them redundantly with the AIR metric (RAIR), packs shared cells once
+(SEIL), then answers decode-step queries by probing top-nprobe lists —
+and shows the recall of true top-attention keys vs probe count.
+
+Run: PYTHONPATH=src python examples/long_context_retrieval.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.retrieval import (KnnAttnConfig, build_knn_cache,
+                                    rairs_attention_decode)
+
+key = jax.random.PRNGKey(0)
+b, s, kvh, hd, h = 1, 2048, 2, 32, 4
+
+# a cache with cluster structure (bursty topics along the sequence)
+topics = jax.random.normal(key, (16, kvh, hd))
+topic_of = (jnp.arange(s) // 128) % 16
+keys = topics[topic_of] + 0.3 * jax.random.normal(
+    jax.random.PRNGKey(1), (s, kvh, hd))
+keys = keys[None]
+vals = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd))
+q = (topics[5][None, None].repeat(h // kvh, 2).reshape(1, 1, h, hd)
+     + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (1, 1, h, hd)))
+
+# exact attention reference
+qg = np.asarray(q)[:, 0].reshape(b, kvh, h // kvh, hd)
+sc = np.einsum("bgrd,bsgd->bgrs", qg / np.sqrt(hd), np.asarray(keys))
+p = np.exp(sc - sc.max(-1, keepdims=True)); p /= p.sum(-1, keepdims=True)
+ref = np.einsum("bgrs,bsgd->bgrd", p, np.asarray(vals)).reshape(1, 1, h, hd)
+
+print(f"cache: {s} keys/head; exact attention mass is concentrated: "
+      f"top-128 keys hold {np.sort(p, -1)[..., -128:].sum(-1).mean():.0%}")
+
+for nprobe in (1, 2, 4, 8, 16):
+    kcfg = KnnAttnConfig(nlist=16, nprobe=nprobe, block=64,
+                         max_blocks_per_list=48, window=32)
+    cache = build_knn_cache(np.asarray(keys), np.asarray(vals), kcfg)
+    out = rairs_attention_decode(q, cache, jnp.array([s]), kcfg)
+    err = float(np.abs(np.asarray(out, np.float32) - ref).max()
+                / np.abs(ref).max())
+    print(f"nprobe={nprobe:2d}: attention output rel-err vs exact "
+          f"{err:8.2e}  (scans ~{nprobe}/{kcfg.nlist} of the cache)")
+print("RAIR assigns boundary keys to a second list, so low-nprobe probes "
+      "still cover queries far from their list centroid (paper Fig. 2).")

@@ -1,0 +1,37 @@
+"""Quickstart: build a RAIRS index, search it, and see why RAIR+SEIL win.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (IndexConfig, build_index, dco_summary, ground_truth,
+                        recall_at_k, vectors_in_large_cells)
+from repro.data import make_dataset
+
+# 1. a SIFT-like corpus (clustered, low intrinsic dimension)
+x, queries, spec = make_dataset("unit")
+gt = ground_truth(x, queries, k=10)
+
+# 2. the paper's index: RAIR (AIR metric) redundant assignment + SEIL lists
+index = build_index(jax.random.PRNGKey(0), x,
+                    IndexConfig(nlist=64, strategy="rair", seil=True))
+print(f"cells: {vectors_in_large_cells(index.assigns):.0%} of vectors live "
+      f"in shared cells >= 1 block (the skew SEIL exploits)")
+
+# 3. search; compare against the single-assignment baseline at equal nprobe
+baseline = build_index(jax.random.PRNGKey(0), x,
+                       IndexConfig(nlist=64, strategy="single"),
+                       centroids=index.centroids, codebook=index.codebook)
+for name, idx in [("IVFPQfs (single)", baseline), ("RAIRS", index)]:
+    res = idx.search(queries, k=10, nprobe=6)
+    rec = recall_at_k(np.asarray(res.ids), gt)
+    s = dco_summary(res)
+    print(f"{name:18s} nprobe=6: recall@10={rec:.3f} "
+          f"distance-computations/query={s['total_dco']:.0f}")
+
+# 4. the same search through the Pallas TPU kernel path (interpret on CPU)
+res_k = index.search(queries[:8], k=10, nprobe=6, use_kernel=True)
+res_j = index.search(queries[:8], k=10, nprobe=6, use_kernel=False)
+assert np.array_equal(np.asarray(res_k.ids), np.asarray(res_j.ids))
+print("pallas pq_scan kernel path == jnp path (8 queries checked)")

@@ -1,0 +1,81 @@
+"""End-to-end driver: train a ~100M-param qwen3-style model for a few
+hundred steps on synthetic data, with checkpoint/resume.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(defaults sized for the 1-core CPU container: ~35M params)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.dist.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.models.transformer import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.step import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        ARCHS["qwen3-8b"], name="qwen3-example",
+        n_layers=args.layers, d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        head_dim=32, d_ff=args.d_model * 3, vocab=4096,
+        flash_chunk=128, ce_chunk=64)
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))))
+    print(f"model: {cfg.name} {n_params / 1e6:.1f}M params")
+
+    tcfg = TrainConfig(accum=2, optim=AdamWConfig(lr=1e-3, warmup_steps=20,
+                                                  total_steps=args.steps))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    start = 0
+    if latest_step(args.ckpt):
+        r = restore_checkpoint(args.ckpt, {"params": params, "opt": opt})
+        params, opt = r["params"], r["opt"]
+        start = int(opt.step)
+        print(f"resumed at step {start}")
+
+    # synthetic data with learnable structure (Zipf bigram chains)
+    def batch_at(i):
+        key = jax.random.PRNGKey(1000 + i)
+        k1, k2 = jax.random.split(key)
+        starts = jax.random.categorical(
+            k1, np.log(1.0 / np.arange(1, cfg.vocab + 1) ** 1.3)[None, :]
+            .repeat(args.batch, 0), shape=(args.batch,))
+        ramp = (starts[:, None] + 7 * jax.numpy.arange(args.seq)[None, :]) \
+            % cfg.vocab
+        return {"tokens": ramp.astype("int32"),
+                "labels": jax.numpy.roll(ramp, -1, axis=1).astype("int32")}
+
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        params, opt, m = step(params, opt, batch_at(i))
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(m['loss']):7.4f} "
+                  f"lr {float(m['lr']):.2e}", flush=True)
+        if (i + 1) % 50 == 0:
+            save_checkpoint(args.ckpt, i + 1, {"params": params, "opt": opt})
+    dt = time.perf_counter() - t0
+    tok = (args.steps - start) * args.batch * args.seq
+    print(f"trained {args.steps - start} steps, {tok / dt:.0f} tokens/s; "
+          f"final loss {float(m['loss']):.4f} (predictable chains => "
+          f"loss should fall well below ln(vocab)={np.log(cfg.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""RAIRS core: redundant assignment (RAIR/AIR) + shared-cell lists (SEIL).
+
+The paper's primary contribution as a composable JAX module: k-means IVF
+training, product quantization, AIR-metric assignment, SEIL layout, and
+the static-shape deduplicating searcher with exact refinement.
+"""
+from .assign import (rair_assign, rair_assign_multi, single_assign,  # noqa
+                     candidate_lists, air_skip_fraction)
+from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
+from .kmeans import kmeans_fit, kmeans_step_sharded, pairwise_sq_l2  # noqa
+from .metrics import ground_truth, recall_at_k, per_query_recall, dco_summary  # noqa
+from .pq import PQCodebook, pq_train, pq_encode, pq_lut, pq_adc, pq_decode  # noqa
+from .search import seil_search, SearchResult  # noqa
+from .seil import (SeilArrays, SeilStats, build_seil, cell_stats,  # noqa
+                   vectors_in_large_cells, build_id_map, delete_ids)

@@ -1,0 +1,167 @@
+"""Redundant-assignment strategies: NaiveRA, SOAR(L2), AIR / RAIR / SRAIR.
+
+The AIR metric (paper Theorem 4.1):   loss(c') = ||r'||^2 + lambda * r^T r'
+with r = c1 - x (primary residual), r' = c' - x.  lambda=0 degenerates to
+NaiveRA; SOAR uses ||r'||^2 + lambda*(r^T r' / ||r||)^2 (orthogonal
+preference, inner-product-space original).
+
+m-assignment (paper 4.3):  loss_m(c') = ||r'||^2 + lambda * aggr_i r_i^T r'
+over previously selected residuals r_i, aggr in {max, min, avg}.
+
+All functions are jittable and chunk over n; `rair_assign` is the
+public entry used by the index builder.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kmeans import pairwise_sq_l2
+
+METRICS = ("naive", "soar", "air")
+AGGRS = ("max", "min", "avg")
+
+
+def candidate_lists(x: jnp.ndarray, centroids: jnp.ndarray, n_cands: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-n_cands nearest lists per vector (ascending distance).
+
+    Returns (cand_ids (n, C) int32, cand_d2 (n, C) f32).
+    This is the FindNearestLists of Alg. 3 (exhaustive variant; the
+    sublinear-ANN variant is an implementation choice the paper allows).
+    """
+    d2 = pairwise_sq_l2(x, centroids)
+    neg, idx = jax.lax.top_k(-d2, n_cands)
+    return idx.astype(jnp.int32), -neg
+
+
+def _second_loss(x, centroids, cand_ids, cand_d2, metric: str, lam: float):
+    """AIR/SOAR/naive loss of every candidate as the 2nd list. (n, C)."""
+    c = centroids[cand_ids]                       # (n, C, D)
+    r = c - x[:, None, :]                         # residuals (n, C, D)
+    r0 = r[:, 0, :]                               # primary residual (n, D)
+    d2 = cand_d2                                  # ||r'||^2
+    if metric == "naive":
+        return d2
+    dot = jnp.einsum("nd,ncd->nc", r0, r)         # r^T r'
+    if metric == "air":
+        return d2 + lam * dot
+    if metric == "soar":
+        nrm2 = jnp.maximum(jnp.sum(r0 * r0, axis=-1, keepdims=True), 1e-12)
+        return d2 + lam * (dot * dot) / nrm2
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "lam", "strict"))
+def _assign2_chunk(x, centroids, cand_ids, cand_d2, metric, lam, strict):
+    loss = _second_loss(x, centroids, cand_ids, cand_d2, metric, lam)
+    if strict:
+        # SRAIR: exclude the primary list from the 2nd-choice argmin.
+        loss = loss.at[:, 0].set(jnp.inf)
+    sec = jnp.take_along_axis(
+        cand_ids, jnp.argmin(loss, axis=-1)[:, None], axis=-1)[:, 0]
+    first = cand_ids[:, 0]
+    lo = jnp.minimum(first, sec)
+    hi = jnp.maximum(first, sec)
+    return jnp.stack([lo, hi], axis=-1)           # (n, 2), lo==hi => single
+
+
+def _chunked(fn, x, chunk, *args):
+    n = x.shape[0]
+    outs = []
+    for s in range(0, n, chunk):
+        outs.append(fn(x[s:s + chunk], *args))
+    return jnp.concatenate(outs, axis=0)
+
+
+def rair_assign(
+    x: jnp.ndarray,
+    centroids: jnp.ndarray,
+    *,
+    metric: str = "air",
+    lam: float = 0.5,
+    n_cands: int = 10,
+    strict: bool = False,
+    chunk: int = 8192,
+) -> jnp.ndarray:
+    """Assign each vector to (list1, list2), list1<=list2 (Alg. 3).
+
+    metric='air' strict=False  -> RAIR (paper default)
+    metric='air' strict=True   -> SRAIR
+    metric='naive' strict=True -> NaiveRA   (2nd-nearest list)
+    metric='soar'  strict=True -> SOARL2
+    Single assignment baseline: use `single_assign`.
+    """
+    def fn(xb):
+        cids, cd2 = candidate_lists(xb, centroids, n_cands)
+        return _assign2_chunk(xb, centroids, cids, cd2, metric, lam, strict)
+    return _chunked(fn, x, chunk)
+
+
+def single_assign(x: jnp.ndarray, centroids: jnp.ndarray, chunk: int = 8192
+                  ) -> jnp.ndarray:
+    """Baseline: (n, 2) with both entries = nearest list (cell_{i,i})."""
+    def fn(xb):
+        cids, _ = candidate_lists(xb, centroids, 1)
+        return jnp.concatenate([cids, cids], axis=-1)
+    return _chunked(fn, x, chunk)
+
+
+# ----------------------------------------------------------------------------
+# m-assignment (paper §4.3): greedy selection with aggregated dot penalty
+# ----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("m", "aggr", "lam"))
+def _assign_m_chunk(x, centroids, cand_ids, cand_d2, m, aggr, lam):
+    n, c = cand_ids.shape
+    cand_c = centroids[cand_ids]                  # (n, C, D)
+    r = cand_c - x[:, None, :]                    # (n, C, D)
+    dots = jnp.einsum("ncd,nkd->nck", r, r)       # r_i^T r_j  (n, C, C)
+    d2 = cand_d2
+
+    chosen = jnp.zeros((n, m), jnp.int32)         # indices into candidates
+    chosen = chosen.at[:, 0].set(0)               # primary = nearest
+    taken = jnp.zeros((n, c), bool).at[:, 0].set(True)
+
+    def pick(j, state):
+        chosen, taken = state
+        # aggr over previously chosen residual dots with each candidate
+        sel = jax.vmap(lambda d, ch: d[ch])(dots, chosen)      # (n, m, C)
+        prior = jnp.arange(m) < j                              # mask rows >= j
+        if aggr == "max":
+            agg = jnp.max(jnp.where(prior[None, :, None], sel, -jnp.inf), axis=1)
+        elif aggr == "min":
+            agg = jnp.min(jnp.where(prior[None, :, None], sel, jnp.inf), axis=1)
+        else:  # avg
+            agg = (jnp.sum(jnp.where(prior[None, :, None], sel, 0.0), axis=1)
+                   / jnp.maximum(jnp.sum(prior), 1))
+        loss = d2 + lam * agg
+        loss = jnp.where(taken, jnp.inf, loss)                 # strict: no repeats
+        nxt = jnp.argmin(loss, axis=-1).astype(jnp.int32)
+        chosen = chosen.at[:, j].set(nxt)
+        taken = jax.vmap(lambda t, i: t.at[i].set(True))(taken, nxt)
+        return chosen, taken
+
+    chosen, _ = jax.lax.fori_loop(1, m, pick, (chosen, taken))
+    lists = jnp.take_along_axis(cand_ids, chosen, axis=-1)     # (n, m)
+    return jnp.sort(lists, axis=-1)
+
+
+def rair_assign_multi(x, centroids, *, m: int = 3, aggr: str = "max",
+                      lam: float = 0.5, n_cands: int = 10, chunk: int = 8192):
+    """Strict m-assignment (paper Fig. 14). Returns (n, m) sorted list ids."""
+    assert aggr in AGGRS
+    def fn(xb):
+        cids, cd2 = candidate_lists(xb, centroids, n_cands)
+        return _assign_m_chunk(xb, centroids, cids, cd2, m, aggr, lam)
+    return _chunked(fn, x, chunk)
+
+
+def air_skip_fraction(x, centroids, lam=0.5, n_cands=10, chunk=8192) -> float:
+    """Fraction of vectors for which RAIR keeps single assignment
+    (loss_min attained by the primary list: ||r'||^2+lam r^T r' >= (1+lam)||r||^2)."""
+    a = rair_assign(x, centroids, metric="air", lam=lam, n_cands=n_cands,
+                    strict=False, chunk=chunk)
+    return float(jnp.mean(a[:, 0] == a[:, 1]))

@@ -1,0 +1,169 @@
+"""RairsIndex — the public index object tying RAIR + PQ + SEIL together.
+
+`build_index` is paper Alg. 1 (AddVectors) for a bulk batch:
+RairAssign -> PQEncoding -> SeilInsert; `RairsIndex.search` is Alg. 2.
+
+Strategy presets (paper §6.1 "Solutions to Compare"):
+  single  -> IVFPQfs   (baseline single assignment)
+  naive   -> NaiveRA   (2nd-nearest list, strict)
+  soar    -> SOARL2    (orthogonal residual, strict)
+  rair    -> RAIR      (AIR, primary may win -> single)
+  srair   -> SRAIR     (AIR, strictly two lists)
+`seil=True` adds the shared-cell layout (RAIRS = rair+seil, etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .assign import rair_assign, rair_assign_multi, single_assign
+from .kmeans import kmeans_fit
+from .pq import PQCodebook, pq_encode, pq_train
+from .search import SearchResult, seil_search
+from .seil import SeilArrays, SeilStats, build_seil
+
+STRATEGIES = ("single", "naive", "soar", "rair", "srair")
+
+
+@dataclasses.dataclass
+class IndexConfig:
+    nlist: int = 256
+    m_pq: Optional[int] = None        # default D // 2 (paper: dsub = 2)
+    nbits: int = 4
+    block: int = 32
+    strategy: str = "rair"
+    seil: bool = True
+    lam: float = 0.5
+    n_cands: int = 10
+    metric: str = "l2"
+    multi_m: int = 2                  # >2 enables m-assignment (strict, aggr)
+    aggr: str = "max"
+    kmeans_iters: int = 15
+    pq_iters: int = 12
+    train_sample: int = 131072
+
+
+@dataclasses.dataclass
+class RairsIndex:
+    config: IndexConfig
+    centroids: jnp.ndarray            # (nlist, D)
+    codebook: PQCodebook
+    arrays: SeilArrays
+    vectors: jnp.ndarray              # (n, D) refine store
+    stats: SeilStats
+    assigns: np.ndarray               # (n, m) — kept for analysis benches
+    build_seconds: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def needs_result_dedup(self) -> bool:
+        # duplicated layouts (no SEIL) can surface the same id twice
+        return (not self.config.seil) and self.config.strategy != "single"
+
+    @property
+    def result_oversample(self) -> int:
+        # max copies of one id = assignment multiplicity
+        return max(int(self.assigns.shape[1]), 2)
+
+    def default_max_scan(self, nprobe: int, slack: float = 1.3) -> int:
+        avg_blocks = self.stats.n_blocks / self.config.nlist
+        mo, mr, mm = (self.arrays.owned.shape[1], self.arrays.refs.shape[1],
+                      self.arrays.misc.shape[1])
+        cap = nprobe * (mo + mr + mm)
+        want = int(nprobe * max(avg_blocks * slack, 4.0)) + 8
+        return min(cap, max(want, 16))
+
+    def search(self, queries: jnp.ndarray, k: int, nprobe: int,
+               k_factor: int = 10, max_scan: Optional[int] = None,
+               use_kernel: bool = False) -> SearchResult:
+        bigk = k * k_factor
+        if max_scan is None:
+            max_scan = self.default_max_scan(nprobe)
+        return seil_search(
+            self.arrays, self.centroids, self.codebook, self.vectors,
+            queries, nprobe=nprobe, bigk=bigk, k=k, max_scan=max_scan,
+            metric=self.config.metric, dedup_results=self.needs_result_dedup,
+            use_kernel=use_kernel, oversample=self.result_oversample)
+
+
+def compute_assignments(x: jnp.ndarray, centroids: jnp.ndarray,
+                        cfg: IndexConfig) -> np.ndarray:
+    if cfg.multi_m > 2:
+        return np.asarray(rair_assign_multi(
+            x, centroids, m=cfg.multi_m, aggr=cfg.aggr, lam=cfg.lam,
+            n_cands=cfg.n_cands))
+    if cfg.strategy == "single":
+        return np.asarray(single_assign(x, centroids))
+    strict = cfg.strategy in ("naive", "soar", "srair")
+    metric = {"naive": "naive", "soar": "soar",
+              "rair": "air", "srair": "air"}[cfg.strategy]
+    return np.asarray(rair_assign(
+        x, centroids, metric=metric, lam=cfg.lam, n_cands=cfg.n_cands,
+        strict=strict))
+
+
+def build_index(key: jax.Array, x: jnp.ndarray, cfg: IndexConfig,
+                centroids: Optional[jnp.ndarray] = None,
+                codebook: Optional[PQCodebook] = None) -> RairsIndex:
+    """Train (k-means + PQ) and add all vectors (Alg. 1)."""
+    assert cfg.strategy in STRATEGIES
+    n, d = x.shape
+    m_pq = cfg.m_pq or d // 2
+    k1, k2 = jax.random.split(key)
+    times = {}
+    t0 = time.perf_counter()
+    if centroids is None:
+        centroids = kmeans_fit(k1, x, cfg.nlist, iters=cfg.kmeans_iters,
+                               sample=cfg.train_sample)
+    if codebook is None:
+        codebook = pq_train(k2, x, m_pq, nbits=cfg.nbits, iters=cfg.pq_iters,
+                            sample=cfg.train_sample)
+    jax.block_until_ready(centroids.block_until_ready() if hasattr(centroids, "block_until_ready") else centroids)
+    times["train"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    assigns = compute_assignments(x, centroids, cfg)
+    times["assign"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    codes = np.asarray(pq_encode(codebook, x))
+    times["encode"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    shared = cfg.seil and cfg.multi_m == 2
+    arrays, stats = build_seil(
+        assigns, codes, np.arange(n, dtype=np.int32), cfg.nlist,
+        block=cfg.block, shared=shared, code_bits=cfg.nbits)
+    times["layout"] = time.perf_counter() - t0
+
+    return RairsIndex(config=cfg, centroids=centroids, codebook=codebook,
+                      arrays=arrays, vectors=jnp.asarray(x), stats=stats,
+                      assigns=assigns, build_seconds=times)
+
+
+def insert_batch(index: RairsIndex, x_new: jnp.ndarray) -> RairsIndex:
+    """Append a batch (paper Fig. 12): re-assign new vectors, rebuild layout
+    from pooled items (centroids/codebooks frozen, as in Faiss add())."""
+    cfg = index.config
+    n_old = index.vectors.shape[0]
+    assigns_new = compute_assignments(x_new, index.centroids, cfg)
+    codes_new = np.asarray(pq_encode(index.codebook, x_new))
+    all_assigns = np.concatenate([index.assigns, assigns_new], axis=0)
+    codes_old = None
+    # re-encode old vectors is wasteful; recover codes from stored blocks is
+    # lossy for deleted items — keep it simple and re-encode (codebook frozen).
+    codes_old = np.asarray(pq_encode(index.codebook, index.vectors))
+    all_codes = np.concatenate([codes_old, codes_new], axis=0)
+    n_total = all_assigns.shape[0]
+    shared = cfg.seil and cfg.multi_m == 2
+    arrays, stats = build_seil(
+        all_assigns, all_codes, np.arange(n_total, dtype=np.int32),
+        cfg.nlist, block=cfg.block, shared=shared, code_bits=cfg.nbits)
+    return dataclasses.replace(
+        index, arrays=arrays, stats=stats, assigns=all_assigns,
+        vectors=jnp.concatenate([index.vectors, jnp.asarray(x_new)], axis=0))

@@ -1,0 +1,101 @@
+"""Product quantization (PQ) — training, encoding, and ADC lookup tables.
+
+Paper baseline: IVF-PQ Fast Scan uses 4-bit codes (ksub=16) with
+M = D/2 subquantizers (dsub = 2 dims per group).  LUTs are built per
+query (by_residual=False, matching the paper's per-query LUT description
+and IndexIVFPQFastScan's default), so estimated distance of item i is
+    d(q, x_i) ~= sum_m LUT[m, code[i, m]].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kmeans import kmeans_fit, pairwise_sq_l2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PQCodebook:
+    """codebooks: (M, ksub, dsub) float32."""
+    codebooks: jnp.ndarray
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def ksub(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+
+def pq_train(key: jax.Array, x: jnp.ndarray, m: int, nbits: int = 4,
+             iters: int = 15, sample: int = 65536) -> PQCodebook:
+    """Train per-subspace k-means codebooks. x: (n, D), D % m == 0."""
+    n, d = x.shape
+    assert d % m == 0, f"D={d} not divisible by M={m}"
+    dsub, ksub = d // m, 2 ** nbits
+    xs = x.reshape(n, m, dsub)
+    keys = jax.random.split(key, m)
+    books = []
+    for j in range(m):
+        books.append(kmeans_fit(keys[j], xs[:, j, :], ksub, iters=iters, sample=sample))
+    return PQCodebook(jnp.stack(books))
+
+
+@jax.jit
+def pq_encode(cb: PQCodebook, x: jnp.ndarray) -> jnp.ndarray:
+    """Encode (n, D) -> (n, M) uint8 codes (values < ksub)."""
+    n, d = x.shape
+    m, ksub, dsub = cb.codebooks.shape
+    xs = x.reshape(n, m, dsub)
+
+    def enc_sub(xsub, book):  # (n, dsub), (ksub, dsub)
+        return jnp.argmin(pairwise_sq_l2(xsub, book), axis=-1)
+
+    codes = jax.vmap(enc_sub, in_axes=(1, 0), out_axes=1)(xs, cb.codebooks)
+    return codes.astype(jnp.uint8)
+
+
+@jax.jit
+def pq_lut(cb: PQCodebook, q: jnp.ndarray) -> jnp.ndarray:
+    """Per-query ADC tables.  q: (B, D) -> (B, M, ksub) squared-L2 partials."""
+    b, d = q.shape
+    m, ksub, dsub = cb.codebooks.shape
+    qs = q.reshape(b, m, dsub)
+    # (B, M, ksub): ||q_sub - c||^2
+    diff = qs[:, :, None, :] - cb.codebooks[None, :, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pq_lut_ip(cb: PQCodebook, q: jnp.ndarray) -> jnp.ndarray:
+    """Inner-product ADC tables (for the SOAR/T2I experiments): -<q_sub, c>."""
+    b, d = q.shape
+    m, ksub, dsub = cb.codebooks.shape
+    qs = q.reshape(b, m, dsub)
+    return -jnp.einsum("bmd,mkd->bmk", qs, cb.codebooks)
+
+
+@jax.jit
+def pq_adc(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Estimate distances. lut: (M, ksub) single query; codes: (..., M)."""
+    m = lut.shape[0]
+    gathered = jnp.take_along_axis(
+        lut[None, :, :].repeat(codes.shape[0], axis=0) if codes.ndim == 2 else lut,
+        codes.astype(jnp.int32)[..., None], axis=-1)
+    return jnp.sum(gathered[..., 0], axis=-1)
+
+
+def pq_decode(cb: PQCodebook, codes: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct vectors from codes: (n, M) -> (n, D)."""
+    m, ksub, dsub = cb.codebooks.shape
+    rec = jnp.take_along_axis(
+        cb.codebooks[None], codes.astype(jnp.int32)[:, :, None, None], axis=2)
+    return rec[:, :, 0, :].reshape(codes.shape[0], m * dsub)

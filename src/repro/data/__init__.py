@@ -1,0 +1,1 @@
+from .synthetic import make_dataset, DATASETS  # noqa: F401

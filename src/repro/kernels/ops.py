@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel
+body executes in Python for correctness validation; on TPU backends the
+same code lowers to Mosaic.  ``M`` (PQ subspaces) is zero-padded to the
+uint8 lane tile so production shapes are alignment-clean; padded codes
+are 0 and padded LUT rows are 0, so they contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .pq_scan import pq_scan_paged_kernel
+
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_m(lut: jnp.ndarray, block_codes: jnp.ndarray, align: int):
+    m = lut.shape[1]
+    pad = (-m) % align
+    if pad:
+        lut = jnp.pad(lut, ((0, 0), (0, pad), (0, 0)))
+        block_codes = jnp.pad(block_codes, ((0, 0), (0, 0), (0, pad)))
+    return lut, block_codes
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pq_scan_paged(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                  block_idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-query paged ADC scan.  lut (B, M, K) f32, block_codes
+    (TB, BLK, M) uint8, block_idx (B, S) int32 (>= 0) -> (B, S, BLK) f32."""
+    on_tpu = _on_tpu()
+    if on_tpu:
+        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    return pq_scan_paged_kernel(lut, block_codes, block_idx.astype(jnp.int32),
+                                query_tile=1, interpret=not on_tpu)
+
+
+def pq_scan_grouped(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                    shared_idx: jnp.ndarray, query_tile: int = 8
+                    ) -> jnp.ndarray:
+    """List-major batch mode (paper §5.3 cache optimization): all B queries
+    score the SAME scan list.  lut (B, M, K), shared_idx (S,) -> (B, S, BLK).
+    The code tile for each position stays resident in VMEM across the
+    query-tile grid steps."""
+    b = lut.shape[0]
+    on_tpu = _on_tpu()
+    if on_tpu:
+        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    idx = jnp.broadcast_to(shared_idx[None, :], (b, shared_idx.shape[0]))
+    return pq_scan_paged_kernel(lut, block_codes, idx.astype(jnp.int32),
+                                query_tile=query_tile, interpret=not on_tpu)

@@ -1,0 +1,97 @@
+"""Paged PQ fast-scan Pallas TPU kernel — the DCO hot spot of the paper.
+
+CPU PQ Fast Scan keeps 16-entry LUTs in SIMD registers and uses the
+AVX2 ``pshufb`` 16-way shuffle to score 32 packed items at once.  TPUs
+have no shuffle unit, so we adapt the insight (block-wise LUT scoring
+with no per-item scalar work) to the MXU:
+
+  * the 4-bit code of item i, subspace m selects ``lut[m, code]``; we
+    materialize the selection as a one-hot tile and contract
+    ``(BLK, M*K) @ (M*K, 1)`` on the MXU — one systolic pass scores a
+    whole block (the TPU idiom for small-table gathers);
+  * SEIL's reference-entry indirection becomes *paging*: the per-query
+    deduplicated block-id list is scalar-prefetched
+    (``PrefetchScalarGridSpec``) and drives the BlockSpec ``index_map``,
+    so the HBM->VMEM DMA fetches each shared cell block exactly once —
+    skipping a reference entry never issues its loads, the DMA-level
+    analogue of Alg. 5's ``listVisited`` probe;
+  * grid order is (query-block, scan-position): consecutive grid steps
+    for the *same* scan position across the query tile reuse the code
+    tile already resident in VMEM — the TPU analogue of the paper's
+    "group tasks by list" cache optimization (§5.3).
+
+Production tiling notes (TPU v5e): native block size 128 (lane width)
+instead of the paper's 32 — ``block`` stays a config knob and the
+paper's Fig. 16 block-size study covers the sweep.  uint8 code tiles
+want (32, 128) alignment, so M is zero-padded to a multiple of 128 by
+``ops.pq_scan_paged`` (padded codes select lut[m_pad, 0] == 0).
+Validated against ``ref.py`` in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, lut_ref, codes_ref, out_ref):
+    """One grid step: score one code block for QT queries.
+
+    lut_ref:   (QT, M, K) f32 in VMEM
+    codes_ref: (BLK, M) uint8 in VMEM (the paged block)
+    out_ref:   (QT, 1, BLK) f32
+    """
+    qt, m, k = lut_ref.shape
+    blk = codes_ref.shape[1]
+    codes = codes_ref[0].astype(jnp.int32)                     # (BLK, M)
+    # one-hot over the K table entries; flatten (M, K) -> MK for the MXU
+    sel = codes[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+    oh = sel.astype(jnp.float32).reshape(blk, m * k)           # (BLK, MK)
+    lut = lut_ref[...].reshape(qt, m * k)                      # (QT, MK)
+    # (QT, MK) @ (MK, BLK) on the MXU: every query scores the block at once
+    d = jax.lax.dot_general(lut, oh, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    out_ref[...] = d[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("query_tile", "interpret"))
+def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                         block_idx: jnp.ndarray, *, query_tile: int = 8,
+                         interpret: bool = False) -> jnp.ndarray:
+    """lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, block_idx (B, S)
+    -> (B, S, BLK) f32.  B % query_tile == 0; block_idx entries must be
+    valid (callers clamp padding to 0 and mask downstream)."""
+    b, m, k = lut.shape
+    s = block_idx.shape[1]
+    tb, blk, m2 = block_codes.shape
+    assert m2 == m, (m2, m)
+    assert b % query_tile == 0, (b, query_tile)
+    qb = b // query_tile
+
+    grid = (qb, s)
+    kernel = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((query_tile, m, k), lambda qi, si, idx: (qi, 0, 0)),
+                pl.BlockSpec((1, blk, m),
+                             lambda qi, si, idx: (idx[qi, si], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((query_tile, 1, blk),
+                                   lambda qi, si, idx: (qi, si, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, s, blk), jnp.float32),
+        interpret=interpret,
+    )
+
+    # Paging is per (query-tile, position): with query_tile == 1 every query
+    # pages its own scan list; with query_tile > 1 the caller guarantees the
+    # tile shares one list (the paper's §5.3 list-major batch mode — see
+    # ops.pq_scan_grouped).
+    idx_tiled = block_idx.reshape(qb, query_tile, s)[:, 0, :]
+    return kernel(idx_tiled, lut, block_codes)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pq_scan_paged_ref(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                      block_idx: jnp.ndarray) -> jnp.ndarray:
+    """ADC distances over paged code blocks.
+
+    lut:         (B, M, K) f32 per-query subspace tables
+    block_codes: (TB, BLK, M) uint8 codes, values < K
+    block_idx:   (B, S) int32 physical block ids (callers pre-clamp to >=0)
+    returns      (B, S, BLK) f32:  out[b,s,i] = sum_m lut[b, m, codes[i,m]]
+    """
+    codes = block_codes[block_idx]                       # (B, S, BLK, M)
+    g = jnp.take_along_axis(
+        lut[:, None, None, :, :],                        # (B,1,1,M,K)
+        codes.astype(jnp.int32)[..., None], axis=-1)     # (B,S,BLK,M,1)
+    return jnp.sum(g[..., 0], axis=-1)
+
+
+def onehot_lut_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Single-tile oracle: lut (M, K), codes (N, M) -> (N,) distances,
+    written the way the TPU kernel computes it (one-hot contraction)."""
+    m, k = lut.shape
+    oh = (codes[:, :, None] == jnp.arange(k)[None, None, :]).astype(lut.dtype)
+    return (oh.reshape(codes.shape[0], m * k) @ lut.reshape(m * k))

@@ -1,0 +1,91 @@
+"""Roofline cost pass: exact global HLO FLOPs/bytes per cell.
+
+XLA's cost analysis counts a ``while`` body once regardless of trip
+count, so the production (scanned) lowering under-reports FLOPs by
+~n_layers x accum.  This pass re-lowers each cell with every scan fully
+unrolled on a single *abstract* device (no mesh, no allocation) and uses
+``lowered.cost_analysis()`` — exact global FLOPs of the whole step
+(validated against closed forms in tests/test_dryrun.py).  Division by
+chip count happens in the roofline report.
+
+Run: ``PYTHONPATH=src python -m repro.launch.costpass --all``
+(safe to run in the normal 1-device process: no XLA_FLAGS needed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES
+from repro.models.runtime_flags import unrolled
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "launch_results", "cost")
+
+
+def run_cost(arch: str, shape: str, force: bool = False):
+    from repro.launch.shapes import plan_cell, skip_reason
+    cell_id = f"{arch}__{shape}"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    rec = {"cell": cell_id, "arch": arch, "shape": shape}
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+    else:
+        t0 = time.perf_counter()
+        try:
+            # mesh=None: plan with a host mesh purely for spec construction;
+            # lowering happens UNSHARDED (global shapes, abstract).
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+            plan = plan_cell(arch, shape, mesh)
+            with unrolled():
+                lowered = jax.jit(plan.step_fn).lower(*plan.args)
+                ca = lowered.cost_analysis()
+            rec.update(status="ok",
+                       flops=float(ca.get("flops", -1)),
+                       bytes_accessed=float(ca.get("bytes accessed", -1)),
+                       transcendentals=float(ca.get("transcendentals", -1)),
+                       lower_s=round(time.perf_counter() - t0, 1))
+        except Exception:
+            rec.update(status="failed",
+                       error=traceback.format_exc()[-3000:],
+                       seconds=round(time.perf_counter() - t0, 1))
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    nf = 0
+    for a in archs:
+        for s in shapes:
+            rec = run_cost(a, s, force=args.force)
+            nf += rec.get("status") == "failed"
+            print(f"[{rec['cell']}] {rec.get('status')} "
+                  f"flops={rec.get('flops', '-'):{'.3e' if isinstance(rec.get('flops'), float) else ''}} "
+                  f"t={rec.get('lower_s', '-')}s", flush=True)
+    if nf:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analyses.
+
+The two lines above MUST precede any jax import (jax locks the device
+count at first init) — this module is the only place the 512 placeholder
+host devices exist; tests and benches see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --multi-pod
+Results cache to launch_results/dryrun/<cell>.json; --force re-runs.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS                       # noqa: E402
+from repro.configs.base import SHAPES                 # noqa: E402
+from repro.dist.sharding import axis_rules            # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.launch.shapes import plan_cell, skip_reason  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "launch_results", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=?\s*(\w+)\[([0-9,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum operand bytes of collective ops in the (post-SPMD) HLO."""
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8,
+                   "u16": 2, "s16": 2}
+    per_kind = {}
+    # lines look like:  %ag = f32[16,128]{...} all-gather(...)
+    line_re = re.compile(
+        r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)")
+    for m in line_re.finditer(hlo_text):
+        dt, dims, kind = m.groups()
+        nbytes = dtype_bytes.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    return per_kind
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, force: bool = False):
+    cell_id = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec = {"cell": cell_id, "status": "skipped", "reason": reason}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.perf_counter()
+    rec = {"cell": cell_id, "arch": arch, "shape": shape,
+           "multi_pod": multi_pod}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh, axis_rules(mesh):
+            plan = plan_cell(arch, shape, mesh)
+            jitted = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                             out_shardings=plan.out_shardings)
+            lowered = jitted.lower(*plan.args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        rec.update(status="ok", mode=plan.mode, note=plan.note,
+                   lower_s=round(t_lower, 1), compile_s=round(t_compile, 1))
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        except Exception as e:  # CPU backend may lack pieces
+            rec["memory_analysis_error"] = str(e)
+        try:
+            ca = compiled.cost_analysis()
+            rec["flops"] = float(ca.get("flops", -1))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+            rec["transcendentals"] = float(ca.get("transcendentals", -1))
+        except Exception as e:
+            rec["cost_analysis_error"] = str(e)
+        try:
+            hlo = compiled.as_text()
+            rec["collective_bytes"] = parse_collective_bytes(hlo)
+            rec["hlo_bytes"] = len(hlo)
+        except Exception as e:
+            rec["collective_parse_error"] = str(e)
+    except Exception:
+        rec.update(status="failed", error=traceback.format_exc()[-4000:],
+                   seconds=round(time.perf_counter() - t0, 1))
+
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_rairs_cell(multi_pod: bool, force: bool = False):
+    """The paper's own workload at SIFT1B scale: the distributed RAIRS
+    serve step (shard_map: local SEIL scan + all_gather merge + owner
+    refine) lowered+compiled on the production mesh."""
+    import jax.numpy as jnp
+    from repro.configs.rairs import CONFIG as R
+    from repro.core.distributed import make_distributed_serve_step
+
+    cell_id = f"rairs-sift1b__serve__{'pod2' if multi_pod else 'pod1'}"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    rec = {"cell": cell_id, "arch": "rairs-sift1b", "shape": "serve",
+           "multi_pod": multi_pod}
+    t0 = time.perf_counter()
+    try:
+        from jax.sharding import PartitionSpec as P
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # the index shards over EVERY mesh axis (flat block-range split)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        nd = 512 if multi_pod else 256
+        blk, m = R.block, R.m_pq
+        tb = ((int(R.n_vectors * 1.15) // blk) // nd + 1) * nd
+        maxo, maxr, maxm = 560, 560, 64
+        bq = 256   # serving batch sized to HBM (temp ~ bq x budget x blk x M)
+        S = jax.ShapeDtypeStruct
+        serve = make_distributed_serve_step(
+            nlist=R.nlist, nprobe=R.nprobe, bigk=R.k * R.k_factor, k=R.k,
+            max_scan_local=256, axes=axes)
+        sh, rep = P(axes), P()
+        fn = jax.shard_map(
+            serve, mesh=mesh,
+            in_specs=(sh, sh, sh, rep, rep, rep, rep, rep, rep, rep, sh,
+                      sh, sh, rep),
+            out_specs=__import__("repro.core.distributed",
+                                 fromlist=["DistSearchResult"]
+                                 ).DistSearchResult(
+                ids=rep, dists=rep, local_dco=rep),
+            check_vma=False)
+        args = (S((tb, blk, m), jnp.uint8), S((tb, blk), jnp.int32),
+                S((tb, blk), jnp.int32), S((R.nlist, maxo), jnp.int32),
+                S((R.nlist, maxo), jnp.int32),
+                S((R.nlist, maxr), jnp.int32), S((R.nlist, maxr), jnp.int32),
+                S((R.nlist, maxm), jnp.int32), S((R.nlist, R.d), jnp.float32),
+                S((m, 16, R.d // m), jnp.float32),
+                S((R.n_vectors, R.d), jnp.bfloat16), S((nd,), jnp.int32),
+                S((nd,), jnp.int32), S((bq, R.d), jnp.float32))
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+        rec.update(status="ok", mode="rairs_serve",
+                   lower_s=round(t_lower, 1),
+                   compile_s=round(time.perf_counter() - t0 - t_lower, 1))
+        try:
+            ma = compiled.memory_analysis()
+            for kk in ("argument_size_in_bytes", "temp_size_in_bytes"):
+                v = getattr(ma, kk, None)
+                if v is not None:
+                    rec[kk] = int(v)
+        except Exception as e:
+            rec["memory_analysis_error"] = str(e)
+        try:
+            ca = compiled.cost_analysis()
+            rec["flops"] = float(ca.get("flops", -1))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+        except Exception as e:
+            rec["cost_analysis_error"] = str(e)
+        try:
+            rec["collective_bytes"] = parse_collective_bytes(
+                compiled.as_text())
+        except Exception as e:
+            rec["collective_parse_error"] = str(e)
+    except Exception:
+        rec.update(status="failed", error=traceback.format_exc()[-4000:],
+                   seconds=round(time.perf_counter() - t0, 1))
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    if args.all or args.arch == "rairs-sift1b":
+        for mp in meshes:
+            rec = run_rairs_cell(mp, force=args.force)
+            st = rec.get("status")
+            n_ok += st == "ok"
+            n_fail += st == "failed"
+            print(f"[{rec['cell']}] {st} "
+                  f"compile={rec.get('compile_s', '-')}s", flush=True)
+            if st == "failed":
+                print(rec.get("error", "")[-800:])
+        if args.arch == "rairs-sift1b":
+            archs = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, force=args.force)
+                st = rec.get("status")
+                n_ok += st == "ok"
+                n_fail += st == "failed"
+                n_skip += st == "skipped"
+                msg = (f"[{rec['cell']}] {st} "
+                       f"compile={rec.get('compile_s', '-')}s "
+                       f"flops={rec.get('flops', '-')} ")
+                if st == "failed":
+                    msg += "\n" + rec.get("error", "")[-800:]
+                print(msg, flush=True)
+    print(f"done: ok={n_ok} failed={n_fail} skipped={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

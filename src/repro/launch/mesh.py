@@ -1,0 +1,21 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets
+xla_force_host_platform_device_count before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests on CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,162 @@
+"""Cell planner: (arch x input-shape) -> step fn + abstract inputs +
+shardings.  The dry-run lowers/compiles exactly what this module plans;
+nothing here allocates device memory (ShapeDtypeStructs only).
+
+Skip policy (DESIGN.md §Arch-applicability):
+  * hubert (encoder-only): decode_32k / long_500k skipped per spec.
+  * long_500k on pure full-attention archs is NOT run as quadratic
+    attention (skipped per spec) — instead it runs RAIRS-kNN paged
+    attention (the paper's technique), marked mode="rairs_knn".
+  * jamba/mamba2 run long_500k natively (O(S)-per-step / O(1)-state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS
+from ..configs.base import SHAPES, ModelConfig
+from ..dist.sharding import axis_rules, logical_spec, param_shardings
+from ..models.retrieval import KnnAttnConfig
+from ..models.transformer import ParamSpec, abstract_params, param_specs
+from ..serve.step import (cache_shardings, cache_specs, knn_decode_cache_specs,
+                          make_decode_step, make_long_decode_step,
+                          make_prefill_step)
+from ..train.step import TrainConfig, make_train_step, train_step_shardings
+
+SDS = jax.ShapeDtypeStruct
+
+LONG_KNN_CFG = KnnAttnConfig(nlist=512, nprobe=16, block=128,
+                             max_blocks_per_list=24, window=1024)
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    mode: str                     # train | prefill | decode | rairs_knn | ssm
+    step_fn: Any
+    args: Tuple                   # abstract args
+    in_shardings: Tuple
+    out_shardings: Any
+    note: str = ""
+
+
+def _batch_specs(cfg: ModelConfig, b: int, s: int, *, labels: bool):
+    sp: Dict[str, SDS] = {}
+    if cfg.frontend == "frame":
+        sp["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        sp["tokens"] = SDS((b, s), jnp.int32)
+        if cfg.frontend == "patch":
+            sp["patch_embeds"] = SDS((b, s // 4, cfg.patch_dim), jnp.bfloat16)
+        if cfg.m_rope:
+            sp["positions3"] = SDS((3, b, s), jnp.int32)
+    if labels:
+        sp["labels"] = SDS((b, s), jnp.int32)
+    return sp
+
+
+def _batch_shardings(mesh: Mesh, batch_specs):
+    with axis_rules(mesh):
+        def sh(s):
+            names = [None] * len(s.shape)
+            # batch dim is axis 0 except positions3 (3, B, S)
+            bdim = 1 if len(s.shape) >= 2 and s.shape[0] == 3 else 0
+            names[bdim] = "batch"
+            return NamedSharding(mesh, logical_spec(*names, shape=s.shape))
+        return jax.tree.map(sh, batch_specs)
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = ARCHS[arch]
+    kind = SHAPES[shape]["kind"]
+    if not cfg.has_decode and kind in ("decode", "long_decode"):
+        return "encoder-only arch: no decode step (per spec)"
+    return None
+
+
+def plan_cell(arch: str, shape: str, mesh: Mesh,
+              accum: int = 8, grad_compress: str = "none",
+              knn_cfg: KnnAttnConfig = None) -> CellPlan:
+    cfg = ARCHS[arch]
+    info = SHAPES[shape]
+    b, s = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+    knn_cfg = knn_cfg or LONG_KNN_CFG
+
+    if kind == "train":
+        # 400B+ models cannot replicate f32 master params over the data
+        # axis (memory_analysis: 120+ GiB/chip) -> FSDP/ZeRO-3 sharding
+        fsdp = arch in ("arctic-480b", "jamba-1.5-large-398b")
+        tcfg = TrainConfig(accum=accum, grad_compress=grad_compress,
+                           fsdp=fsdp)
+        bs = _batch_specs(cfg, b, s, labels=True)
+        params = abstract_params(cfg)
+        from ..optim.adamw import OptState
+        opt = OptState(
+            mu=jax.tree.map(lambda x: SDS(x.shape, jnp.float32), params),
+            nu=jax.tree.map(lambda x: SDS(x.shape, jnp.float32), params),
+            step=SDS((), jnp.int32))
+        (p_sh, o_sh, b_sh), out_sh = train_step_shardings(cfg, mesh, tcfg, bs)
+        return CellPlan(arch, shape, "train", make_train_step(cfg, tcfg),
+                        (params, opt, bs), (p_sh, o_sh, b_sh), out_sh)
+
+    specs = param_specs(cfg)
+    is_leaf = lambda x: isinstance(x, ParamSpec)
+    p_sh = param_shardings(specs, mesh, is_leaf=is_leaf)
+    params = abstract_params(cfg, dtype=jnp.bfloat16)
+
+    if kind == "prefill":
+        bs = _batch_specs(cfg, b, s, labels=False)
+        b_sh = _batch_shardings(mesh, bs)
+        step = make_prefill_step(cfg)
+        return CellPlan(arch, shape, "prefill", step, (params, bs),
+                        (p_sh, b_sh), None)
+
+    if kind == "decode":
+        cache = cache_specs(cfg, b, s)
+        c_sh = cache_shardings(cfg, mesh, cache)
+        toks = SDS((b, 1), jnp.int32)
+        with axis_rules(mesh):
+            t_sh = NamedSharding(mesh, logical_spec("batch", None,
+                                                    shape=(b, 1)))
+        step = make_decode_step(cfg)
+        return CellPlan(arch, shape, "decode", step, (params, cache, toks),
+                        (p_sh, c_sh, t_sh), (None, c_sh))
+
+    # ---- long_500k ----
+    assert kind == "long_decode"
+    pure_attention = cfg.attn_every == 0  # every mixer is full attention
+    if pure_attention:
+        cache = knn_decode_cache_specs(cfg, knn_cfg, b)
+        c_sh = cache_shardings(cfg, mesh, cache, long_context=True)
+        toks = SDS((b, 1), jnp.int32)
+        with axis_rules(mesh):
+            t_sh = NamedSharding(mesh, P())
+        step = make_long_decode_step(cfg, knn_cfg)
+        return CellPlan(
+            arch, shape, "rairs_knn", step, (params, cache, toks),
+            (p_sh, c_sh, t_sh), (None, c_sh),
+            note="full-attention arch at 524k: RAIRS-kNN paged attention "
+                 "(quadratic exact attention skipped per spec)")
+    # jamba: native long attention on its sparse attn layers; mamba2: state
+    cache = cache_specs(cfg, b, s)
+    c_sh = cache_shardings(cfg, mesh, cache, long_context=True)
+    toks = SDS((b, 1), jnp.int32)
+    with axis_rules(mesh):
+        t_sh = NamedSharding(mesh, P())
+    step = make_decode_step(cfg)
+    return CellPlan(arch, shape, "ssm_long", step, (params, cache, toks),
+                    (p_sh, c_sh, t_sh), (None, c_sh),
+                    note="SSM/hybrid native long context")
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape

@@ -1,0 +1,174 @@
+"""Transformer building blocks: RMSNorm, RoPE / M-RoPE, GQA attention
+(chunked-flash for train/prefill, single-token for decode), gated MLPs.
+
+Pure-JAX pytree params (no flax).  All matmuls cast to bf16 for compute
+with f32 accumulation (``preferred_element_type``), f32 master params —
+the MaxText-style mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .runtime_flags import scan_unroll_arg
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dot(x, w):
+    return jax.lax.dot_general(
+        x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ----------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[:, :, None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_m_rope(x, positions3, sections, theta: float = 1e4):
+    """Qwen2-VL multimodal RoPE.  positions3: (3, B, S) for (t, h, w);
+    `sections` partitions hd/2 frequencies across the three axes."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    pos = positions3[sec]                               # (hd/2, B, S) mixed
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------------
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def flash_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                    window: Optional[int] = None):
+    """Online-softmax attention, scanned over KV chunks (O(S) memory).
+    q: (B, Sq, H, hd); k, v: (B, Sk, KvH, hd) — KvH repeated to H here."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = (q * scale).astype(COMPUTE_DTYPE)
+    nchunks = max(sk // chunk, 1)
+    csize = sk // nchunks
+    kc = k.reshape(b, nchunks, csize, h, hd)
+    vc = v.reshape(b, nchunks, csize, h, hd)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32)
+        kv_pos = j * csize + jnp.arange(csize)
+        mask = jnp.ones((sq, csize), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(COMPUTE_DTYPE),
+            vj.astype(COMPUTE_DTYPE), preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(nchunks)), unroll=scan_unroll_arg())
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)      # (B, Sq, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """Single-token attention against a (B, Smax, KvH, hd) cache.
+    kv_len: (B,) current lengths (positions >= kv_len masked)."""
+    b, smax, kvh, hd = k_cache.shape
+    h = q.shape[2]
+    n_rep = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qh = (q[:, 0] * scale).astype(COMPUTE_DTYPE)        # (B, H, hd)
+    qg = qh.reshape(b, kvh, n_rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg,
+                   k_cache.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)  # (B,KvH,rep,Smax)
+    mask = jnp.arange(smax)[None] < kv_len[:, None]
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(COMPUTE_DTYPE),
+                     v_cache.astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Projections / MLP
+# ----------------------------------------------------------------------------
+def attention_proj(x, wq, wk, wv, n_heads, n_kv_heads, head_dim,
+                   q_norm=None, k_norm=None):
+    b, s, _ = x.shape
+    q = _dot(x, wq).reshape(b, s, n_heads, head_dim)
+    k = _dot(x, wk).reshape(b, s, n_kv_heads, head_dim)
+    v = _dot(x, wv).reshape(b, s, n_kv_heads, head_dim)
+    if q_norm is not None:                      # Qwen3 qk_norm (per head_dim)
+        q = rms_norm(q, q_norm)
+        k = rms_norm(k, k_norm)
+    return q, k, v
+
+
+def gated_mlp(x, w_gate, w_up, w_down, act: str = "silu"):
+    g = _dot(x, w_gate)
+    u = _dot(x, w_up)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return _dot((a * u).astype(x.dtype), w_down)
+
+
+# ----------------------------------------------------------------------------
+# Init helpers
+# ----------------------------------------------------------------------------
+def dense_init(key, shape, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s)

@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Implements the minimal SSD recurrence of arXiv:2405.21060:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t xᵀ_t        (per head)
+    y_t = C_tᵀ h_t + D x_t
+computed chunk-parallel: quadratic attention-like form within chunks,
+associative state passing across chunks — O(S·P·N) work, O(S) memory.
+Single-token recurrence (`mamba2_decode`) carries (h, conv window).
+
+Shapes: d_inner = expand·d_model split into H heads of P=head_dim;
+B/C shared across heads (ngroups=1), state size N = ssm_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, _dot, rms_norm
+from .runtime_flags import scan_unroll_arg
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray       # (B, H, P, N) SSM state
+    conv: jnp.ndarray    # (B, W-1, conv_channels) depthwise-conv tail
+
+
+def _segsum(dtA):  # (..., T) -> (..., T, T) lower-tri cumulative sums
+    t = dtA.shape[-1]
+    x = jnp.cumsum(dtA, axis=-1)
+    diff = x[..., :, None] - x[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, chunk: int = 128):
+    """x: (b, s, h, p); dt: (b, s, h); A_log: (h,); B, C: (b, s, n).
+    Returns y: (b, s, h, p) and final state (b, h, p, n)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    s0 = s
+    pad = (-s) % chunk if s > chunk else 0
+    if s < chunk:
+        chunk = s
+    if pad:
+        # dt -> -inf so softplus(dt)=0: pad steps leave state untouched
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e9)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    cs = chunk
+    A = -jnp.exp(A_log.astype(jnp.float32))                  # (h,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32))             # (b, s, h)
+    xr = x.reshape(b, nc, cs, h, p)
+    dtr = dt.reshape(b, nc, cs, h)
+    Br = B.reshape(b, nc, cs, n)
+    Cr = C.reshape(b, nc, cs, n)
+    dtA = dtr * A[None, None, None, :]                       # (b, nc, cs, h)
+
+    # --- intra-chunk (quadratic within the chunk, SSD "attention" form)
+    L = jnp.exp(_segsum(jnp.moveaxis(dtA, -1, -2)))          # (b,nc,h,cs,cs)
+    scores = jnp.einsum("bctn,bcsn->bcts", Cr, Br)           # (b,nc,cs,cs)
+    M = scores[:, :, None] * L                               # (b,nc,h,t,s)
+    y_diag = jnp.einsum("bchts,bcsh,bcshp->bcthp",
+                        M.astype(COMPUTE_DTYPE),
+                        dtr.astype(COMPUTE_DTYPE),
+                        xr.astype(COMPUTE_DTYPE),
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states: contribution of each chunk to its final state
+    # decay from step t (exclusive) to the chunk end: sum_{j>t} dtA_j
+    rev_incl = jnp.cumsum(dtA[:, :, ::-1], axis=2)[:, :, ::-1]
+    decay_to_end = jnp.exp(rev_incl - dtA)                   # (b,nc,cs,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        Br.astype(COMPUTE_DTYPE),
+                        (dtr * decay_to_end).astype(COMPUTE_DTYPE),
+                        xr.astype(COMPUTE_DTYPE),
+                        preferred_element_type=jnp.float32)  # (b,nc,h,p,n)
+
+    # --- inter-chunk recurrence over chunk boundary states
+    chunk_decay = jnp.exp(dtA.sum(axis=2))                   # (b, nc, h)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=scan_unroll_arg())
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                      # (b,nc,h,p,n)
+
+    # --- inter-chunk output: y += C_t · (decay_from_start * h_prev)
+    decay_from_start = jnp.exp(jnp.cumsum(dtA, axis=2))      # (b,nc,cs,h)
+    y_off = jnp.einsum("bctn,bcth,bchpn->bcthp",
+                       Cr.astype(COMPUTE_DTYPE),
+                       decay_from_start.astype(COMPUTE_DTYPE),
+                       hprevs.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y[:, :s0].astype(x.dtype), hlast
+
+
+def mamba2_step(x_t, state: MambaState, dt_t, A_log, B_t, C_t, D):
+    """Single-token recurrence. x_t: (b, h, p); dt_t: (b, h); B/C: (b, n)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dt = jax.nn.softplus(dt_t.astype(jnp.float32))           # (b, h)
+    decay = jnp.exp(dt * A[None, :])                         # (b, h)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, B_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32))
+    h = state.h * decay[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), h)
+    y = y + x_t.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x_t.dtype), h
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv. x: (b, s, c); w: (w_len, c).
+    If cache (b, w_len-1, c) given: single-step mode (s==1)."""
+    wl = w.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)         # (b, wl, c)
+        y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None]
+        return y.astype(x.dtype), window[:, 1:]
+    xp = jnp.pad(x, ((0, 0), (wl - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(wl))
+    return y.astype(x.dtype), xp[:, x.shape[1]:]  # tail for decode handoff
+
+
+def mamba2_block(params, x, *, n_heads, head_dim, ssm_state, conv_w=4,
+                 chunk=128):
+    """Full Mamba-2 mixer: in-proj -> conv -> SSD -> gate -> out-proj.
+    x: (b, s, d_model) -> (b, s, d_model), final MambaState."""
+    b, s, d = x.shape
+    d_inner = n_heads * head_dim
+    n = ssm_state
+    zxbcdt = _dot(x, params["w_in"])          # (b,s, 2*d_inner + 2n + h)
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out, conv_tail = causal_conv1d(conv_in, params["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bs, Cs = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    y, hlast = ssd_chunked(
+        xs.reshape(b, s, n_heads, head_dim), dt, params["A_log"], Bs, Cs,
+        params["D"], chunk=chunk)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = _dot(y, params["w_out"])
+    return out, MambaState(h=hlast, conv=conv_tail[:, -(conv_w - 1):])
+
+
+def mamba2_block_decode(params, x, state: MambaState, *, n_heads, head_dim,
+                        ssm_state, conv_w=4):
+    """Single-token mixer step. x: (b, 1, d_model)."""
+    b, _, d = x.shape
+    d_inner = n_heads * head_dim
+    n = ssm_state
+    zxbcdt = _dot(x, params["w_in"])
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out, new_conv = causal_conv1d(conv_in, params["conv_w"], state.conv)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bs, Cs = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    y, hnew = mamba2_step(
+        xs[:, 0].reshape(b, n_heads, head_dim), state, dt[:, 0],
+        params["A_log"], Bs[:, 0], Cs[:, 0], params["D"])
+    y = y.reshape(b, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return _dot(y, params["w_out"]), MambaState(h=hnew, conv=new_conv)
+
+
+def mamba2_init(key, d_model, n_heads, head_dim, ssm_state, conv_w=4):
+    d_inner = n_heads * head_dim
+    n = ssm_state
+    in_dim = 2 * d_inner + 2 * n + n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_in": jax.random.normal(k1, (d_model, in_dim), jnp.float32)
+                / jnp.sqrt(d_model),
+        "conv_w": jax.random.normal(k2, (conv_w, d_inner + 2 * n),
+                                    jnp.float32) * 0.2,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "w_out": jax.random.normal(k3, (d_inner, d_model), jnp.float32)
+                 / jnp.sqrt(d_inner),
+    }

@@ -1,0 +1,76 @@
+"""Token-choice top-k MoE with static capacity (GShard-style), EP-shardable.
+
+Routing keeps exact top-k semantics: each token picks its top-k experts;
+per expert only the first ``capacity`` routed slots are kept (overflow
+tokens drop that expert's contribution — standard capacity-factor
+behaviour).  Dispatch/combine are gathers/segment-sums with fully static
+shapes, so GSPMD can shard the expert dimension over the `model` axis
+(expert parallelism) and insert the all-to-alls.
+
+FLOPs are the *active* FLOPs (k of E experts), not E/k-times dense —
+this keeps the roofline "useful compute" ratio honest for MoE archs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, gated_mlp
+
+
+def route_topk(router_logits: jnp.ndarray, k: int, capacity: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """router_logits: (T, E) -> slot assignment.
+
+    Returns (slot_token (E, C) int32 token id or -1,
+             slot_gate  (E, C) f32 combine weight,
+             aux: load-balance fraction per expert (E,))."""
+    t, e = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)               # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renorm
+    flat_expert = expert.reshape(-1)                     # (T*k,)
+    flat_gate = gate.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    # position of each routed pair within its expert queue
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    counts = jnp.bincount(flat_expert, length=e)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(t * k) - starts[sorted_e]
+    pos = jnp.zeros(t * k, jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_expert * capacity + pos, e * capacity)
+    slot_token = jnp.full((e * capacity + 1,), -1, jnp.int32
+                          ).at[slot].set(jnp.where(keep, flat_token, -1))
+    slot_gate = jnp.zeros((e * capacity + 1,), jnp.float32
+                          ).at[slot].set(jnp.where(keep, flat_gate, 0.0))
+    load = counts.astype(jnp.float32) / (t * k)
+    return (slot_token[:-1].reshape(e, capacity),
+            slot_gate[:-1].reshape(e, capacity), load)
+
+
+def moe_mlp(x: jnp.ndarray, router_w: jnp.ndarray, w_gate: jnp.ndarray,
+            w_up: jnp.ndarray, w_down: jnp.ndarray, *, top_k: int,
+            capacity_factor: float = 1.25, act: str = "silu"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d); expert weights (E, d, ff) / (E, ff, d).
+    Returns (y (B, S, d) f32, router load (E,))."""
+    b, s, d = x.shape
+    e = w_gate.shape[0]
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(COMPUTE_DTYPE) @ router_w.astype(COMPUTE_DTYPE)
+    cap = int(max(top_k * b * s / e * capacity_factor, 4))
+    slot_token, slot_gate, load = route_topk(logits.astype(jnp.float32),
+                                             top_k, cap)
+    xe = xt[jnp.maximum(slot_token, 0)]                  # (E, C, d)
+    ye = jax.vmap(lambda xx, wg, wu, wd: gated_mlp(xx[None], wg, wu, wd, act)[0]
+                  )(xe, w_gate, w_up, w_down)            # (E, C, d) f32
+    ye = ye * slot_gate[..., None]
+    flat_tok = jnp.where(slot_token >= 0, slot_token, b * s).reshape(-1)
+    y = jax.ops.segment_sum(ye.reshape(-1, d), flat_tok,
+                            num_segments=b * s + 1)[:-1]
+    return y.reshape(b, s, d), load

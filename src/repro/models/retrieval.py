@@ -1,0 +1,271 @@
+"""RAIRS-kNN paged attention — the paper's index serving a 500k-token
+KV cache (the long_500k cell for full-attention archs).
+
+Keys of each (batch, kv-head) are clustered into `nlist` IVF lists;
+each key is redundantly assigned to up to two lists with the AIR metric
+(RAIR).  SEIL-for-attention adaptation: every cell_{i,j}'s keys are
+packed once into 128-wide blocks listed in BOTH lists' tables — unlike
+ANN search, attention *must* be compute-once (softmax would double-count
+a twice-scanned key), so cell-level deduplication is a correctness
+requirement here, done by first-occurrence masking over the gathered
+block ids (the vectorized ``listVisited``).  Partial cell blocks are
+zero-padded instead of spilling to a misc area (masked lanes are free on
+the VPU; DESIGN.md §3 records the trade).
+
+Decode gathers the top-`nprobe` lists' K/V blocks per kv-head plus a
+recent raw window, then does masked attention over ~nprobe·maxb·128
+keys instead of 524288 — sub-quadratic decode, paged exactly like the
+Pallas pq_scan kernel pages SEIL blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.assign import rair_assign
+from ..core.kmeans import kmeans_fit
+from .layers import COMPUTE_DTYPE
+
+
+@dataclasses.dataclass(frozen=True)
+class KnnAttnConfig:
+    nlist: int = 512
+    nprobe: int = 16
+    block: int = 128
+    max_blocks_per_list: int = 32   # maxb
+    window: int = 1024              # recent raw-attention window
+    lam: float = 0.5
+    n_cands: int = 10
+    cache_dtype: str = "bf16"       # bf16 | int8 (per-block absmax scales)
+
+
+def knn_cache_specs(cfg, kcfg: KnnAttnConfig, batch: int, n_periods: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract per-attn-slot cache (leading period axis) for the dry-run."""
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    nb = kcfg.nlist * kcfg.max_blocks_per_list // 2  # RAIR <=2x, shared once
+    S = jax.ShapeDtypeStruct
+    if kcfg.cache_dtype == "int8":
+        dtype = jnp.int8
+    out = {
+        "centroids": S((n_periods, batch, kvh, kcfg.nlist, hd), jnp.float32),
+        "k_blocks": S((n_periods, batch, kvh, nb, kcfg.block, hd), dtype),
+        "v_blocks": S((n_periods, batch, kvh, nb, kcfg.block, hd), dtype),
+        "key_valid": S((n_periods, batch, kvh, nb, kcfg.block), jnp.bool_),
+        "table": S((n_periods, batch, kvh, kcfg.nlist,
+                    kcfg.max_blocks_per_list), jnp.int32),
+        "win_k": S((n_periods, batch, kcfg.window, kvh, hd), jnp.bfloat16),
+        "win_v": S((n_periods, batch, kcfg.window, kvh, hd), jnp.bfloat16),
+    }
+    if kcfg.cache_dtype == "int8":  # per-block absmax dequant scales
+        out["k_scale"] = S((n_periods, batch, kvh, nb), jnp.float32)
+        out["v_scale"] = S((n_periods, batch, kvh, nb), jnp.float32)
+    return out
+
+
+def rairs_attention_decode(q: jnp.ndarray, slot_cache: Dict, kv_len,
+                           kcfg: KnnAttnConfig) -> jnp.ndarray:
+    """q: (B, 1, H, hd) -> (B, 1, H, hd) attention over retrieved + window."""
+    b, _, h, hd = q.shape
+    cents = slot_cache["centroids"]                    # (B, kvH, L, hd)
+    kvh = cents.shape[1]
+    rep = h // kvh
+    qg = q[:, 0].reshape(b, kvh, rep, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    # 1. probe lists (group-shared: mean query over the GQA group)
+    qm = qg.mean(axis=2)                               # (B, kvH, hd)
+    cs = jnp.einsum("bgd,bgld->bgl", qm, cents,
+                    preferred_element_type=jnp.float32)
+    _, sel = jax.lax.top_k(cs, kcfg.nprobe)            # (B, kvH, P)
+
+    # 2. gather block tables; first-occurrence dedup (vectorized listVisited)
+    table = slot_cache["table"]                        # (B,kvH,L,maxb)
+    tb = jnp.take_along_axis(
+        table, sel[..., None].repeat(table.shape[-1], -1), axis=2)
+    ids = tb.reshape(b, kvh, -1)                       # (B,kvH,S)
+    s = ids.shape[-1]
+    eq = ids[..., :, None] == ids[..., None, :]        # (B,kvH,S,S)
+    earlier = jnp.tril(jnp.ones((s, s), bool), k=-1)
+    dup = (eq & earlier).any(-1)
+    keep_block = (ids >= 0) & ~dup                     # (B,kvH,S)
+
+    # 3. gather K/V blocks (paged; scalar-prefetch kernel on TPU)
+    safe = jnp.maximum(ids, 0)
+    def g(x):  # (B,kvH,NB,blk,hd) -> (B,kvH,S,blk,hd)
+        return jnp.take_along_axis(
+            x, safe[..., None, None].repeat(x.shape[-2], -2)
+                 .repeat(x.shape[-1], -1), axis=2)
+    kb = g(slot_cache["k_blocks"])
+    vb = g(slot_cache["v_blocks"])
+    if "k_scale" in slot_cache:     # int8 blocks: per-block absmax dequant
+        def gs(x):
+            return jnp.take_along_axis(x, safe, axis=2)
+        kb = kb.astype(COMPUTE_DTYPE) * gs(slot_cache["k_scale"]
+                                           )[..., None, None].astype(COMPUTE_DTYPE)
+        vb = vb.astype(COMPUTE_DTYPE) * gs(slot_cache["v_scale"]
+                                           )[..., None, None].astype(COMPUTE_DTYPE)
+    valid = jnp.take_along_axis(
+        slot_cache["key_valid"],
+        safe[..., None].repeat(kcfg.block, -1), axis=2)
+    item_mask = valid & keep_block[..., None]          # (B,kvH,S,blk)
+
+    kf = kb.reshape(b, kvh, -1, hd)
+    vf = vb.reshape(b, kvh, -1, hd)
+    mask_r = item_mask.reshape(b, kvh, -1)
+
+    # 4. retrieved-set scores + recent window scores, one softmax
+    sr = jnp.einsum("bgrd,bgkd->bgrk", (qg * scale).astype(COMPUTE_DTYPE),
+                    kf.astype(COMPUTE_DTYPE),
+                    preferred_element_type=jnp.float32)
+    sr = jnp.where(mask_r[:, :, None], sr, -jnp.inf)
+    wk, wv = slot_cache["win_k"], slot_cache["win_v"]  # (B,W,kvH,hd)
+    w = wk.shape[1]
+    sw = jnp.einsum("bgrd,bwgd->bgrw", (qg * scale).astype(COMPUTE_DTYPE),
+                    wk.astype(COMPUTE_DTYPE),
+                    preferred_element_type=jnp.float32)
+    wpos = jnp.arange(w)[None]
+    wmask = wpos < jnp.minimum(kv_len[:, None], w)
+    sw = jnp.where(wmask[:, None, None], sw, -jnp.inf)
+    alls = jnp.concatenate([sr, sw], axis=-1)
+    p = jax.nn.softmax(alls, axis=-1)
+    pr, pw = p[..., :sr.shape[-1]], p[..., sr.shape[-1]:]
+    out = jnp.einsum("bgrk,bgkd->bgrd", pr.astype(COMPUTE_DTYPE),
+                     vf.astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32) \
+        + jnp.einsum("bgrw,bwgd->bgrd", pw.astype(COMPUTE_DTYPE),
+                     wv.astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def update_window(slot_cache: Dict, k_new, v_new, kv_len) -> Dict:
+    """Ring-buffer append of the new token's K/V (B,1,kvH,hd)."""
+    w = slot_cache["win_k"].shape[1]
+    pos = kv_len % w
+
+    def upd(buf, val):
+        return jax.vmap(
+            lambda c, u, x: jax.lax.dynamic_update_slice(c, x, (u, 0, 0))
+        )(buf, pos, val.astype(buf.dtype))
+
+    return dict(slot_cache,
+                win_k=upd(slot_cache["win_k"], k_new),
+                win_v=upd(slot_cache["win_v"], v_new))
+
+
+# ----------------------------------------------------------------------------
+# Long-context decode step (the long_500k cell for full-attention archs)
+# ----------------------------------------------------------------------------
+def decode_step_long(params, cfg, cache, tokens, kcfg: KnnAttnConfig):
+    """Like transformer.decode_step, but attention slots run RAIRS-kNN
+    paged attention against the clustered cache + recent window.
+    tokens: (B, 1); cache["blocks"][s_j] = knn slot dict (attn) or
+    MambaState (ssm)."""
+    from .layers import rms_norm, _dot, attention_proj, apply_rope
+    from .transformer import _ssm_sublayer, _mlp_sublayer, _unembed_w
+
+    h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    kv_len = cache["len"]
+    kinds = cfg.slot_kinds()
+
+    def body(hh, xs):
+        pparams, pcache = xs
+        newc = {}
+        for j, (mixer, mlp) in enumerate(kinds):
+            slot = pparams[f"s{j}"]
+            if mixer == "attn":
+                x = rms_norm(hh, slot["ln1"])
+                a = slot["attn"]
+                q, k, v = attention_proj(
+                    x, a["wq"], a["wk"], a["wv"], cfg.n_heads,
+                    cfg.n_kv_heads, cfg.hd, a.get("q_norm"), a.get("k_norm"))
+                pos = kv_len[:, None]
+                q = apply_rope(q, pos, cfg.rope_theta)
+                k = apply_rope(k, pos, cfg.rope_theta)
+                sc = update_window(pcache[f"s{j}"], k, v, kv_len)
+                o = rairs_attention_decode(q, sc, kv_len + 1, kcfg)
+                b = o.shape[0]
+                y = _dot(o.reshape(b, 1, cfg.n_heads * cfg.hd), a["wo"])
+                hh = hh + y.astype(hh.dtype)
+                newc[f"s{j}"] = sc
+            else:
+                hh, c = _ssm_sublayer(cfg, slot, hh, "decode",
+                                      state=pcache[f"s{j}"])
+                newc[f"s{j}"] = c
+            if mlp != "none":
+                hh = _mlp_sublayer(cfg, slot, hh, mlp)
+        return hh, newc
+
+    from .runtime_flags import scan_unroll_arg
+    h, new_blocks = jax.lax.scan(body, h, (params["blocks"],
+                                           cache["blocks"]),
+                                 unroll=scan_unroll_arg())
+    h = rms_norm(h, params["final_norm"])
+    logits = _dot(h, _unembed_w(params, cfg))
+    return logits, {"blocks": new_blocks, "len": kv_len + 1}
+
+
+# ----------------------------------------------------------------------------
+# Offline cache construction (tests/examples; production would build this
+# at prefill time with the distributed kmeans of core/)
+# ----------------------------------------------------------------------------
+def build_knn_cache(keys: np.ndarray, values: np.ndarray,
+                    kcfg: KnnAttnConfig, seed: int = 0) -> Dict:
+    """keys/values: (B, S, kvH, hd) -> concrete single-period slot cache.
+    Uses the paper's own machinery: k-means lists + RAIR (AIR) assignment
+    + shared-cell packing."""
+    b, s, kvh, hd = keys.shape
+    blk = kcfg.block
+    nb_cap = kcfg.nlist * kcfg.max_blocks_per_list // 2
+    cents = np.zeros((b, kvh, kcfg.nlist, hd), np.float32)
+    kb = np.zeros((b, kvh, nb_cap, blk, hd), np.float32)
+    vb = np.zeros((b, kvh, nb_cap, blk, hd), np.float32)
+    valid = np.zeros((b, kvh, nb_cap, blk), bool)
+    table = np.full((b, kvh, kcfg.nlist, kcfg.max_blocks_per_list), -1,
+                    np.int32)
+    for bi in range(b):
+        for g in range(kvh):
+            kk = keys[bi, :, g, :]
+            c = np.asarray(kmeans_fit(jax.random.PRNGKey(seed + 7 * g),
+                                      jnp.asarray(kk), kcfg.nlist, iters=8))
+            cents[bi, g] = c
+            a = np.asarray(rair_assign(
+                jnp.asarray(kk), jnp.asarray(c), lam=kcfg.lam,
+                n_cands=min(kcfg.n_cands, kcfg.nlist)))
+            # pack each cell once; register its blocks in both lists
+            keys64 = a[:, 0].astype(np.int64) * kcfg.nlist + a[:, 1]
+            order = np.argsort(keys64, kind="stable")
+            cells, starts = np.unique(keys64[order], return_index=True)
+            nxt = 0
+            fill = np.zeros(kcfg.nlist, np.int32)
+            bounds = np.append(starts, len(order))
+            for ci, cell in enumerate(cells):
+                l1, l2 = int(cell // kcfg.nlist), int(cell % kcfg.nlist)
+                items = order[bounds[ci]:bounds[ci + 1]]
+                for s0 in range(0, len(items), blk):
+                    it = items[s0:s0 + blk]
+                    bid = nxt
+                    nxt += 1
+                    kb[bi, g, bid, :len(it)] = kk[it]
+                    vb[bi, g, bid, :len(it)] = values[bi, :, g, :][it]
+                    valid[bi, g, bid, :len(it)] = True
+                    for l in {l1, l2}:
+                        if fill[l] < kcfg.max_blocks_per_list:
+                            table[bi, g, l, fill[l]] = bid
+                            fill[l] += 1
+    win_k = np.zeros((b, kcfg.window, kvh, hd), np.float32)
+    win_v = np.zeros((b, kcfg.window, kvh, hd), np.float32)
+    return {
+        "centroids": jnp.asarray(cents),
+        "k_blocks": jnp.asarray(kb, COMPUTE_DTYPE),
+        "v_blocks": jnp.asarray(vb, COMPUTE_DTYPE),
+        "key_valid": jnp.asarray(valid),
+        "table": jnp.asarray(table),
+        "win_k": jnp.asarray(win_k, COMPUTE_DTYPE),
+        "win_v": jnp.asarray(win_v, COMPUTE_DTYPE),
+    }

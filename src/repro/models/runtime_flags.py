@@ -1,0 +1,31 @@
+"""Runtime flags controlling lowering strategy.
+
+UNROLL_SCANS: the production path keeps layer/microbatch/chunk loops as
+``lax.scan`` (small HLO -> fast 512-device compiles).  XLA's cost
+analysis counts a while-loop body ONCE regardless of trip count, so the
+roofline cost pass re-lowers each cell with every scan fully unrolled on
+a single abstract device — ``lowered.cost_analysis()`` then reports the
+exact global FLOPs (validated in tests/test_dryrun.py).
+"""
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def unroll_scans() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unrolled():
+    prev = unroll_scans()
+    _state.unroll = True
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan_unroll_arg():
+    return True if unroll_scans() else 1

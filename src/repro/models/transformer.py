@@ -1,0 +1,406 @@
+"""Unified LM stack covering all 10 assigned architectures.
+
+One parameterization, six families:
+  dense (llama3/qwen3/gemma), moe (olmoe/arctic), vlm (qwen2-vl, M-RoPE,
+  stub patch frontend), audio (hubert encoder, stub frame frontend),
+  hybrid (jamba: periods of 7 Mamba + 1 attention, alternating MoE),
+  ssm (mamba2, attention-free).
+
+Layers stack over `n_periods` for `jax.lax.scan` (small HLO, fast
+compiles at 512 devices); each period applies `cfg.slot_kinds()`
+sublayers.  `param_specs` is the single source of truth for parameter
+shapes + logical sharding axes: `init_params` samples real arrays (smoke
+tests), `abstract_params` gives ShapeDtypeStructs (the multi-pod
+dry-run lowers against these; full-size weights are never allocated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import logical_shard
+from .layers import (COMPUTE_DTYPE, _dot, apply_m_rope, apply_rope,
+                     attention_proj, decode_attention, flash_attention,
+                     gated_mlp, rms_norm)
+from .mamba2 import (MambaState, mamba2_block, mamba2_block_decode,
+                     mamba2_init)
+from .moe import moe_mlp
+from .runtime_flags import scan_unroll_arg
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init_scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sp = {
+        "wq": ParamSpec((d, h * hd), ("d_model", "heads")),
+        "wk": ParamSpec((d, kvh * hd), ("d_model", "kv")),
+        "wv": ParamSpec((d, kvh * hd), ("d_model", "kv")),
+        "wo": ParamSpec((h * hd, d), ("heads", "d_model")),
+    }
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec((hd,), (None,), 1.0)
+        sp["k_norm"] = ParamSpec((hd,), (None,), 1.0)
+    return sp
+
+
+def _mlp_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, ff), ("d_model", "ff")),
+        "w_up": ParamSpec((d, ff), ("d_model", "ff")),
+        "w_down": ParamSpec((ff, d), ("ff", "d_model")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, e, ff = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff or cfg.d_ff
+    # 2D expert sharding: expert dim over "data" (EP), within-expert ff
+    # over "model" (TP) — 480B-scale expert tables cannot replicate over
+    # the data axis (memory_analysis showed 120 GiB/chip with EP-on-model
+    # only; see EXPERIMENTS.md §Dry-run).
+    sp = {
+        "router": ParamSpec((d, e), ("d_model", None)),
+        "w_gate": ParamSpec((e, d, ff), ("expert", "d_model", "ff")),
+        "w_up": ParamSpec((e, d, ff), ("expert", "d_model", "ff")),
+        "w_down": ParamSpec((e, ff, d), ("expert", "ff", "d_model")),
+    }
+    if cfg.moe_dense_residual:
+        for k, v in _mlp_specs(cfg).items():
+            sp["dense_" + k] = v
+    return sp
+
+
+def _ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    n = cfg.ssm_state
+    in_dim = 2 * d_inner + 2 * n + cfg.ssm_heads
+    return {
+        "w_in": ParamSpec((d, in_dim), ("d_model", "ssm_head")),
+        "conv_w": ParamSpec((4, d_inner + 2 * n), (None, "ssm_head"), 0.2),
+        "A_log": ParamSpec((cfg.ssm_heads,), ("ssm_head",), 1.0),
+        "D": ParamSpec((cfg.ssm_heads,), ("ssm_head",), 1.0),
+        "norm": ParamSpec((d_inner,), ("ssm_head",), 1.0),
+        "w_out": ParamSpec((d_inner, d), ("ssm_head", "d_model")),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    """Full parameter pytree of ParamSpec (period-stacked layer params)."""
+    d = cfg.d_model
+    np_ = cfg.n_periods
+
+    def stacked(sp: Dict[str, ParamSpec]):
+        return {k: ParamSpec((np_,) + v.shape, (None,) + v.logical,
+                             v.init_scale) for k, v in sp.items()}
+
+    blocks: Dict[str, Any] = {}
+    for j, (mixer, mlp) in enumerate(cfg.slot_kinds()):
+        slot: Dict[str, Any] = {
+            "ln1": stacked({"s": ParamSpec((d,), (None,), 1.0)})["s"],
+        }
+        if mixer == "attn":
+            slot["attn"] = stacked(_attn_specs(cfg))
+        else:
+            slot["ssm"] = stacked(_ssm_specs(cfg))
+        if mlp != "none":
+            slot["ln2"] = stacked({"s": ParamSpec((d,), (None,), 1.0)})["s"]
+            slot["mlp" if mlp == "dense" else "moe"] = stacked(
+                _mlp_specs(cfg) if mlp == "dense" else _moe_specs(cfg))
+        blocks[f"s{j}"] = slot
+
+    params: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "d_model"), 0.02),
+        "blocks": blocks,
+        "final_norm": ParamSpec((d,), (None,), 1.0),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = ParamSpec((d, cfg.vocab), ("d_model", "vocab"))
+    if cfg.frontend == "patch":
+        params["patch_proj"] = ParamSpec((cfg.patch_dim, d),
+                                         (None, "d_model"))
+    return params
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    specs, treedef = jax.tree.flatten(param_specs(cfg), is_leaf=_is_spec)
+    keys = jax.random.split(key, len(specs))
+
+    def mk(k, s: ParamSpec):
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = s.init_scale if s.init_scale is not None \
+            else 1.0 / math.sqrt(fan_in)
+        if s.shape[-1:] == s.shape and s.init_scale == 1.0:
+            return jnp.ones(s.shape, jnp.float32)  # norm scales
+        return jax.random.normal(k, s.shape, jnp.float32) * scale
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in
+                                        zip(keys, specs)])
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStructs for dry-run lowering (serve steps pass bf16)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        param_specs(cfg), is_leaf=_is_spec)
+
+
+def param_logical(cfg: ModelConfig):
+    return jax.tree.map(lambda s: s.logical, param_specs(cfg),
+                        is_leaf=_is_spec)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / frontend
+# ----------------------------------------------------------------------------
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    if cfg.frontend == "frame":
+        h = batch["frames"]                      # (B, S, d) stub frontend
+    else:
+        h = params["embed"][batch["tokens"]]     # (B, S, d)
+        if cfg.frontend == "patch":
+            pe = _dot(batch["patch_embeds"], params["patch_proj"])
+            p = pe.shape[1]
+            h = jnp.concatenate([pe.astype(h.dtype), h[:, p:]], axis=1)
+    return logical_shard(h.astype(COMPUTE_DTYPE), "batch", "seq", "d_model")
+
+
+def _positions(cfg, batch, h):
+    b, s = h.shape[:2]
+    if cfg.m_rope:
+        return batch["positions3"]               # (3, B, S)
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+# ----------------------------------------------------------------------------
+# Sublayers
+# ----------------------------------------------------------------------------
+def _rope(cfg, x, pos):
+    if cfg.m_rope:
+        return apply_m_rope(x, pos, cfg.m_rope_sections, cfg.rope_theta)
+    return apply_rope(x, pos, cfg.rope_theta)
+
+
+def _attn_sublayer(cfg, p, h, pos, mode, cache_kv=None, cache_len=None):
+    x = rms_norm(h, p["ln1"])
+    a = p["attn"]
+    q, k, v = attention_proj(x, a["wq"], a["wk"], a["wv"], cfg.n_heads,
+                             cfg.n_kv_heads, cfg.hd,
+                             a.get("q_norm"), a.get("k_norm"))
+    q = logical_shard(q, "batch", "seq", "heads", None)
+    k = logical_shard(k, "batch", "seq", "kv", None)
+    v = logical_shard(v, "batch", "seq", "kv", None)
+    if mode == "decode":
+        qpos = cache_len[:, None]
+        q = _rope(cfg, q, qpos if not cfg.m_rope else
+                  jnp.broadcast_to(qpos[None], (3,) + qpos.shape))
+        k = _rope(cfg, k, qpos if not cfg.m_rope else
+                  jnp.broadcast_to(qpos[None], (3,) + qpos.shape))
+        kc, vc = cache_kv
+        b, smax = kc.shape[:2]
+        upd = jnp.minimum(cache_len, smax - 1)
+        kc = jax.vmap(lambda c, u, val: jax.lax.dynamic_update_slice(
+            c, val, (u, 0, 0)))(kc, upd, k.astype(kc.dtype))
+        vc = jax.vmap(lambda c, u, val: jax.lax.dynamic_update_slice(
+            c, val, (u, 0, 0)))(vc, upd, v.astype(vc.dtype))
+        o = decode_attention(q, kc, vc, cache_len + 1)
+        new_cache = (kc, vc)
+    else:
+        q = _rope(cfg, q, pos)
+        k = _rope(cfg, k, pos)
+        o = flash_attention(q, k, v, causal=cfg.causal,
+                            chunk=min(cfg.flash_chunk, q.shape[1]))
+        new_cache = (k, v)
+    o = logical_shard(o, "batch", "seq", "heads", None)
+    b, s = o.shape[:2]
+    y = _dot(o.reshape(b, s, cfg.n_heads * cfg.hd), a["wo"])
+    return h + y.astype(h.dtype), new_cache
+
+
+def _mlp_sublayer(cfg, p, h, kind):
+    x = rms_norm(h, p["ln2"])
+    if kind == "dense":
+        m = p["mlp"]
+        y = gated_mlp(x, m["w_gate"], m["w_up"], m["w_down"], cfg.act)
+        y = logical_shard(y.astype(h.dtype), "batch", "seq", "d_model")
+        return h + y
+    m = p["moe"]
+    y, _load = moe_mlp(x, m["router"], m["w_gate"], m["w_up"], m["w_down"],
+                       top_k=cfg.moe_top_k,
+                       capacity_factor=cfg.capacity_factor, act=cfg.act)
+    if cfg.moe_dense_residual:
+        y = y + gated_mlp(x, m["dense_w_gate"], m["dense_w_up"],
+                          m["dense_w_down"], cfg.act)
+    y = logical_shard(y.astype(h.dtype), "batch", "seq", "d_model")
+    return h + y
+
+
+def _ssm_sublayer(cfg, p, h, mode, state: Optional[MambaState] = None):
+    x = rms_norm(h, p["ln1"])
+    if mode == "decode":
+        y, new_state = mamba2_block_decode(
+            p["ssm"], x, state, n_heads=cfg.ssm_heads,
+            head_dim=cfg.ssm_head_dim, ssm_state=cfg.ssm_state)
+    else:
+        y, new_state = mamba2_block(
+            p["ssm"], x, n_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+            ssm_state=cfg.ssm_state, chunk=min(cfg.ssm_chunk, x.shape[1]))
+    return h + y.astype(h.dtype), new_state
+
+
+# ----------------------------------------------------------------------------
+# Stack
+# ----------------------------------------------------------------------------
+def _period_fn(cfg: ModelConfig, mode: str):
+    kinds = cfg.slot_kinds()
+
+    def run(h, pos, pparams, pcache, cache_len):
+        new_cache = {}
+        for j, (mixer, mlp) in enumerate(kinds):
+            slot = pparams[f"s{j}"]
+            if mixer == "attn":
+                ck = pcache.get(f"s{j}") if pcache else None
+                h, c = _attn_sublayer(cfg, slot, h, pos, mode,
+                                      cache_kv=ck, cache_len=cache_len)
+                new_cache[f"s{j}"] = c
+            else:
+                st = pcache.get(f"s{j}") if pcache else None
+                h, c = _ssm_sublayer(cfg, slot, h, mode, state=st)
+                new_cache[f"s{j}"] = c
+            if mlp != "none":
+                h = _mlp_sublayer(cfg, slot, h, mlp)
+        return h, new_cache
+
+    return run
+
+
+def forward(params, cfg: ModelConfig, batch, mode: str = "train",
+            remat: bool = True):
+    """Runs the stack. Returns (hidden (B,S,d), per-period cache stack)."""
+    h = embed_inputs(params, cfg, batch)
+    pos = _positions(cfg, batch, h)
+    run = _period_fn(cfg, mode)
+
+    def body(hh, pparams):
+        hh, cache = run(hh, pos, pparams, None, None)
+        return hh, cache
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+    h, cache = jax.lax.scan(body, h, params["blocks"],
+                            unroll=scan_unroll_arg())
+    return rms_norm(h, params["final_norm"]), cache
+
+
+# ----------------------------------------------------------------------------
+# Losses / serving entry points
+# ----------------------------------------------------------------------------
+def _chunked_ce(h, w_unembed, labels, chunk: int):
+    """Cross entropy with sequence chunking (vocab stays shardable)."""
+    b, s, d = h.shape
+    nch = max(s // chunk, 1)
+    hs = h.reshape(b, nch, s // nch, d)
+    ls = labels.reshape(b, nch, s // nch)
+
+    def body(carry, inp):
+        hc, lc = inp                            # (b, c, d), (b, c)
+        logits = _dot(hc, w_unembed)            # (b, c, V) f32
+        logits = logical_shard(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        loss = ((lse - gold) * mask).sum()
+        return carry + jnp.stack([loss, mask.sum()]), None
+
+    (tot, _), _ = jax.lax.scan(body, jnp.zeros(2),
+                               (jnp.moveaxis(hs, 1, 0),
+                                jnp.moveaxis(ls, 1, 0)),
+                               unroll=scan_unroll_arg()), None
+    return tot
+
+
+def _unembed_w(params, cfg):
+    return params["unembed"] if not cfg.tie_embeddings else params["embed"].T
+
+
+def train_loss(params, cfg: ModelConfig, batch, remat: bool = True):
+    h, _ = forward(params, cfg, batch, mode="train", remat=remat)
+    acc = _chunked_ce(h, _unembed_w(params, cfg), batch["labels"],
+                      cfg.ce_chunk)
+    return acc[0] / jnp.maximum(acc[1], 1.0)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_slack: int = 0):
+    """Returns (last-position logits, decode cache)."""
+    h, cache = forward(params, cfg, batch, mode="prefill", remat=False)
+    b, s = h.shape[:2]
+    logits = _dot(h[:, -1:], _unembed_w(params, cfg))
+    if cfg.has_decode:
+        def pad_kv(x):
+            if cache_slack:
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, cache_slack)     # (NP, B, S, kvH, hd)
+                x = jnp.pad(x, pad)
+            return x
+        cache = {k: (jax.tree.map(pad_kv, v)
+                     if isinstance(v, tuple) and not isinstance(v, MambaState)
+                     else v)
+                 for k, v in cache.items()}
+        length = jnp.full((b,), s, jnp.int32)
+        return logits, {"blocks": cache, "len": length}
+    return logits, None
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """tokens: (B, 1) -> (logits (B,1,V), updated cache)."""
+    h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    h = logical_shard(h, "batch", "seq", "d_model")
+    run = _period_fn(cfg, "decode")
+    cache_len = cache["len"]
+
+    def body(hh, xs):
+        pparams, pcache = xs
+        hh, newc = run(hh, None, pparams, pcache, cache_len)
+        return hh, newc
+
+    h, new_blocks = jax.lax.scan(body, h, (params["blocks"],
+                                           cache["blocks"]),
+                                 unroll=scan_unroll_arg())
+    h = rms_norm(h, params["final_norm"])
+    logits = _dot(h, _unembed_w(params, cfg))
+    return logits, {"blocks": new_blocks, "len": cache_len + 1}
+
+
+class Model:
+    """Thin OO veneer used by examples/launchers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(key, self.cfg)
+
+    def loss(self, params, batch):
+        return train_loss(params, self.cfg, batch)
+
+    def prefill(self, params, batch, cache_slack=0):
+        return prefill(params, self.cfg, batch, cache_slack)
+
+    def decode(self, params, cache, tokens):
+        return decode_step(params, self.cfg, cache, tokens)

@@ -1,0 +1,3 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa
+                    cosine_schedule, global_norm)
+from .compress import compress_tree, decompress_tree  # noqa

@@ -1,0 +1,71 @@
+"""AdamW with cosine schedule + global-norm clipping (pure pytree impl).
+
+Optimizer state carries f32 master moments; ZeRO-1 sharding of the
+moments over the data axis is applied at the step level (see
+train/step.py + dist/sharding.zero1_logical).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    mu: object
+    nu: object
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(mu=z, nu=jax.tree.map(jnp.copy, z),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: OptState, params, cfg: AdamWConfig):
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+    lr = cosine_schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        return (p - lr * (u + cfg.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(mu=mu, nu=nu, step=step), \
+        {"grad_norm": gn, "lr": lr}

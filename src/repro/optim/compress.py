@@ -1,0 +1,55 @@
+"""Gradient compression for cross-replica reduction.
+
+Distributed-optimization trick for 1000+ node DP: gradients cross the
+(slow) inter-pod links compressed.  Two codecs:
+  * bf16 — 2x traffic cut, loses 16 mantissa bits (safe for grads);
+  * int8 — 4x cut, per-tensor absmax scaling (error-prone for tiny
+    grads; exposed for the perf pass, off by default).
+
+Used by train/step.py's explicit-DP variant: per-shard grads are
+compressed, `psum`'d over the data axes, then decompressed — the psum
+of int8 is performed in int32 to avoid overflow across <= 2^23 replicas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_tree(tree, mode: str):
+    if mode == "none":
+        return tree, None
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), tree), None
+    if mode == "int8":
+        scales = jax.tree.map(
+            lambda g: jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0, tree)
+        q = jax.tree.map(
+            lambda g, s: jnp.clip(jnp.round(g / s), -127, 127
+                                  ).astype(jnp.int8), tree, scales)
+        return q, scales
+    raise ValueError(mode)
+
+
+def decompress_tree(tree, scales, mode: str):
+    if mode == "none":
+        return tree
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), tree)
+    if mode == "int8":
+        return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                            tree, scales)
+    raise ValueError(mode)
+
+
+def compressed_psum(tree, axis_names, mode: str = "bf16"):
+    """psum with on-the-wire compression (inside shard_map)."""
+    c, scales = compress_tree(tree, mode)
+    if mode == "int8":
+        c = jax.tree.map(lambda q: q.astype(jnp.int32), c)
+        c = jax.lax.psum(c, axis_names)
+        scales = jax.tree.map(lambda s: jax.lax.pmax(s, axis_names), scales)
+        return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                            c, scales)
+    c = jax.lax.psum(c, axis_names)
+    return decompress_tree(c, scales, mode)

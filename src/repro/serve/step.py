@@ -1,0 +1,118 @@
+"""Serving steps (prefill / decode / long-context decode) + cache specs.
+
+Cache sharding (production defaults):
+  * KV caches (NP, B, S, kvH, hd): batch over ("pod","data"), head_dim
+    over "model" (kvH is often < |model|, hd=128 always divides);
+    long-context B=1 caches shard S over "data" instead of batch.
+  * Mamba states (NP, B, H, P, N): batch over data, heads over model.
+  * RAIRS-kNN caches: block pool over ("pod","data") (like IVF lists),
+    head_dim over "model".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import axis_rules, logical_spec, param_shardings
+from ..models.mamba2 import MambaState
+from ..models.retrieval import KnnAttnConfig, knn_cache_specs
+from ..models.transformer import ParamSpec, decode_step, param_specs, prefill
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                kv_dtype=jnp.bfloat16) -> Dict:
+    """Abstract decode cache matching transformer.decode_step's pytree."""
+    np_ = cfg.n_periods
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    blocks = {}
+    for j, (mixer, _) in enumerate(cfg.slot_kinds()):
+        if mixer == "attn":
+            kv = SDS((np_, batch, seq_len, kvh, hd), kv_dtype)
+            blocks[f"s{j}"] = (kv, kv)
+        else:
+            d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+            c = d_inner + 2 * cfg.ssm_state
+            blocks[f"s{j}"] = MambaState(
+                h=SDS((np_, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+                conv=SDS((np_, batch, 3, c), jnp.float32))
+    return {"blocks": blocks, "len": SDS((batch,), jnp.int32)}
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
+                    long_context: bool = False):
+    """NamedShardings for a (possibly knn) cache pytree, by leaf shape."""
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+
+    def shard_leaf(leaf):
+        shp = leaf.shape
+        names = [None] * len(shp)
+        if len(shp) >= 2:
+            if long_context and len(shp) >= 3 and shp[1] == 1:
+                # B=1 long context: shard the big pool/seq dim over data
+                big = max(range(1, len(shp)), key=lambda i: shp[i])
+                names[big] = "lists"
+            else:
+                names[1] = "batch"
+            if shp[-1] == hd:
+                names[-1] = "kv_head_dim"
+            elif len(shp) == 5 and shp[2] == cfg.ssm_heads:
+                names[2] = "ssm_head"
+        with axis_rules(mesh, rules=_cache_rules()):
+            return NamedSharding(mesh, logical_spec(*names, shape=shp))
+
+    return jax.tree.map(shard_leaf, cache_tree)
+
+
+def _cache_rules():
+    from ..dist.sharding import DEFAULT_RULES
+    r = dict(DEFAULT_RULES)
+    r["kv_head_dim"] = "model"
+    return r
+
+
+def make_prefill_step(cfg: ModelConfig, cache_slack: int = 0):
+    def step(params, batch):
+        return prefill(params, cfg, batch, cache_slack=cache_slack)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+    return step
+
+
+def make_long_decode_step(cfg: ModelConfig, kcfg: KnnAttnConfig):
+    from ..models.retrieval import decode_step_long
+
+    def step(params, cache, tokens):
+        return decode_step_long(params, cfg, cache, tokens, kcfg)
+    return step
+
+
+def knn_decode_cache_specs(cfg: ModelConfig, kcfg: KnnAttnConfig,
+                           batch: int) -> Dict:
+    """Abstract long-context cache: knn slots for attention, MambaState
+    for ssm slots (matches retrieval.decode_step_long)."""
+    np_ = cfg.n_periods
+    slot_specs = knn_cache_specs(cfg, kcfg, batch, np_)
+    blocks = {}
+    for j, (mixer, _) in enumerate(cfg.slot_kinds()):
+        if mixer == "attn":
+            blocks[f"s{j}"] = dict(slot_specs)
+        else:
+            d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+            c = d_inner + 2 * cfg.ssm_state
+            blocks[f"s{j}"] = MambaState(
+                h=SDS((np_, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+                conv=SDS((np_, batch, 3, c), jnp.float32))
+    return {"blocks": blocks, "len": SDS((batch,), jnp.int32)}

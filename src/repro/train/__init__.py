@@ -1,0 +1,1 @@
+from .step import make_train_step, TrainConfig, train_step_shardings  # noqa

@@ -1,0 +1,45 @@
+"""Dense (GEMM) scoring path must be exactly equivalent to the blocked
+SEIL scan: same DCO accounting, same candidate sets, same final ids."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import IndexConfig, build_index
+from repro.core.dense import dense_search, dense_search_multi
+
+
+@pytest.mark.parametrize("strategy,seil", [
+    ("single", False), ("naive", False), ("rair", False),
+    ("rair", True), ("srair", True),
+])
+def test_dense_equals_blocked(unit_data, shared_trained, strategy, seil):
+    x, q, _ = unit_data
+    cents, cb = shared_trained
+    cfg = IndexConfig(nlist=64, strategy=strategy, seil=seil)
+    idx = build_index(jax.random.PRNGKey(0), x, cfg, centroids=cents,
+                      codebook=cb)
+    qs = q[:24]
+    for nprobe in (3, 9):
+        rb = idx.search(qs, k=10, nprobe=nprobe, max_scan=100000)
+        rd = dense_search(idx, qs, nprobe=nprobe, k=10)
+        assert np.asarray(rb.dropped_blocks).max() == 0
+        np.testing.assert_array_equal(np.asarray(rb.approx_dco),
+                                      np.asarray(rd.approx_dco))
+        np.testing.assert_array_equal(np.asarray(rb.refine_dco),
+                                      np.asarray(rd.refine_dco))
+        gb, gd = np.asarray(rb.ids), np.asarray(rd.ids)
+        for i in range(len(qs)):
+            a, b = set(gb[i][gb[i] >= 0].tolist()), set(gd[i][gd[i] >= 0].tolist())
+            assert len(a ^ b) <= 2, (i, a ^ b)   # tie-boundary tolerance
+
+
+def test_dense_multi_matches_single(rairs_index, unit_data):
+    _, q, _ = unit_data
+    qs = q[:16]
+    multi = dense_search_multi(rairs_index, qs, nprobes=(2, 8), k=10)
+    for p, r in zip((2, 8), multi):
+        single = dense_search(rairs_index, qs, nprobe=p, k=10)
+        np.testing.assert_array_equal(np.asarray(r.ids),
+                                      np.asarray(single.ids))
+        np.testing.assert_array_equal(np.asarray(r.approx_dco),
+                                      np.asarray(single.approx_dco))

@@ -1,0 +1,177 @@
+"""Distributed-runtime tests at host scale: train step integration,
+checkpoint save/restore (+ elastic resharding), grad compression,
+distributed k-means, sharding rules."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.dist.checkpoint import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.dist.elastic import replan_mesh, rescale_batch
+from repro.dist.sharding import axis_rules, logical_spec
+from repro.models.transformer import init_params
+from repro.optim.adamw import adamw_init
+from repro.train.step import TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_setup(arch="qwen3-8b", accum=2, **tover):
+    r = ARCHS[arch].reduced()
+    params = init_params(KEY, r)
+    opt = adamw_init(params)
+    tcfg = TrainConfig(accum=accum, **tover)
+    step = make_train_step(r, tcfg)
+    b, s = 4, 32
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, r.vocab),
+             "labels": jax.random.randint(KEY, (b, s), 0, r.vocab)}
+    return r, params, opt, step, batch
+
+
+def test_train_step_decreases_loss():
+    r, params, opt, step, batch = _tiny_setup()
+    step = jax.jit(step)
+    losses = []
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert np.isfinite(losses).all()
+    assert int(opt.step) == 8
+
+
+def test_grad_accum_equivalence():
+    """accum=1 vs accum=4 must give (nearly) the same update."""
+    outs = {}
+    for a in (1, 4):
+        r, params, opt, step, batch = _tiny_setup(accum=a)
+        p2, o2, m = jax.jit(step)(params, opt, batch)
+        outs[a] = (m["loss"], p2)
+    np.testing.assert_allclose(float(outs[1][0]), float(outs[4][0]),
+                               rtol=2e-2)
+    diffs = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()),
+                         outs[1][1], outs[4][1])
+    assert max(jax.tree.leaves(diffs)) < 5e-2
+
+
+def test_grad_compression_modes():
+    base = None
+    for mode in ("none", "bf16", "int8"):
+        r, params, opt, step, batch = _tiny_setup(grad_compress=mode)
+        p2, _, m = jax.jit(step)(params, opt, batch)
+        assert np.isfinite(float(m["loss"]))
+        if mode == "none":
+            base = p2
+        else:
+            err = max(jax.tree.leaves(jax.tree.map(
+                lambda x, y: float(jnp.abs(x - y).max()), base, p2)))
+            assert err < (1e-2 if mode == "bf16" else 5e-2), (mode, err)
+
+
+def test_compressed_psum_shardmap():
+    from repro.optim.compress import compressed_psum
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"a": jnp.arange(8, dtype=jnp.float32) / 7.0}
+
+    @jax.jit
+    def run(t):
+        return jax.shard_map(
+            lambda x: compressed_psum(x, ("data",), "int8"),
+            mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+            out_specs=jax.sharding.PartitionSpec())(t)
+
+    out = run(tree)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(tree["a"]), atol=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    r, params, opt, step, batch = _tiny_setup()
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, {"params": params, "opt": opt})
+    save_checkpoint(d, 7, {"params": params, "opt": opt})
+    assert latest_step(d) == 7
+    restored = restore_checkpoint(d, {"params": params, "opt": opt})
+    flat_a = jax.tree.leaves(restored["params"])
+    flat_b = jax.tree.leaves(params)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention(tmp_path):
+    r, params, opt, step, batch = _tiny_setup()
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, {"p": params["final_norm"]}, keep=2)
+    steps = sorted(os.listdir(d))
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_elastic_replan_and_restore(tmp_path):
+    """Simulated node failure: checkpoint on 'full fleet', drop devices,
+    replan mesh, restore, keep training."""
+    r, params, opt, step, batch = _tiny_setup()
+    d = str(tmp_path / "ckpt")
+    params2, opt2, _ = jax.jit(step)(params, opt, batch)
+    save_checkpoint(d, 1, {"params": params2, "opt": opt2})
+    plan = replan_mesh(jax.devices(), model=1, failed=[])
+    assert plan.data_size >= 1
+    gb, accum = rescale_batch(4, 2, plan)
+    assert gb * 0 + accum >= 2
+    restored = restore_checkpoint(d, {"params": params2, "opt": opt2})
+    p3, o3, m3 = jax.jit(step)(restored["params"], restored["opt"], batch)
+    assert np.isfinite(float(m3["loss"]))
+    assert int(o3.step) == 2  # resumed from step 1
+
+
+def test_distributed_kmeans_step_matches_single():
+    from repro.core.kmeans import kmeans_step_sharded, assign_nearest
+    from repro.core.kmeans import _update_centroids
+    x = jax.random.normal(KEY, (256, 8))
+    c = x[:8]
+    mesh = jax.make_mesh((1,), ("data",))
+    got = jax.shard_map(
+        lambda xl, cc: kmeans_step_sharded(xl, cc, axis_names=("data",)),
+        mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec("data"),
+                  jax.sharding.PartitionSpec()),
+        out_specs=jax.sharding.PartitionSpec())(x, c)
+    a = assign_nearest(x, c)
+    want, _ = _update_centroids(x, a, 8, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_logical_spec_divisibility_guard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with axis_rules(mesh):
+        # vocab=504 not divisible by model=1 -> trivially ok; simulate
+        # the guard logic directly
+        sp = logical_spec("vocab", "d_model", shape=(504, 64))
+        assert sp is not None
+
+
+def test_hubert_vocab_stays_replicated():
+    """vocab=504 % 16 != 0: param_shardings must drop the model axis."""
+    from repro.dist.sharding import param_shardings
+    from repro.models.transformer import ParamSpec, param_specs
+    # fake a 16-wide model axis using a reshaped single-device mesh is not
+    # possible; assert via the pure spec function with a mocked mesh shape
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    from repro.dist import sharding as sh
+    with_rules = {"vocab": "model", "d_model": None}
+    import contextlib
+    sh._state.ctx = (FakeMesh(), with_rules)
+    try:
+        sp = sh.logical_spec("vocab", "d_model", shape=(504, 1280))
+        assert sp[0] is None  # dropped: 504 % 16 != 0
+        sp2 = sh.logical_spec("vocab", "d_model", shape=(512, 1280))
+        assert sp2[0] == ("model",) or sp2[0] == "model"
+    finally:
+        sh._state.ctx = None

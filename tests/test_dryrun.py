@@ -1,0 +1,141 @@
+"""Dry-run / roofline methodology tests (host-scale, 1 device).
+
+Validates on tiny configs exactly what the 512-device dry-run relies on:
+  * unrolled lowering gives exact FLOP totals (scanned lowering counts
+    while bodies once);
+  * plan_cell produces lowerable plans for every shape kind;
+  * collective-HLO parsing finds the expected op kinds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.runtime_flags import unrolled
+from repro.models.transformer import abstract_params, train_loss
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shapes import plan_cell, skip_reason
+
+
+def test_unrolled_cost_analysis_exact():
+    """Scan vs unroll: unrolled flops ~= trip_count x body flops."""
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w, unroll=False)
+        return h.sum()
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)
+    scanned = jax.jit(f).lower(x, w).cost_analysis()["flops"]
+
+    def fu(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w, unroll=True)
+        return h.sum()
+    unrolled_f = jax.jit(fu).lower(x, w).cost_analysis()["flops"]
+    true = 12 * 2 * 64 * 128 * 128
+    assert abs(unrolled_f - true) / true < 0.01
+    assert scanned < true / 5    # the undercount we correct for
+
+
+def test_unroll_flag_changes_model_lowering():
+    # many layers + tiny vocab so the layer scan dominates total FLOPs
+    cfg = dataclasses.replace(ARCHS["qwen3-1.7b"].reduced(),
+                              n_layers=8, vocab=64)
+    params = abstract_params(cfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+
+    # distinct callables: jax caches traces per function object, and the
+    # unroll flag is consulted at trace time (the cost pass runs in a
+    # fresh process so this only matters for in-process A/B like here)
+    def loss_a(p, b):
+        return train_loss(p, cfg, b, remat=False)
+
+    def loss_b(p, b):
+        return train_loss(p, cfg, b, remat=False)
+
+    base = jax.jit(loss_a).lower(params, batch).cost_analysis()["flops"]
+    with unrolled():
+        full = jax.jit(loss_b).lower(params, batch).cost_analysis()["flops"]
+    # 8 layers -> unrolled total is several x the once-counted scan body
+    assert full > base * 1.5
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k",
+                                   "long_500k"])
+def test_plan_cell_lowers_reduced(shape):
+    """Every shape kind's plan must trace/lower on a tiny arch + host mesh
+    (full sizes are exercised by the real dry-run)."""
+    import repro.launch.shapes as shp
+    import repro.configs as cfgs
+    arch = "qwen3-1.7b"
+    tiny = dataclasses.replace(
+        ARCHS[arch].reduced(), name=arch)  # keep registry key semantics
+    # shrink the shape table for the host
+    old_shapes = dict(shp.SHAPES)
+    old_arch = cfgs.ARCHS[arch]
+    shp.SHAPES = {shape: {**old_shapes[shape],
+                          "seq_len": 64, "global_batch": 4}}
+    shp.ARCHS = dict(shp.ARCHS)
+    shp.ARCHS[arch] = tiny
+    try:
+        kcfg = dataclasses.replace(shp.LONG_KNN_CFG, nlist=8, nprobe=2,
+                                   block=8, max_blocks_per_list=4, window=8)
+        mesh = make_host_mesh()
+        plan = shp.plan_cell(arch, shape, mesh, accum=2, knn_cfg=kcfg)
+        lowered = jax.jit(plan.step_fn).lower(*plan.args)
+        assert lowered is not None
+        assert plan.mode in ("train", "prefill", "decode", "rairs_knn",
+                             "ssm_long")
+    finally:
+        shp.SHAPES = old_shapes
+        shp.ARCHS[arch] = old_arch
+
+
+def test_skip_policy():
+    assert skip_reason("hubert-xlarge", "decode_32k")
+    assert skip_reason("hubert-xlarge", "long_500k")
+    assert skip_reason("hubert-xlarge", "train_4k") is None
+    assert skip_reason("mamba2-2.7b", "long_500k") is None
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collective_bytes
+    hlo = """
+      %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={}
+      %ar = bf16[1024]{0} all-reduce(%y), to_apply=%sum
+      %rs = f32[8,8]{1,0} reduce-scatter(%z)
+    """
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["all-reduce"] == 1024 * 2
+    assert out["reduce-scatter"] == 64 * 4
+
+
+def test_dryrun_results_complete():
+    """If the real dry-run artifacts exist, assert the required matrix:
+    every (arch x shape x mesh) is ok or explicitly skipped."""
+    import json
+    import os
+    d = os.path.join(os.path.dirname(__file__), "..", "launch_results",
+                     "dryrun")
+    if not os.path.isdir(d) or len(os.listdir(d)) < 80:
+        pytest.skip("full dry-run artifacts not present")
+    from repro.configs import ARCHS as A
+    from repro.configs.base import SHAPES as S
+    for arch in A:
+        for shape in S:
+            for pod in ("pod1", "pod2"):
+                p = os.path.join(d, f"{arch}__{shape}__{pod}.json")
+                assert os.path.exists(p), p
+                rec = json.load(open(p))
+                assert rec["status"] in ("ok", "skipped"), \
+                    (arch, shape, pod, rec.get("error", "")[-300:])
+                if rec["status"] == "skipped":
+                    assert skip_reason(arch, shape)

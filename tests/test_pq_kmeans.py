@@ -1,0 +1,86 @@
+"""PQ and k-means substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import assign_nearest, kmeans_fit, pairwise_sq_l2
+from repro.core.pq import (pq_adc, pq_decode, pq_encode, pq_lut, pq_lut_ip,
+                           pq_train)
+
+
+def test_pairwise_matches_numpy():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (50, 16))
+    c = jax.random.normal(jax.random.PRNGKey(1), (7, 16))
+    got = np.asarray(pairwise_sq_l2(x, c))
+    ref = ((np.asarray(x)[:, None] - np.asarray(c)[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_reduces_inertia():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2000, 8))
+    c0 = x[:16]
+    c = kmeans_fit(key, x, 16, iters=10)
+    def inertia(cc):
+        return float(pairwise_sq_l2(x, cc).min(axis=1).sum())
+    assert inertia(c) < inertia(c0)
+
+
+def test_kmeans_chunked_equals_unchunked():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1000, 8))
+    c = jax.random.normal(jax.random.PRNGKey(4), (13, 8))
+    a1 = np.asarray(assign_nearest(x, c, chunk=64))
+    a2 = np.asarray(assign_nearest(x, c, chunk=10 ** 6))
+    assert np.array_equal(a1, a2)
+
+
+def test_pq_adc_identity():
+    """by_residual=False ADC: sum_m ||q_m - c_code||^2 == ||q - decode||^2."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (512, 32))
+    cb = pq_train(jax.random.PRNGKey(6), x, m=16, iters=8)
+    codes = pq_encode(cb, x[:64])
+    q = jax.random.normal(jax.random.PRNGKey(7), (4, 32))
+    lut = pq_lut(cb, q)
+    dec = pq_decode(cb, codes)
+    for i in range(4):
+        adc = np.asarray(pq_adc(lut[i], codes))
+        exact = np.asarray(((dec - q[i]) ** 2).sum(-1))
+        np.testing.assert_allclose(adc, exact, rtol=1e-4, atol=1e-4)
+
+
+def test_pq_quantization_error_below_variance():
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (2048, 32))
+    cb = pq_train(jax.random.PRNGKey(9), x, m=16, iters=10)
+    rec = pq_decode(cb, pq_encode(cb, x))
+    mse = float(jnp.mean((rec - x) ** 2))
+    assert mse < float(jnp.var(x)) * 0.6
+
+
+def test_pq_adc_correlates_with_true_distance(unit_data):
+    x, q, _ = unit_data
+    cb = pq_train(jax.random.PRNGKey(10), x, m=x.shape[1] // 2, iters=8)
+    codes = pq_encode(cb, x[:2000])
+    lut = pq_lut(cb, q[:1])
+    adc = np.asarray(pq_adc(lut[0], codes))
+    true = np.asarray(((x[:2000] - q[0]) ** 2).sum(-1))
+    corr = np.corrcoef(adc, true)[0, 1]
+    assert corr > 0.95, corr
+
+
+def test_pq_lut_ip_sign():
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (256, 16))
+    cb = pq_train(jax.random.PRNGKey(12), x, m=8, iters=6)
+    q = x[:3]
+    lut = pq_lut_ip(cb, q)
+    codes = pq_encode(cb, x[:100])
+    dec = pq_decode(cb, codes)
+    for i in range(3):
+        adc = np.asarray(pq_adc(lut[i], codes))
+        ip = -np.asarray(dec @ q[i])
+        np.testing.assert_allclose(adc, ip, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,162 @@
+"""Searcher correctness: vectorized rank-compare dedup vs a sequential
+``listVisited`` reference implementation of paper Alg. 5, plus recall and
+DCO-ordering system tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (IndexConfig, build_index, dco_summary, ground_truth,
+                        recall_at_k)
+from repro.core.pq import pq_lut
+from repro.core.kmeans import pairwise_sq_l2
+
+
+def sequential_reference(index, q_np, nprobe, bigk, k):
+    """Faithful sequential Alg. 2 + Alg. 5 in numpy (hash-set listVisited)."""
+    arrays = index.arrays
+    cents = np.asarray(index.centroids)
+    owned = np.asarray(arrays.owned)
+    refs = np.asarray(arrays.refs)
+    refs_other = np.asarray(arrays.refs_other)
+    misc = np.asarray(arrays.misc)
+    bids = np.asarray(arrays.block_ids)
+    bother = np.asarray(arrays.block_other)
+    lut_all = np.asarray(pq_lut(index.codebook, jnp.asarray(q_np)))
+    vectors = np.asarray(index.vectors)
+
+    out_ids, out_dco = [], []
+    for qi in range(q_np.shape[0]):
+        q = q_np[qi]
+        d2 = ((cents - q) ** 2).sum(1)
+        sel = np.argsort(d2, kind="stable")[:nprobe]
+        visited = set()
+        cand = {}
+        dco = 0
+        lut = lut_all[qi]
+        for l in sel:
+            def score_block(b, dedup_items):
+                nonlocal dco
+                for s in range(bids.shape[1]):
+                    vid = bids[b, s]
+                    if vid < 0:
+                        continue
+                    dco += 1
+                    if dedup_items and bother[b, s] >= 0 \
+                            and bother[b, s] in visited:
+                        continue  # computed then discarded (Alg.5 L16)
+                    dist = lut[np.arange(lut.shape[0]),
+                               np.asarray(index.arrays.block_codes)[b, s].astype(int)].sum()
+                    if vid not in cand or dist < cand[vid]:
+                        cand[vid] = dist
+            for b, o in zip(refs[l], refs_other[l]):
+                if b >= 0 and o not in visited:
+                    score_block(b, dedup_items=False)
+            for b in owned[l]:
+                if b < 0:
+                    continue
+                # cell-level compute-once in both directions (see search.py):
+                # skip a home shared block if its co-list was scanned earlier
+                co = bother[b, 0]
+                if co >= 0 and co in visited:
+                    continue
+                score_block(b, dedup_items=False)
+            for b in misc[l]:
+                if b >= 0:
+                    score_block(b, dedup_items=True)
+            visited.add(int(l))
+        top = sorted(cand.items(), key=lambda kv: kv[1])[:bigk]
+        ids = np.array([t[0] for t in top])
+        exact = ((vectors[ids] - q) ** 2).sum(1)
+        out_ids.append(ids[np.argsort(exact, kind="stable")[:k]])
+        out_dco.append(dco)
+    return out_ids, np.array(out_dco)
+
+
+@pytest.mark.parametrize("nprobe", [2, 4, 8])
+def test_vectorized_matches_sequential_alg5(rairs_index, unit_data, nprobe):
+    x, q, _ = unit_data
+    qs = np.asarray(q[:12])
+    k, bigk = 10, 100
+    res = rairs_index.search(jnp.asarray(qs), k=k, nprobe=nprobe,
+                             k_factor=10, max_scan=4096)
+    ref_ids, ref_dco = sequential_reference(rairs_index, qs, nprobe, bigk, k)
+    assert np.asarray(res.dropped_blocks).max() == 0
+    np.testing.assert_array_equal(np.asarray(res.approx_dco), ref_dco)
+    got = np.asarray(res.ids)
+    for i in range(len(qs)):
+        a, b = set(got[i][got[i] >= 0].tolist()), set(ref_ids[i].tolist())
+        # identical modulo distance ties at the boundary
+        assert len(a ^ b) <= 2, (i, a ^ b)
+
+
+def test_no_duplicate_result_ids(rairs_index, unit_data):
+    _, q, _ = unit_data
+    res = rairs_index.search(q[:64], k=10, nprobe=8)
+    ids = np.asarray(res.ids)
+    for row in ids:
+        row = row[row >= 0]
+        assert len(row) == len(np.unique(row))
+
+
+def test_no_duplicates_even_without_seil(unit_data, shared_trained):
+    x, q, _ = unit_data
+    cents, cb = shared_trained
+    cfg = IndexConfig(nlist=64, strategy="srair", seil=False)
+    idx = build_index(jax.random.PRNGKey(0), x, cfg, centroids=cents,
+                      codebook=cb)
+    res = idx.search(q[:64], k=10, nprobe=8)
+    ids = np.asarray(res.ids)
+    for row in ids:
+        row = row[row >= 0]
+        assert len(row) == len(np.unique(row))
+
+
+def test_seil_reduces_dco_same_recall(unit_data, shared_trained):
+    x, q, gt = unit_data
+    cents, cb = shared_trained
+    res = {}
+    for seil in (False, True):
+        cfg = IndexConfig(nlist=64, strategy="srair", seil=seil)
+        idx = build_index(jax.random.PRNGKey(0), x, cfg, centroids=cents,
+                          codebook=cb)
+        r = idx.search(q, k=10, nprobe=8, max_scan=4096)
+        res[seil] = (recall_at_k(np.asarray(r.ids), gt),
+                     dco_summary(r)["approx_dco"])
+    assert res[True][1] < res[False][1], "SEIL must cut approx DCO"
+    assert res[True][0] >= res[False][0] - 0.02
+
+
+def test_recall_increases_with_nprobe(rairs_index, unit_data):
+    _, q, gt = unit_data
+    recalls = []
+    for p in (1, 4, 16):
+        r = rairs_index.search(q, k=10, nprobe=p)
+        recalls.append(recall_at_k(np.asarray(r.ids), gt))
+    assert recalls[0] < recalls[-1]
+    assert recalls[-1] > 0.9
+
+
+def test_exhaustive_probe_high_recall(unit_data, shared_trained):
+    x, q, gt = unit_data
+    cents, cb = shared_trained
+    cfg = IndexConfig(nlist=64, strategy="rair", seil=True)
+    idx = build_index(jax.random.PRNGKey(0), x, cfg, centroids=cents,
+                      codebook=cb)
+    r = idx.search(q[:128], k=10, nprobe=64, k_factor=20, max_scan=8192)
+    assert recall_at_k(np.asarray(r.ids), gt[:128]) > 0.97
+
+
+def test_rair_beats_single_at_fixed_nprobe(unit_data, shared_trained):
+    x, q, gt = unit_data
+    cents, cb = shared_trained
+    rec = {}
+    for strat in ("single", "rair"):
+        cfg = IndexConfig(nlist=64, strategy=strat, seil=(strat == "rair"))
+        idx = build_index(jax.random.PRNGKey(0), x, cfg, centroids=cents,
+                          codebook=cb)
+        r = idx.search(q, k=10, nprobe=4)
+        rec[strat] = recall_at_k(np.asarray(r.ids), gt)
+    assert rec["rair"] > rec["single"], rec

@@ -1,0 +1,141 @@
+"""SEIL layout invariants (paper §5) — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.seil import (build_seil, build_id_map, cell_stats, delete_ids,
+                             vectors_in_large_cells)
+
+
+def _random_case(rng, n, nlist, m_pq=8, frac_single=0.3):
+    l1 = rng.integers(0, nlist, n)
+    l2 = rng.integers(0, nlist, n)
+    single = rng.random(n) < frac_single
+    l2 = np.where(single, l1, l2)
+    assigns = np.sort(np.stack([l1, l2], 1), axis=1).astype(np.int32)
+    codes = rng.integers(0, 16, (n, m_pq)).astype(np.uint8)
+    ids = np.arange(n, dtype=np.int32)
+    return assigns, codes, ids
+
+
+def _occurrences(arrays):
+    ids = np.asarray(arrays.block_ids)
+    valid = ids >= 0
+    return np.bincount(ids[valid], minlength=0)
+
+
+def test_every_vector_stored_correct_multiplicity():
+    rng = np.random.default_rng(0)
+    assigns, codes, ids = _random_case(rng, 2000, 16)
+    arrays, stats = build_seil(assigns, codes, ids, 16, block=32, shared=True)
+    occ = _occurrences(arrays)
+    # multiplicity: 1 for full-shared-block items and single-assigned items
+    # in full blocks; misc items of shared cells appear twice.
+    assert occ.min() >= 1 and occ.max() <= 2
+    assert len(occ) == 2000
+    # duplicated (non-SEIL) layout: once per distinct assigned list
+    arrays2, _ = build_seil(assigns, codes, ids, 16, block=32, shared=False)
+    occ2 = _occurrences(arrays2)
+    expect = 1 + (assigns[:, 0] != assigns[:, 1])
+    assert np.array_equal(occ2, expect)
+
+
+def test_refs_point_to_other_lists_blocks():
+    rng = np.random.default_rng(1)
+    assigns, codes, ids = _random_case(rng, 3000, 12)
+    arrays, _ = build_seil(assigns, codes, ids, 12, block=32, shared=True)
+    owned = np.asarray(arrays.owned)
+    refs = np.asarray(arrays.refs)
+    refs_other = np.asarray(arrays.refs_other)
+    block_other = np.asarray(arrays.block_other)
+    owner_of = {}
+    for l in range(owned.shape[0]):
+        for b in owned[l]:
+            if b >= 0:
+                owner_of[int(b)] = l
+    for l in range(refs.shape[0]):
+        for b, o in zip(refs[l], refs_other[l]):
+            if b < 0:
+                continue
+            assert owner_of[int(b)] == int(o), "ref home mismatch"
+            # a referenced shared block's items carry other == this list
+            assert (block_other[int(b)] == l).all()
+
+
+def test_shared_blocks_are_full_and_stored_once():
+    rng = np.random.default_rng(2)
+    assigns, codes, ids = _random_case(rng, 4000, 8)
+    arrays, stats = build_seil(assigns, codes, ids, 8, block=32, shared=True)
+    owned = np.asarray(arrays.owned)
+    flat = owned[owned >= 0]
+    assert len(flat) == len(np.unique(flat)), "each block owned by one list"
+    bids = np.asarray(arrays.block_ids)
+    misc = np.asarray(arrays.misc)
+    misc_set = set(misc[misc >= 0].tolist())
+    for b in flat:
+        if int(b) in misc_set:
+            continue
+        assert (bids[int(b)] >= 0).all(), "shared-cell blocks are full"
+
+
+def test_memory_savings_match_cell_math():
+    """SEIL item count == n + (duplicated misc items of shared cells)."""
+    rng = np.random.default_rng(3)
+    assigns, codes, ids = _random_case(rng, 5000, 10, frac_single=0.2)
+    arrays, stats = build_seil(assigns, codes, ids, 10, block=32, shared=True)
+    a = assigns
+    keys = a[:, 0].astype(np.int64) * 10 + a[:, 1]
+    uniq, counts = np.unique(keys, return_counts=True)
+    shared_cell = (uniq // 10) != (uniq % 10)
+    dup_misc = (counts % 32)[shared_cell].sum()
+    assert stats.n_items_stored == 5000 + dup_misc
+    _, stats2 = build_seil(assigns, codes, ids, 10, block=32, shared=False)
+    n_dup = (a[:, 0] != a[:, 1]).sum()
+    assert stats2.n_items_stored == 5000 + n_dup
+    assert stats.logical_bytes < stats2.logical_bytes
+
+
+def test_cell_stats_and_large_cell_fraction(rairs_index):
+    frac = vectors_in_large_cells(rairs_index.assigns, block=32)
+    sizes = cell_stats(rairs_index.assigns)["cell_sizes"]
+    assert sizes.sum() == rairs_index.assigns.shape[0]
+    # clustered data ⇒ strong skew: a material fraction in large cells (Fig 5)
+    assert frac > 0.25
+
+
+def test_delete_ids(rairs_index):
+    import jax.numpy as jnp
+    arrays = rairs_index.arrays
+    id_map = build_id_map(arrays)
+    victims = [0, 1, 2, 3, 4]
+    arrays2 = delete_ids(arrays, id_map, victims)
+    ids2 = np.asarray(arrays2.block_ids)
+    for v in victims:
+        assert not (ids2 == v).any()
+    # all other ids retained with unchanged multiplicity
+    ids1 = np.asarray(arrays.block_ids)
+    occ1 = np.bincount(ids1[ids1 >= 5], minlength=0)
+    occ2 = np.bincount(ids2[ids2 >= 5], minlength=0)
+    assert np.array_equal(occ1, occ2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(50, 800),
+       nlist=st.integers(2, 24), block=st.sampled_from([8, 32, 64]),
+       frac=st.floats(0.0, 1.0))
+def test_property_layout_invariants(seed, n, nlist, block, frac):
+    rng = np.random.default_rng(seed)
+    assigns, codes, ids = _random_case(rng, n, nlist, frac_single=frac)
+    arrays, stats = build_seil(assigns, codes, ids, nlist, block=block,
+                               shared=True)
+    occ = _occurrences(arrays)
+    assert len(occ) == n and occ.min() >= 1 and occ.max() <= 2
+    # codes survive the layout round trip
+    bids = np.asarray(arrays.block_ids)
+    bcodes = np.asarray(arrays.block_codes)
+    bs, ss = np.nonzero(bids >= 0)
+    for b, s in zip(bs[:200], ss[:200]):
+        assert np.array_equal(bcodes[b, s], codes[bids[b, s]])
+    # stats bookkeeping
+    assert stats.n_items_stored == int((bids >= 0).sum())
+    assert stats.n_blocks == bids.shape[0]

@@ -1,0 +1,88 @@
+"""End-to-end system behaviour tests for RAIRS (paper-level claims at
+unit scale) + insert/delete lifecycle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (IndexConfig, build_index, dco_summary, ground_truth,
+                        insert_batch, recall_at_k)
+from repro.core.seil import build_id_map, delete_ids
+
+
+def test_end_to_end_recall_dco_tradeoff(rairs_index, unit_data):
+    _, q, gt = unit_data
+    prev_dco = 0
+    for p in (2, 8, 32):
+        r = rairs_index.search(q, k=10, nprobe=p, k_factor=20)
+        s = dco_summary(r)
+        assert s["approx_dco"] > prev_dco
+        prev_dco = s["approx_dco"]
+    assert recall_at_k(np.asarray(r.ids), gt) > 0.95
+
+
+def test_strategies_all_build_and_search(unit_data, shared_trained):
+    x, q, gt = unit_data
+    cents, cb = shared_trained
+    for strat in ("single", "naive", "soar", "rair", "srair"):
+        for seil in ((False,) if strat == "single" else (False, True)):
+            cfg = IndexConfig(nlist=64, strategy=strat, seil=seil)
+            idx = build_index(jax.random.PRNGKey(0), x, cfg,
+                              centroids=cents, codebook=cb)
+            r = idx.search(q[:128], k=10, nprobe=8)
+            rec = recall_at_k(np.asarray(r.ids), gt[:128])
+            assert rec > 0.5, (strat, seil, rec)
+            assert not np.isnan(np.asarray(r.dists)).any()
+
+
+def test_insert_batch_preserves_and_extends(unit_data, shared_trained):
+    x, q, gt = unit_data
+    cents, cb = shared_trained
+    cfg = IndexConfig(nlist=64, strategy="rair", seil=True)
+    n0 = 5000
+    idx = build_index(jax.random.PRNGKey(0), x[:n0], cfg, centroids=cents,
+                      codebook=cb)
+    idx2 = insert_batch(idx, x[n0:])
+    assert idx2.vectors.shape[0] == x.shape[0]
+    r = idx2.search(q, k=10, nprobe=16)
+    assert recall_at_k(np.asarray(r.ids), gt) > 0.85
+    # inserted ids must be retrievable: query at an inserted point
+    probe = x[n0 + 7][None, :]
+    r2 = idx2.search(probe, k=1, nprobe=16)
+    assert int(np.asarray(r2.ids)[0, 0]) == n0 + 7
+
+
+def test_delete_then_search_excludes(unit_data, rairs_index):
+    x, q, _ = unit_data
+    probe = x[42][None, :]
+    r = rairs_index.search(probe, k=1, nprobe=16)
+    assert int(np.asarray(r.ids)[0, 0]) == 42
+    id_map = build_id_map(rairs_index.arrays)
+    arrays2 = delete_ids(rairs_index.arrays, id_map, [42])
+    idx2 = dataclasses.replace(rairs_index, arrays=arrays2)
+    r2 = idx2.search(probe, k=1, nprobe=16)
+    assert int(np.asarray(r2.ids)[0, 0]) != 42
+
+
+def test_multi_assignment_builds(unit_data, shared_trained):
+    x, q, gt = unit_data
+    cents, cb = shared_trained
+    cfg = IndexConfig(nlist=64, strategy="srair", seil=False, multi_m=3,
+                      aggr="max")
+    idx = build_index(jax.random.PRNGKey(0), x, cfg, centroids=cents,
+                      codebook=cb)
+    assert idx.assigns.shape[1] == 3
+    r = idx.search(q[:128], k=10, nprobe=4)
+    assert recall_at_k(np.asarray(r.ids), gt[:128]) > 0.5
+
+
+def test_inner_product_metric():
+    from repro.data import make_dataset
+    x, q, spec = make_dataset("unit_ip")
+    cfg = IndexConfig(nlist=64, strategy="soar", seil=True, metric="ip")
+    idx = build_index(jax.random.PRNGKey(0), x, cfg)
+    gt = ground_truth(x, q, 10, metric="ip")
+    r = idx.search(q, k=10, nprobe=16)
+    assert recall_at_k(np.asarray(r.ids), gt) > 0.7
