@@ -72,14 +72,15 @@ def get_context(dataset: str, nlist: int = 256, n_queries: Optional[int] = None
 
 
 def timed_search(idx: RairsIndex, q, *, k, nprobe, k_factor=10,
-                 chunk: int = 256, repeats: int = 1):
+                 chunk: int = 256, repeats: int = 1,
+                 exec_mode: str = "paged"):
     """Run chunked search; returns (merged result arrays, us_per_query)."""
     nq = q.shape[0]
     outs = []
     # warmup/compile on first chunk shape
     first = min(chunk, nq)
-    idx.search(q[:first], k=k, nprobe=nprobe, k_factor=k_factor
-               ).ids.block_until_ready()
+    idx.search(q[:first], k=k, nprobe=nprobe, k_factor=k_factor,
+               exec_mode=exec_mode).ids.block_until_ready()
     t0 = time.perf_counter()
     for _ in range(repeats):
         outs = []
@@ -88,10 +89,12 @@ def timed_search(idx: RairsIndex, q, *, k, nprobe, k_factor=10,
             if qc.shape[0] < first and s > 0:
                 pad = first - qc.shape[0]
                 qc = jnp.concatenate([qc, qc[:1].repeat(pad, 0)], 0)
-                r = idx.search(qc, k=k, nprobe=nprobe, k_factor=k_factor)
+                r = idx.search(qc, k=k, nprobe=nprobe, k_factor=k_factor,
+                               exec_mode=exec_mode)
                 r = jax.tree.map(lambda a: a[:q[s:s + chunk].shape[0]], r)
             else:
-                r = idx.search(qc, k=k, nprobe=nprobe, k_factor=k_factor)
+                r = idx.search(qc, k=k, nprobe=nprobe, k_factor=k_factor,
+                               exec_mode=exec_mode)
             outs.append(jax.tree.map(np.asarray, r))
     dt = (time.perf_counter() - t0) / repeats
     merged = jax.tree.map(lambda *a: np.concatenate(a, 0), *outs)

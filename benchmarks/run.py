@@ -43,6 +43,7 @@ def main() -> None:
         ("fig17", lambda: suite.bench_seil_soar()),
         ("table3", lambda: suite.bench_match_table(
             main_sets if args.full else ("sift1m",))),
+        ("engine_modes", lambda: suite.bench_exec_modes()),
         ("kernels", lambda: suite.bench_kernels()),
     ]
     print("name,us_per_call,derived")

@@ -363,6 +363,46 @@ def bench_cells(dataset="sift1m"):
     return out
 
 
+def bench_exec_modes(dataset="sift1m", k=10, nprobes=(4, 8, 16, 32)):
+    """Engine exec-mode study (paper §5.3): recall vs QPS for per-query
+    paged scanning vs list-major grouped (batch-union) execution of the
+    same RAIRS index.  Also asserts result equivalence at every point —
+    the modes differ only in memory-access schedule, never in output."""
+    ctx = get_context(dataset, n_queries=256)
+    idx = ctx.index("rair", True)
+    gt = ctx.gt(k)
+    out = {"paged": [], "grouped": []}
+    mismatches = 0
+    for nprobe in nprobes:
+        per_mode = {}
+        for mode in ("paged", "grouped"):
+            res, us = timed_search(idx, ctx.q, k=k, nprobe=nprobe,
+                                   chunk=64, exec_mode=mode)
+            per_mode[mode] = res
+            out[mode].append({
+                "nprobe": nprobe,
+                "recall": recall_at_k(res.ids, gt),
+                "qps": 1e6 / us,
+                "us_per_query": us,
+                "dco": dco_summary(res)["total_dco"],
+            })
+        if not np.array_equal(per_mode["paged"].ids, per_mode["grouped"].ids):
+            mismatches += 1
+    rows_p, rows_g = out["paged"], out["grouped"]
+    for rp, rg in zip(rows_p, rows_g):
+        emit(f"engine_exec_modes/{dataset}/nprobe{rp['nprobe']}",
+             rp["us_per_query"],
+             f"paged_qps={rp['qps']:.0f} grouped_qps={rg['qps']:.0f} "
+             f"recall={rp['recall']:.4f} "
+             f"grouped/paged_qps={rg['qps'] / rp['qps']:.3f}")
+    emit(f"engine_exec_modes/{dataset}/equivalence", 0.0,
+         f"id_mismatch_points={mismatches}")
+    out["id_mismatch_points"] = mismatches
+    save_json("engine_exec_modes", out)
+    assert mismatches == 0, "grouped mode must return identical ids"
+    return out
+
+
 def bench_kernels():
     """Kernel microbench: jnp oracle vs Pallas path on one workload.
     (CPU interpret-mode timing is NOT TPU perf — roofline covers that.)"""

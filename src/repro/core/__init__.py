@@ -6,6 +6,9 @@ the static-shape deduplicating searcher with exact refinement.
 """
 from .assign import (rair_assign, rair_assign_multi, single_assign,  # noqa
                      candidate_lists, air_skip_fraction)
+from .engine import (EXEC_MODES, BlockStore, ListSelection, ListTables,  # noqa
+                     QueryPlan, ScanOut, plan_blocks, scan_blocks,
+                     select_lists, finalize_candidates)
 from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
 from .kmeans import kmeans_fit, kmeans_step_sharded, pairwise_sq_l2  # noqa
 from .metrics import ground_truth, recall_at_k, per_query_recall, dco_summary  # noqa

@@ -28,9 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .engine import BIG, finalize_candidates
+from .engine.select import rank_table as _rank_table
 from .kmeans import pairwise_sq_l2
 from .pq import PQCodebook, pq_decode
-from .search import BIG, SearchResult, _rank_table, finalize_candidates
+from .search import SearchResult
 from .seil import SeilArrays
 
 

@@ -10,27 +10,28 @@ Sharding scheme (DESIGN.md §4):
     MBs, not GBs);
   * refine vectors shard by vector-id range over the same axes.
 
-Per query batch each device: selects lists (replicated compute),
-builds the deduplicated candidate block set (identical on every
-device), masks it to its local block range, scans locally (the same
-SEIL semantics as core/search.py), and produces a local top-bigK.
-One `all_gather` of (bigK ids, dists) per device merges candidates;
+Per query batch each device composes the SAME engine stages as the
+single-host searcher (core/engine/, DESIGN.md §5): ``select_lists``
+runs replicated, ``plan_blocks`` windows the deduplicated candidate
+set to the device's block range (``local_lo``/``local_count``), and
+``scan_blocks`` scans the local ``BlockStore`` in either exec mode
+("paged" per-query paging or "grouped" list-major batching).  A local
+top-bigK plus one `all_gather` of (bigK ids, dists) merges candidates;
 refinement scores each candidate on its owner device and a `pmin`
 reduces exact distances — two small collectives per batch instead of
 moving vector data.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from .kmeans import pairwise_sq_l2
-from .pq import pq_lut
-from .search import BIG, _rank_table, SearchResult
+from ..dist import shard_map
+from .engine import (BlockStore, ListTables, plan_blocks, scan_blocks,
+                     select_lists)
 
 
 class DistSearchResult(NamedTuple):
@@ -39,92 +40,37 @@ class DistSearchResult(NamedTuple):
     local_dco: jnp.ndarray     # (B,) per-device approx DCO (psum'd)
 
 
-def _local_scan(arrays_local, block_lo, lut, cand, cand_rank, rank_of,
-                bq, blk, max_scan_local):
-    """Scan candidate blocks that live in [block_lo, block_lo+TBl)."""
-    tbl = arrays_local["block_ids"].shape[0]
-    rel = cand - block_lo
-    mine = (cand >= 0) & (rel >= 0) & (rel < tbl)
-    rel = jnp.where(mine, rel, -1)
-    # compact to the local static budget
-    max_scan_local = min(max_scan_local, rel.shape[1])
-    pos = jnp.arange(rel.shape[1], dtype=jnp.int32)
-    key = jnp.where(mine, BIG - pos, -1 - pos)
-    _, take = jax.lax.top_k(key, max_scan_local)
-    blocks = jnp.take_along_axis(rel, take, axis=1)
-    branks = jnp.take_along_axis(cand_rank, take, axis=1)
-    bvalid = blocks >= 0
-    safe = jnp.maximum(blocks, 0)
-
-    codes = arrays_local["block_codes"][safe]            # (B, S, BLK, M)
-    g = jnp.take_along_axis(
-        lut[:, None, None, :, :], codes.astype(jnp.int32)[..., None],
-        axis=-1)
-    dists = jnp.sum(g[..., 0], axis=-1)
-    ids = arrays_local["block_ids"][safe]
-    other = arrays_local["block_other"][safe]
-    o_rank = jnp.take_along_axis(
-        rank_of, jnp.maximum(other, 0).reshape(bq, -1), axis=1
-    ).reshape(other.shape)
-    dup = (other >= 0) & (o_rank < branks[:, :, None])
-    ok = (ids >= 0) & bvalid[:, :, None]
-    keep = ok & ~dup
-    dco = ok.sum(axis=(1, 2)).astype(jnp.int32)
-    return jnp.where(keep, dists, jnp.inf).reshape(bq, -1), \
-        ids.reshape(bq, -1), dco
-
-
 def make_distributed_serve_step(nlist: int, nprobe: int, bigk: int, k: int,
-                                max_scan_local: int, axes=("data",)):
+                                max_scan_local: int, axes=("data",),
+                                exec_mode: str = "paged",
+                                query_tile: int = 8):
     """Returns serve(arrays, tables, centroids, codebook_dec, vectors,
     queries) for use inside shard_map (see distributed_search)."""
 
     def serve(block_codes, block_ids, block_other, owned, owned_other,
               refs, refs_other, misc, centroids, lut_codebooks, vectors,
               vec_lo, block_lo, queries):
-        bq = queries.shape[0]
-        blk = block_ids.shape[1]
-        # -- replicated control path: list selection + dedup (identical
-        # on every device; no collective needed)
-        cd = pairwise_sq_l2(queries, centroids)
-        _, sel = jax.lax.top_k(-cd, nprobe)
-        sel = sel.astype(jnp.int32)
-        rank_of = _rank_table(sel, nlist)
-        ow = owned[sel]
-        rf = refs[sel]
-        ro = refs_other[sel]
-        mi = misc[sel]
-        t = jnp.arange(nprobe, dtype=jnp.int32)[None, :, None]
+        # -- replicated control path: list selection + dedup + local plan
+        # (identical on every device; no collective needed)
+        selection = select_lists(queries, centroids, nprobe=nprobe,
+                                 metric="l2")
+        tables = ListTables(owned=owned, owned_other=owned_other, refs=refs,
+                            refs_other=refs_other, misc=misc)
+        plan = plan_blocks(tables, selection, max_scan=max_scan_local,
+                           local_lo=block_lo[0],
+                           local_count=block_ids.shape[0])
 
-        def visited_earlier(other_list):
-            r = jnp.take_along_axis(
-                rank_of, jnp.maximum(other_list, 0).reshape(bq, -1), axis=1
-            ).reshape(other_list.shape)
-            return (other_list >= 0) & (r < t)
-
-        rf = jnp.where(visited_earlier(ro), -1, rf)
-        # home shared blocks: skip if co-list scanned earlier (its ref
-        # entry already computed the cell) — same as core/search.py
-        oo = owned_other[sel]
-        ow = jnp.where(visited_earlier(oo), -1, ow)
-        cand = jnp.concatenate([ow.reshape(bq, -1), rf.reshape(bq, -1),
-                                mi.reshape(bq, -1)], axis=1)
-        cand_rank = jnp.concatenate(
-            [jnp.broadcast_to(t, ow.shape).reshape(bq, -1),
-             jnp.broadcast_to(t, rf.shape).reshape(bq, -1),
-             jnp.broadcast_to(t, mi.shape).reshape(bq, -1)], axis=1)
-
-        # -- local scan over owned block range
+        # -- local scan over the device's block shard
         lut = pq_lut_from_tables(lut_codebooks, queries)
-        arrays_local = {"block_codes": block_codes, "block_ids": block_ids,
-                        "block_other": block_other}
-        flat_d, flat_i, dco = _local_scan(
-            arrays_local, block_lo[0], lut, cand, cand_rank, rank_of, bq,
-            blk, max_scan_local)
+        store = BlockStore(block_codes=block_codes, block_ids=block_ids,
+                           block_other=block_other)
+        scan = scan_blocks(store, plan, lut, selection.rank_of,
+                           exec_mode=exec_mode, query_tile=query_tile)
 
         # -- local top-bigK, then one all_gather to merge
-        neg, pos = jax.lax.top_k(-flat_d, min(bigk, flat_d.shape[1]))
-        l_ids = jnp.take_along_axis(flat_i, pos, axis=1)
+        neg, pos = jax.lax.top_k(-scan.flat_d,
+                                 min(bigk, scan.flat_d.shape[1]))
+        l_ids = jnp.take_along_axis(scan.flat_i, pos, axis=1)
         l_d = -neg
         g_ids = jax.lax.all_gather(l_ids, axes, axis=1, tiled=True)
         g_d = jax.lax.all_gather(l_d, axes, axis=1, tiled=True)
@@ -146,7 +92,7 @@ def make_distributed_serve_step(nlist: int, nprobe: int, bigk: int, k: int,
         out_d = -negk
         out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
         return DistSearchResult(ids=out_ids, dists=out_d,
-                                local_dco=jax.lax.psum(dco, axes))
+                                local_dco=jax.lax.psum(scan.approx_dco, axes))
 
     return serve
 
@@ -162,7 +108,8 @@ def pq_lut_from_tables(codebooks, queries):
 
 def distributed_search(index, mesh: Mesh, queries, *, nprobe: int, k: int,
                        k_factor: int = 10, max_scan_local: int = 512,
-                       axes=("data",)):
+                       axes=("data",), exec_mode: str = "paged",
+                       query_tile: int = 8):
     """Host-callable wrapper: pads + shards a RairsIndex over `axes` and
     runs the shard_map serve step (used by tests and launch/serve)."""
     import numpy as np
@@ -195,18 +142,18 @@ def distributed_search(index, mesh: Mesh, queries, *, nprobe: int, k: int,
 
     serve = make_distributed_serve_step(
         nlist=index.config.nlist, nprobe=nprobe, bigk=k * k_factor, k=k,
-        max_scan_local=max_scan_local, axes=axes)
+        max_scan_local=max_scan_local, axes=axes, exec_mode=exec_mode,
+        query_tile=query_tile)
     spec_sharded = P(axes)
     spec_rep = P()
-    fn = jax.shard_map(
+    fn = shard_map(
         serve, mesh=mesh,
         in_specs=(spec_sharded, spec_sharded, spec_sharded, spec_rep,
                   spec_rep, spec_rep, spec_rep, spec_rep, spec_rep,
                   spec_rep, spec_sharded, spec_sharded, spec_sharded,
                   spec_rep),
         out_specs=DistSearchResult(ids=spec_rep, dists=spec_rep,
-                                   local_dco=spec_rep),
-        check_vma=False)
+                                   local_dco=spec_rep))
     return fn(codes, bids, both, arrays.owned, jnp.asarray(owned_other),
               arrays.refs, arrays.refs_other, arrays.misc, index.centroids,
               index.codebook.codebooks, vecs, vec_lo, block_lo, queries)

@@ -1,0 +1,47 @@
+"""Stage 4 — top-bigK candidate selection, id-dedup, exact refinement."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import BIG
+
+
+def finalize_candidates(flat_d, flat_i, *, bigk, k, vectors, queries,
+                        metric, dedup_results, oversample: int = 2):
+    """Shared tail of all search paths: top-bigK (+ optional id-dedup for
+    duplicated layouts), exact-distance refinement, top-K packing.
+
+    Duplicated layouts (no SEIL / m-assignment) retrieve `oversample*bigK`
+    candidates before id-dedup so duplicate copies cannot displace unique
+    candidates (a dedup-on-insert result queue), then truncate to bigK."""
+    bq = flat_d.shape[0]
+    fetch = bigk * (oversample if dedup_results else 1)
+    fetch = min(fetch, flat_d.shape[1])
+    neg, pos = jax.lax.top_k(-flat_d, fetch)
+    cand_ids = jnp.take_along_axis(flat_i, pos, axis=1)      # (B, fetch)
+    cand_d = -neg                                            # ascending
+    cand_ok = jnp.isfinite(cand_d)
+    if dedup_results:  # needed for layouts without SEIL (duplicated storage)
+        order = jnp.argsort(jnp.where(cand_ok, cand_ids, BIG), axis=1)
+        sid = jnp.take_along_axis(cand_ids, order, axis=1)
+        rep = jnp.concatenate(
+            [jnp.zeros((bq, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1)
+        inv = jnp.argsort(order, axis=1)
+        cand_ok &= ~jnp.take_along_axis(rep, inv, axis=1)
+        cand_ok &= jnp.cumsum(cand_ok, axis=1) <= bigk       # truncate
+    cand_ids = jnp.where(cand_ok, cand_ids, -1)
+
+    cv = vectors[jnp.maximum(cand_ids, 0)]                   # (B, bigK, D)
+    if metric == "l2":
+        diff = cv - queries[:, None, :]
+        exact = jnp.sum(diff * diff, axis=-1)
+    else:
+        exact = -jnp.einsum("bkd,bd->bk", cv, queries)
+    exact = jnp.where(cand_ok, exact, jnp.inf)
+    refine_dco = jnp.sum(cand_ok, axis=1).astype(jnp.int32)
+    negk, posk = jax.lax.top_k(-exact, k)
+    out_ids = jnp.take_along_axis(cand_ids, posk, axis=1)
+    out_d = -negk
+    out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
+    return out_ids, out_d, refine_dco

@@ -1,0 +1,94 @@
+"""Stage 2 — candidate block gathering, cell-level dedup, compaction.
+
+This is the vectorized form of Alg. 5's ``listVisited`` probe: a
+reference (or home shared) block is skipped iff the cell's other list
+was scanned at an earlier probe rank.  The surviving candidates are
+compacted to a static scan budget, preserving owned -> refs -> misc
+order (each rank-ascending), so downstream shapes are jit-static.
+
+``plan_blocks`` optionally windows the candidate set to a contiguous
+physical block range and rebases ids — that is the whole difference
+between the single-host and the shard_map execution of the pipeline.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import BIG, ListSelection, ListTables, QueryPlan
+
+
+def gather_candidates(tables: ListTables, selection: ListSelection
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query candidate block ids + scan ranks, after cell-level dedup.
+
+    Returns (cand, cand_rank), both (B, P*(MO+MR+MM)); skipped / padded
+    entries are -1 in ``cand``.
+    """
+    sel, rank_of = selection.sel, selection.rank_of
+    bq, nprobe = sel.shape
+    owned = tables.owned[sel]                      # (B, P, MO)
+    owned_other = tables.owned_other[sel]
+    refs = tables.refs[sel]                        # (B, P, MR)
+    refs_other = tables.refs_other[sel]
+    misc = tables.misc[sel]                        # (B, P, MM)
+    t = jnp.arange(nprobe, dtype=jnp.int32)[None, :, None]
+
+    def visited_earlier(other_list):
+        r = jnp.take_along_axis(
+            rank_of, jnp.maximum(other_list, 0).reshape(bq, -1), axis=1
+        ).reshape(other_list.shape)
+        return (other_list >= 0) & (r < t)
+
+    # reference entries: skip if the home list was scanned earlier (Alg. 5 L7)
+    refs = jnp.where(visited_earlier(refs_other), -1, refs)
+    # home shared blocks: skip if the co-assigned list was scanned earlier —
+    # its reference entry already computed this cell.  (Alg. 5's pseudocode
+    # only checks the ref->home direction and would re-compute the cell when
+    # the referencing list is probed first; we implement the stated
+    # cell-level compute-once semantics in both directions. See DESIGN.md.)
+    owned = jnp.where(visited_earlier(owned_other), -1, owned)
+
+    def flat(tbl):
+        return tbl.reshape(bq, -1)
+    cand = jnp.concatenate([flat(owned), flat(refs), flat(misc)], axis=1)
+    cand_rank = jnp.concatenate([
+        flat(jnp.broadcast_to(t, owned.shape)),
+        flat(jnp.broadcast_to(t, refs.shape)),
+        flat(jnp.broadcast_to(t, misc.shape))], axis=1)
+    return cand, cand_rank
+
+
+def compact_plan(cand: jnp.ndarray, cand_rank: jnp.ndarray, max_scan: int
+                 ) -> QueryPlan:
+    """Stable compaction of valid candidates to a static budget: valid
+    blocks first, preserving position order (positions already run
+    owned -> refs -> misc, each rank-ascending)."""
+    max_scan = min(max_scan, cand.shape[1])    # static shapes; safe under jit
+    valid = cand >= 0
+    n_valid = jnp.sum(valid, axis=1).astype(jnp.int32)
+    dropped = jnp.maximum(n_valid - max_scan, 0).astype(jnp.int32)
+    pos = jnp.arange(cand.shape[1], dtype=jnp.int32)
+    key = jnp.where(valid, BIG - pos, -1 - pos)
+    _, take = jax.lax.top_k(key, max_scan)
+    blocks = jnp.take_along_axis(cand, take, axis=1)        # (B, S)
+    ranks = jnp.take_along_axis(cand_rank, take, axis=1)    # (B, S)
+    bvalid = jnp.take_along_axis(valid, take, axis=1)
+    return QueryPlan(blocks=jnp.maximum(blocks, 0), ranks=ranks,
+                     valid=bvalid, dropped=dropped)
+
+
+def plan_blocks(tables: ListTables, selection: ListSelection, *,
+                max_scan: int, local_lo: Optional[jnp.ndarray] = None,
+                local_count: Optional[int] = None) -> QueryPlan:
+    """Gather + dedup + compact.  With ``local_lo``/``local_count`` the
+    candidate set is windowed to physical blocks [lo, lo+count) and ids
+    are rebased to the local store (the shard_map path)."""
+    cand, cand_rank = gather_candidates(tables, selection)
+    if local_lo is not None:
+        rel = cand - local_lo
+        mine = (cand >= 0) & (rel >= 0) & (rel < local_count)
+        cand = jnp.where(mine, rel, -1)
+    return compact_plan(cand, cand_rank, max_scan)

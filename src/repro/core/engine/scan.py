@@ -1,0 +1,125 @@
+"""Stage 3 — ADC scan of the planned blocks, in one of two exec modes.
+
+``paged``   : every query pages its own scan list — one (block, query)
+              fetch per plan entry.  This is the classic per-query IVF
+              scan (kernel: ``pq_scan_paged`` with query_tile=1).
+
+``grouped`` : the paper's §5.3 cache optimization ("group tasks by
+              list"), batch-union form.  The union of all blocks planned
+              by *any* query in the batch is materialized once, sorted
+              by physical block id; each union block is fetched once per
+              query tile and scored for the whole tile while resident
+              (kernel: ``pq_scan_grouped``).  Per-query distances are
+              then scattered back into the plan layout via a sorted-
+              union ``searchsorted``, so everything downstream —
+              item masks, DCO counters, top-K — is byte-for-byte the
+              same computation as paged mode.  HBM traffic drops from
+              sum_q |plan_q| block fetches to |union_batch| * ceil(B/QT);
+              logical DCO accounting is unchanged by construction.
+
+The union budget is ``min(B*S, TB)`` — an upper bound on the number of
+distinct planned blocks — so grouped mode can never drop a block the
+paged plan would scan: results are bitwise identical (asserted in
+tests/test_engine.py).
+
+Item-level masks (shared by both modes): invalid slots, and misc items
+whose co-assigned list was scanned at an earlier rank (their cell was
+already computed — Alg. 5 L15-16; the DCO is still counted, SEIL cannot
+avoid computing a misc duplicate before discarding it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import BIG, BlockStore, QueryPlan, ScanOut
+
+EXEC_MODES = ("paged", "grouped")
+
+
+def _adc_gather(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut (B, M, K), codes (B, S, BLK, M) -> (B, S, BLK) ADC distances."""
+    g = jnp.take_along_axis(
+        lut[:, None, None, :, :], codes.astype(jnp.int32)[..., None],
+        axis=-1)
+    return jnp.sum(g[..., 0], axis=-1)
+
+
+def _fit_query_tile(b: int, query_tile: int) -> int:
+    qt = max(1, min(query_tile, b))
+    while b % qt:
+        qt -= 1
+    return qt
+
+
+def batch_union(plan: QueryPlan, total_blocks: int) -> jnp.ndarray:
+    """Sorted union of all valid planned block ids across the batch,
+    padded with BIG.  Static width min(B*S, TB) >= |union| always."""
+    b, s = plan.blocks.shape
+    u = min(b * s, total_blocks)
+    allb = jnp.where(plan.valid, plan.blocks, BIG).reshape(-1)
+    srt = jnp.sort(allb)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), srt[1:] != srt[:-1]])
+    uniq = jnp.where(first & (srt < BIG), srt, BIG)
+    return jnp.sort(uniq)[:u]                      # ascending unique + pad
+
+
+def _scan_paged(store: BlockStore, plan: QueryPlan, lut, use_kernel: bool):
+    if use_kernel:
+        from ...kernels.ops import pq_scan_paged
+        return pq_scan_paged(lut, store.block_codes, plan.blocks)
+    codes = store.block_codes[plan.blocks]         # (B, S, BLK, M)
+    return _adc_gather(lut, codes)
+
+
+def _scan_grouped(store: BlockStore, plan: QueryPlan, lut,
+                  use_kernel: bool, query_tile: int):
+    b, s = plan.blocks.shape
+    union = batch_union(plan, store.block_codes.shape[0])   # (U,)
+    safe_union = jnp.where(union < BIG, union, 0)
+    if use_kernel:
+        from ...kernels.ops import pq_scan_grouped
+        qt = _fit_query_tile(b, query_tile)
+        dists_u = pq_scan_grouped(lut, store.block_codes, safe_union,
+                                  query_tile=qt)            # (B, U, BLK)
+    else:
+        codes_u = store.block_codes[safe_union]             # (U, BLK, M)
+        dists_u = _adc_gather(
+            lut, jnp.broadcast_to(codes_u[None], (b,) + codes_u.shape))
+    # scatter back to the plan layout: every valid plan block is in the
+    # sorted union, so searchsorted finds its exact position
+    pos = jnp.searchsorted(union, plan.blocks.reshape(-1)).reshape(b, s)
+    pos = jnp.minimum(pos, union.shape[0] - 1)
+    return jnp.take_along_axis(dists_u, pos[:, :, None], axis=1)
+
+
+def scan_blocks(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
+                rank_of: jnp.ndarray, *, exec_mode: str = "paged",
+                use_kernel: bool = False, query_tile: int = 8) -> ScanOut:
+    """ADC distances + item masks + DCO for the planned blocks.
+
+    lut: (B, M, K) per-query subspace tables; rank_of: (B, nlist).
+    """
+    assert exec_mode in EXEC_MODES, exec_mode
+    bq = plan.blocks.shape[0]
+    if exec_mode == "grouped":
+        dists = _scan_grouped(store, plan, lut, use_kernel, query_tile)
+    else:
+        dists = _scan_paged(store, plan, lut, use_kernel)
+
+    ids = store.block_ids[plan.blocks]             # (B, S, BLK)
+    other = store.block_other[plan.blocks]
+    o_rank = jnp.take_along_axis(
+        rank_of, jnp.maximum(other, 0).reshape(bq, -1), axis=1
+    ).reshape(other.shape)
+    dup_item = (other >= 0) & (o_rank < plan.ranks[:, :, None])
+    item_ok = (ids >= 0) & plan.valid[:, :, None]
+    keep = item_ok & ~dup_item
+    # DCO: SEIL computes misc duplicates then discards them (Alg.5 L15-16)
+    approx_dco = jnp.sum(item_ok, axis=(1, 2)).astype(jnp.int32)
+    return ScanOut(
+        flat_d=jnp.where(keep, dists, jnp.inf).reshape(bq, -1),
+        flat_i=ids.reshape(bq, -1),
+        approx_dco=approx_dco,
+        scanned_blocks=jnp.sum(plan.valid, axis=1).astype(jnp.int32))

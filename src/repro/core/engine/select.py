@@ -1,0 +1,26 @@
+"""Stage 1 — centroid scoring and top-nprobe list selection (Alg. 2 L1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kmeans import pairwise_sq_l2
+from .types import BIG, ListSelection
+
+
+def rank_table(sel: jnp.ndarray, nlist: int) -> jnp.ndarray:
+    """(B, P) ranked selected lists -> (B, nlist) rank (BIG if unselected)."""
+    b, p = sel.shape
+    ranks = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (b, p))
+    table = jnp.full((b, nlist), BIG, jnp.int32)
+    return table.at[jnp.arange(b)[:, None], sel].min(ranks)
+
+
+def select_lists(queries: jnp.ndarray, centroids: jnp.ndarray, *,
+                 nprobe: int, metric: str = "l2") -> ListSelection:
+    """Score list centroids, keep the top-nprobe per query (rank-ordered)."""
+    cd = (pairwise_sq_l2(queries, centroids) if metric == "l2"
+          else -(queries @ centroids.T))
+    _, sel = jax.lax.top_k(-cd, nprobe)            # ascending distance
+    sel = sel.astype(jnp.int32)
+    return ListSelection(sel=sel, rank_of=rank_table(sel, centroids.shape[0]))

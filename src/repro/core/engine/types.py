@@ -1,0 +1,80 @@
+"""Pytrees exchanged between the engine stages (all shapes static).
+
+The engine decomposes a query batch into four stages (DESIGN.md §5):
+
+    select_lists -> ListSelection      (which lists, at which probe rank)
+    plan_blocks  -> QueryPlan          (which physical blocks, deduplicated,
+                                        compacted to a static scan budget)
+    scan_blocks  -> ScanOut            (ADC distance per surviving item)
+    finalize_candidates                (top-bigK, id-dedup, exact refine)
+
+Each stage is a pure jittable function over these containers, so the
+single-host searcher (core/search.py) and the shard_map serving step
+(core/distributed.py) are thin compositions of the same code — the
+distributed path only swaps in a locally-sharded ``BlockStore`` and a
+block-range window on the plan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+BIG = jnp.int32(2 ** 30)
+
+
+class ListSelection(NamedTuple):
+    """Stage-1 output: ranked probed lists per query."""
+    sel: jnp.ndarray       # (B, P) int32 list ids, ascending centroid distance
+    rank_of: jnp.ndarray   # (B, nlist) int32 probe rank, BIG if unselected
+
+
+class ListTables(NamedTuple):
+    """Replicated per-list block tables (the SEIL directory, seil.py)."""
+    owned: jnp.ndarray        # (nlist, MO) int32 block ids, -1 pad
+    owned_other: jnp.ndarray  # (nlist, MO) int32 co-list of shared owned blocks
+    refs: jnp.ndarray         # (nlist, MR) int32 referenced block ids, -1 pad
+    refs_other: jnp.ndarray   # (nlist, MR) int32 physical-home list, -1 pad
+    misc: jnp.ndarray         # (nlist, MM) int32 misc block ids, -1 pad
+
+
+class BlockStore(NamedTuple):
+    """Flat physical block storage — global on one host, a shard under
+    shard_map (block ids inside a QueryPlan are relative to this store)."""
+    block_codes: jnp.ndarray  # (TB, BLK, M) uint8
+    block_ids: jnp.ndarray    # (TB, BLK) int32, -1 invalid
+    block_other: jnp.ndarray  # (TB, BLK) int32 co-assigned list, -1 none
+
+
+class QueryPlan(NamedTuple):
+    """Stage-2 output: per-query scan list, compacted to a static budget."""
+    blocks: jnp.ndarray    # (B, S) int32 store-relative block ids (pad -> 0)
+    ranks: jnp.ndarray     # (B, S) int32 probe rank of each block's scan
+    valid: jnp.ndarray     # (B, S) bool
+    dropped: jnp.ndarray   # (B,) int32 candidates lost to the budget
+
+
+class ScanOut(NamedTuple):
+    """Stage-3 output: flat per-item candidate distances (inf = masked)."""
+    flat_d: jnp.ndarray          # (B, S*BLK) f32
+    flat_i: jnp.ndarray          # (B, S*BLK) int32 vector ids
+    approx_dco: jnp.ndarray      # (B,) int32 ADC distance computations
+    scanned_blocks: jnp.ndarray  # (B,) int32
+
+
+def tables_from_arrays(arrays) -> ListTables:
+    """Build ListTables from SeilArrays, deriving ``owned_other`` (the
+    co-assigned list of each owned shared block) from block metadata.
+    Safe under jit; the distributed driver precomputes it host-side
+    instead because its block arrays are sharded."""
+    owned = arrays.owned
+    owned_other = arrays.block_other[jnp.maximum(owned, 0), 0]
+    owned_other = jnp.where(owned >= 0, owned_other, -1)
+    return ListTables(owned=owned, owned_other=owned_other, refs=arrays.refs,
+                      refs_other=arrays.refs_other, misc=arrays.misc)
+
+
+def store_from_arrays(arrays) -> BlockStore:
+    return BlockStore(block_codes=arrays.block_codes,
+                      block_ids=arrays.block_ids,
+                      block_other=arrays.block_other)

@@ -58,6 +58,7 @@ class RairsIndex:
     vectors: jnp.ndarray              # (n, D) refine store
     stats: SeilStats
     assigns: np.ndarray               # (n, m) — kept for analysis benches
+    codes: Optional[np.ndarray] = None  # (n, M) cached PQ codes (append path)
     build_seconds: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -80,7 +81,8 @@ class RairsIndex:
 
     def search(self, queries: jnp.ndarray, k: int, nprobe: int,
                k_factor: int = 10, max_scan: Optional[int] = None,
-               use_kernel: bool = False) -> SearchResult:
+               use_kernel: bool = False, exec_mode: str = "paged",
+               query_tile: int = 8) -> SearchResult:
         bigk = k * k_factor
         if max_scan is None:
             max_scan = self.default_max_scan(nprobe)
@@ -88,7 +90,8 @@ class RairsIndex:
             self.arrays, self.centroids, self.codebook, self.vectors,
             queries, nprobe=nprobe, bigk=bigk, k=k, max_scan=max_scan,
             metric=self.config.metric, dedup_results=self.needs_result_dedup,
-            use_kernel=use_kernel, oversample=self.result_oversample)
+            use_kernel=use_kernel, oversample=self.result_oversample,
+            exec_mode=exec_mode, query_tile=query_tile)
 
 
 def compute_assignments(x: jnp.ndarray, centroids: jnp.ndarray,
@@ -123,7 +126,7 @@ def build_index(key: jax.Array, x: jnp.ndarray, cfg: IndexConfig,
     if codebook is None:
         codebook = pq_train(k2, x, m_pq, nbits=cfg.nbits, iters=cfg.pq_iters,
                             sample=cfg.train_sample)
-    jax.block_until_ready(centroids.block_until_ready() if hasattr(centroids, "block_until_ready") else centroids)
+    jax.block_until_ready((centroids, codebook.codebooks))
     times["train"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -143,21 +146,19 @@ def build_index(key: jax.Array, x: jnp.ndarray, cfg: IndexConfig,
 
     return RairsIndex(config=cfg, centroids=centroids, codebook=codebook,
                       arrays=arrays, vectors=jnp.asarray(x), stats=stats,
-                      assigns=assigns, build_seconds=times)
+                      assigns=assigns, codes=codes, build_seconds=times)
 
 
 def insert_batch(index: RairsIndex, x_new: jnp.ndarray) -> RairsIndex:
     """Append a batch (paper Fig. 12): re-assign new vectors, rebuild layout
     from pooled items (centroids/codebooks frozen, as in Faiss add())."""
     cfg = index.config
-    n_old = index.vectors.shape[0]
     assigns_new = compute_assignments(x_new, index.centroids, cfg)
     codes_new = np.asarray(pq_encode(index.codebook, x_new))
     all_assigns = np.concatenate([index.assigns, assigns_new], axis=0)
-    codes_old = None
-    # re-encode old vectors is wasteful; recover codes from stored blocks is
-    # lossy for deleted items — keep it simple and re-encode (codebook frozen).
-    codes_old = np.asarray(pq_encode(index.codebook, index.vectors))
+    codes_old = index.codes
+    if codes_old is None:  # index predates the code cache: encode once
+        codes_old = np.asarray(pq_encode(index.codebook, index.vectors))
     all_codes = np.concatenate([codes_old, codes_new], axis=0)
     n_total = all_assigns.shape[0]
     shared = cfg.seil and cfg.multi_m == 2
@@ -166,4 +167,5 @@ def insert_batch(index: RairsIndex, x_new: jnp.ndarray) -> RairsIndex:
         cfg.nlist, block=cfg.block, shared=shared, code_bits=cfg.nbits)
     return dataclasses.replace(
         index, arrays=arrays, stats=stats, assigns=all_assigns,
+        codes=all_codes,
         vectors=jnp.concatenate([index.vectors, jnp.asarray(x_new)], axis=0))

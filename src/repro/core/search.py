@@ -1,37 +1,42 @@
 """SEIL-optimized ANNS query pipeline (paper Alg. 2 + Alg. 5), static-shape.
 
-Pipeline per query batch:
-  1. score list centroids, take top-nprobe (ranked) lists;
-  2. gather each selected list's owned / referenced / misc block tables;
-     apply cell-level deduplication to reference entries: the entry of
-     the list at probe-rank t pointing to physical home `o` is skipped
-     iff rank(o) < t (the vectorized ``listVisited`` probe);
-  3. compact candidate blocks to a static scan budget;
-  4. ADC distances for every surviving block (Pallas kernel on TPU,
-     jnp oracle elsewhere); item-level masks: invalid ids, misc items
-     whose co-assigned list was scanned earlier;
-  5. top-bigK candidates (+ id-dedup for layouts without SEIL);
-  6. refine with exact distances over the original vectors, top-K.
+``seil_search`` is a thin composition of the staged query engine
+(core/engine/, DESIGN.md §5):
+
+  1. ``select_lists``  — score list centroids, take top-nprobe (ranked);
+  2. ``plan_blocks``   — gather owned / referenced / misc block tables,
+     apply cell-level dedup (the vectorized ``listVisited`` probe) and
+     compact candidates to a static scan budget;
+  3. ``scan_blocks``   — ADC distances for every surviving block (Pallas
+     kernel on TPU, jnp oracle elsewhere) + item-level masks, in either
+     ``exec_mode="paged"`` (per-query paging) or ``"grouped"`` (the
+     paper's §5.3 list-major batch mode: one batch-union block plan,
+     each block fetched once per query tile);
+  4. ``finalize_candidates`` — top-bigK (+ id-dedup for layouts without
+     SEIL), exact refinement over the original vectors, top-K.
 
 DCO accounting is paper-faithful: every *valid* item in a scanned block
 counts one distance computation (misc duplicates included — SEIL cannot
 avoid them, Alg. 5 L15), skipped reference blocks count zero, refine
-adds one exact DCO per unique candidate.
+adds one exact DCO per unique candidate.  Both exec modes produce
+bitwise-identical results and counters (tests/test_engine.py).
+
+The distributed serving step (core/distributed.py) composes the same
+stages over a sharded ``BlockStore`` — improvements to any stage apply
+to both paths.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .kmeans import pairwise_sq_l2
+from .engine import (finalize_candidates, plan_blocks, scan_blocks,
+                     select_lists, store_from_arrays, tables_from_arrays)
 from .pq import PQCodebook, pq_lut, pq_lut_ip
 from .seil import SeilArrays
-
-BIG = jnp.int32(2 ** 30)
 
 
 class SearchResult(NamedTuple):
@@ -43,58 +48,11 @@ class SearchResult(NamedTuple):
     dropped_blocks: jnp.ndarray  # (B,) int32 budget overflow (should be 0)
 
 
-def _rank_table(sel: jnp.ndarray, nlist: int) -> jnp.ndarray:
-    """(B, P) ranked selected lists -> (B, nlist) rank (BIG if unselected)."""
-    b, p = sel.shape
-    ranks = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (b, p))
-    table = jnp.full((b, nlist), BIG, jnp.int32)
-    return table.at[jnp.arange(b)[:, None], sel].min(ranks)
-
-
-def finalize_candidates(flat_d, flat_i, *, bigk, k, vectors, queries,
-                        metric, dedup_results, oversample: int = 2):
-    """Shared tail of both search paths: top-bigK (+ optional id-dedup for
-    duplicated layouts), exact-distance refinement, top-K packing.
-
-    Duplicated layouts (no SEIL / m-assignment) retrieve `oversample*bigK`
-    candidates before id-dedup so duplicate copies cannot displace unique
-    candidates (a dedup-on-insert result queue), then truncate to bigK."""
-    bq = flat_d.shape[0]
-    fetch = bigk * (oversample if dedup_results else 1)
-    fetch = min(fetch, flat_d.shape[1])
-    neg, pos = jax.lax.top_k(-flat_d, fetch)
-    cand_ids = jnp.take_along_axis(flat_i, pos, axis=1)      # (B, fetch)
-    cand_d = -neg                                            # ascending
-    cand_ok = jnp.isfinite(cand_d)
-    if dedup_results:  # needed for layouts without SEIL (duplicated storage)
-        order = jnp.argsort(jnp.where(cand_ok, cand_ids, BIG), axis=1)
-        sid = jnp.take_along_axis(cand_ids, order, axis=1)
-        rep = jnp.concatenate(
-            [jnp.zeros((bq, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1)
-        inv = jnp.argsort(order, axis=1)
-        cand_ok &= ~jnp.take_along_axis(rep, inv, axis=1)
-        cand_ok &= jnp.cumsum(cand_ok, axis=1) <= bigk       # truncate
-    cand_ids = jnp.where(cand_ok, cand_ids, -1)
-
-    cv = vectors[jnp.maximum(cand_ids, 0)]                   # (B, bigK, D)
-    if metric == "l2":
-        diff = cv - queries[:, None, :]
-        exact = jnp.sum(diff * diff, axis=-1)
-    else:
-        exact = -jnp.einsum("bkd,bd->bk", cv, queries)
-    exact = jnp.where(cand_ok, exact, jnp.inf)
-    refine_dco = jnp.sum(cand_ok, axis=1).astype(jnp.int32)
-    negk, posk = jax.lax.top_k(-exact, k)
-    out_ids = jnp.take_along_axis(cand_ids, posk, axis=1)
-    out_d = -negk
-    out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
-    return out_ids, out_d, refine_dco
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "bigk", "k", "max_scan", "metric",
-                     "dedup_results", "use_kernel", "oversample"))
+                     "dedup_results", "use_kernel", "oversample",
+                     "exec_mode", "query_tile"))
 def seil_search(
     arrays: SeilArrays,
     centroids: jnp.ndarray,       # (nlist, D)
@@ -110,99 +68,22 @@ def seil_search(
     dedup_results: bool = True,
     use_kernel: bool = False,
     oversample: int = 2,
+    exec_mode: str = "paged",
+    query_tile: int = 8,
 ) -> SearchResult:
-    bq, d = queries.shape
-    nlist = centroids.shape[0]
-    blk = arrays.block_size
-
-    # -- 1. select lists ----------------------------------------------------
-    cd = (pairwise_sq_l2(queries, centroids) if metric == "l2"
-          else -(queries @ centroids.T))
-    _, sel = jax.lax.top_k(-cd, nprobe)            # (B, P) ascending distance
-    sel = sel.astype(jnp.int32)
-    rank_of = _rank_table(sel, nlist)              # (B, nlist)
-
-    # -- 2. gather block tables + cell-level dedup ---------------------------
-    owned = arrays.owned[sel]                      # (B, P, MO)
-    refs = arrays.refs[sel]                        # (B, P, MR)
-    refs_other = arrays.refs_other[sel]            # (B, P, MR)
-    misc = arrays.misc[sel]                        # (B, P, MM)
-    t = jnp.arange(nprobe, dtype=jnp.int32)[None, :, None]
-
-    def visited_earlier(other_list):
-        r = jnp.take_along_axis(
-            rank_of, jnp.maximum(other_list, 0).reshape(bq, -1), axis=1
-        ).reshape(other_list.shape)
-        return (other_list >= 0) & (r < t)
-
-    # reference entries: skip if the home list was scanned earlier (Alg. 5 L7)
-    refs = jnp.where(visited_earlier(refs_other), -1, refs)
-    # home shared blocks: skip if the co-assigned list was scanned earlier —
-    # its reference entry already computed this cell.  (Alg. 5's pseudocode
-    # only checks the ref->home direction and would re-compute the cell when
-    # the referencing list is probed first; we implement the stated
-    # cell-level compute-once semantics in both directions. See DESIGN.md.)
-    owned_other = arrays.block_other[jnp.maximum(owned, 0), 0]
-    owned_other = jnp.where(owned >= 0, owned_other, -1)
-    owned = jnp.where(visited_earlier(owned_other), -1, owned)
-
-    def flat(tbl):
-        return tbl.reshape(bq, -1)
-    cand = jnp.concatenate([flat(owned), flat(refs), flat(misc)], axis=1)
-    cand_rank = jnp.concatenate([
-        flat(jnp.broadcast_to(t, owned.shape)),
-        flat(jnp.broadcast_to(t, refs.shape)),
-        flat(jnp.broadcast_to(t, misc.shape))], axis=1)
-
-    # -- 3. compact to the static scan budget --------------------------------
-    max_scan = min(max_scan, cand.shape[1])    # static shapes; safe under jit
-    valid = cand >= 0
-    n_valid = jnp.sum(valid, axis=1).astype(jnp.int32)
-    dropped = jnp.maximum(n_valid - max_scan, 0)
-    # stable compaction: valid blocks first, preserving position order
-    # (positions already run owned->refs->misc, each rank-ascending)
-    pos = jnp.arange(cand.shape[1], dtype=jnp.int32)
-    key = jnp.where(valid, BIG - pos, -1 - pos)
-    _, take = jax.lax.top_k(key, max_scan)
-    blocks = jnp.take_along_axis(cand, take, axis=1)        # (B, S)
-    branks = jnp.take_along_axis(cand_rank, take, axis=1)   # (B, S)
-    bvalid = jnp.take_along_axis(valid, take, axis=1)
-
-    safe_blocks = jnp.maximum(blocks, 0)
-
-    # -- 4. ADC distances -----------------------------------------------------
+    selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
+    plan = plan_blocks(tables_from_arrays(arrays), selection,
+                       max_scan=max_scan)
     lut = (pq_lut(codebook, queries) if metric == "l2"
            else pq_lut_ip(codebook, queries))                # (B, M, 16)
-    if use_kernel:
-        from ..kernels.ops import pq_scan_paged
-        dists = pq_scan_paged(lut, arrays.block_codes, safe_blocks)
-    else:
-        codes = arrays.block_codes[safe_blocks]              # (B, S, BLK, M)
-        g = jnp.take_along_axis(
-            lut[:, None, None, :, :], codes.astype(jnp.int32)[..., None],
-            axis=-1)
-        dists = jnp.sum(g[..., 0], axis=-1)                  # (B, S, BLK)
-
-    ids = arrays.block_ids[safe_blocks]                      # (B, S, BLK)
-    other = arrays.block_other[safe_blocks]
-    o_rank = jnp.take_along_axis(
-        rank_of, jnp.maximum(other, 0).reshape(bq, -1), axis=1
-    ).reshape(other.shape)
-    dup_item = (other >= 0) & (o_rank < branks[:, :, None])
-    item_ok = (ids >= 0) & bvalid[:, :, None]
-    keep = item_ok & ~dup_item
-    # DCO: SEIL computes misc duplicates then discards them (Alg.5 L15-16)
-    approx_dco = jnp.sum(item_ok, axis=(1, 2)).astype(jnp.int32)
-
-    # -- 5/6. top-bigK candidates + refine ------------------------------------
-    flat_d = jnp.where(keep, dists, jnp.inf).reshape(bq, -1)
-    flat_i = ids.reshape(bq, -1)
+    scan = scan_blocks(store_from_arrays(arrays), plan, lut,
+                       selection.rank_of, exec_mode=exec_mode,
+                       use_kernel=use_kernel, query_tile=query_tile)
     out_ids, out_d, refine_dco = finalize_candidates(
-        flat_d, flat_i, bigk=bigk, k=k, vectors=vectors, queries=queries,
-        metric=metric, dedup_results=dedup_results, oversample=oversample)
-
+        scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
+        queries=queries, metric=metric, dedup_results=dedup_results,
+        oversample=oversample)
     return SearchResult(
-        ids=out_ids, dists=out_d, approx_dco=approx_dco,
-        refine_dco=refine_dco,
-        scanned_blocks=jnp.sum(bvalid, axis=1).astype(jnp.int32),
-        dropped_blocks=dropped.astype(jnp.int32))
+        ids=out_ids, dists=out_d, approx_dco=scan.approx_dco,
+        refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,
+        dropped_blocks=plan.dropped)

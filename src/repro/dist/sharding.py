@@ -1,0 +1,109 @@
+"""Logical-axis sharding: named dims -> mesh axes via a rule table.
+
+Params and activations are annotated with *logical* dimension names
+("batch", "heads", "vocab", ...); a rule table maps each name to mesh
+axes ("data", "model", optionally "pod").  ``logical_spec`` resolves
+names to a PartitionSpec under the active ``axis_rules`` context,
+applying two guards:
+
+  * axes absent from the mesh are pruned (the same rules serve the
+    single-pod (data, model) and multi-pod (pod, data, model) meshes);
+  * a dim whose size does not divide the mapped axis-size product is
+    replicated instead (e.g. hubert's vocab=504 on a 16-wide model
+    axis), and a mesh axis is never assigned to two dims of one spec.
+
+``logical_shard`` is the in-graph annotation: a no-op unless an
+``axis_rules`` context is active, so model code runs unchanged on a
+single host (tests) and sharded under the production mesh (launch/).
+"""
+from __future__ import annotations
+
+import contextlib
+from types import SimpleNamespace
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical dim -> mesh axis (str), axes (tuple), or None (replicate)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "zero": ("pod", "data"),      # ZeRO-sharded replicated dims
+    "expert": ("pod", "data"),    # expert parallelism over the data axes
+    "lists": ("pod", "data"),     # IVF list / block pools (RAIRS caches)
+    "heads": "model",
+    "kv": "model",
+    "ff": "model",
+    "vocab": "model",
+    "ssm_head": "model",
+    "d_model": None,
+    "seq": None,
+    "state": None,
+    "blk": None,
+    "kv_head_dim": None,          # serve caches override to "model"
+}
+
+_state = SimpleNamespace(ctx=None)   # (mesh, rules) or None
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: Optional[dict] = None):
+    """Activate (mesh, rules) for logical_spec/logical_shard resolution."""
+    prev = _state.ctx
+    _state.ctx = (mesh, dict(DEFAULT_RULES if rules is None else rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def zero1_rules() -> dict:
+    """Rules for ZeRO-1/3 shardings (the "zero" dim consumes data axes)."""
+    return dict(DEFAULT_RULES)
+
+
+def _mesh_axes(mesh, rule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    return tuple(a for a in axes if a in tuple(mesh.axis_names))
+
+
+def logical_spec(*names, shape: Tuple[int, ...]) -> P:
+    """Resolve logical dim names to a PartitionSpec under the active
+    context.  Requires ``axis_rules`` (or ``_state.ctx``) to be set."""
+    assert _state.ctx is not None, "logical_spec needs an axis_rules context"
+    mesh, rules = _state.ctx
+    used = set()
+    entries = []
+    for i, name in enumerate(names):
+        axes = _mesh_axes(mesh, rules.get(name)) if name else ()
+        axes = tuple(a for a in axes if a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if not axes or size <= 1 or shape[i] % size != 0:
+            entries.append(None)      # replicate: indivisible or unmapped
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    return P(*entries)
+
+
+def logical_shard(x, *names):
+    """In-graph sharding annotation; identity outside an axis_rules ctx."""
+    if _state.ctx is None:
+        return x
+    mesh, _ = _state.ctx
+    spec = logical_spec(*names, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(specs, mesh, rules: Optional[dict] = None, is_leaf=None,
+                    logical_of=None):
+    """Tree of NamedShardings for a ParamSpec tree (launch/train/serve)."""
+    with axis_rules(mesh, rules=rules):
+        def sh(s):
+            names = tuple(logical_of(s)) if logical_of else tuple(s.logical)
+            return NamedSharding(mesh, logical_spec(*names, shape=s.shape))
+        return jax.tree.map(sh, specs, is_leaf=is_leaf)

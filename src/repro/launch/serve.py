@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--batches", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--exec-mode", default="paged",
+                    choices=("paged", "grouped"),
+                    help="engine scan mode: per-query paging or list-major "
+                         "batched execution (paper §5.3)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the ADC scan through the Pallas kernel")
     args = ap.parse_args()
 
     x, q, spec = make_dataset(args.dataset)
@@ -47,7 +53,9 @@ def main():
     for b in range(args.batches):
         qb = q[b * args.batch_size:(b + 1) * args.batch_size]
         t0 = time.perf_counter()
-        res = index.search(qb, k=args.k, nprobe=args.nprobe)
+        res = index.search(qb, k=args.k, nprobe=args.nprobe,
+                           exec_mode=args.exec_mode,
+                           use_kernel=args.use_kernel)
         res.ids.block_until_ready()
         dt = time.perf_counter() - t0
         rec = recall_at_k(np.asarray(res.ids),

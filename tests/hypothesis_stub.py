@@ -1,0 +1,37 @@
+"""Import-or-stub layer for ``hypothesis``.
+
+The runtime image does not ship hypothesis (it is a dev-only dep, see
+requirements-dev.txt).  Importing through this module keeps every unit
+test runnable while the property-based tests skip gracefully: the stub
+``@given`` replaces the test body with a ``pytest.skip`` (taking no
+parameters, so pytest does not go looking for fixtures named after the
+strategy arguments).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    def given(*_args, **_kwargs):
+        def deco(f):
+            def skipper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipper.__name__ = f.__name__
+            skipper.__doc__ = f.__doc__
+            return skipper
+        return deco
+
+    class _StrategiesStub:
+        """Accepts any strategy constructor call; values are never used."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategiesStub()

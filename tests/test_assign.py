@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stub import given, settings, st
 
 from repro.core.assign import (candidate_lists, rair_assign,
                                rair_assign_multi, single_assign)

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
+from repro.dist import shard_map
 from repro.dist.checkpoint import (latest_step, restore_checkpoint,
                                    save_checkpoint)
 from repro.dist.elastic import replan_mesh, rescale_batch
@@ -80,7 +81,7 @@ def test_compressed_psum_shardmap():
 
     @jax.jit
     def run(t):
-        return jax.shard_map(
+        return shard_map(
             lambda x: compressed_psum(x, ("data",), "int8"),
             mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
             out_specs=jax.sharding.PartitionSpec())(t)
@@ -135,7 +136,7 @@ def test_distributed_kmeans_step_matches_single():
     x = jax.random.normal(KEY, (256, 8))
     c = x[:8]
     mesh = jax.make_mesh((1,), ("data",))
-    got = jax.shard_map(
+    got = shard_map(
         lambda xl, cc: kmeans_step_sharded(xl, cc, axis_names=("data",)),
         mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec("data"),

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stub import given, settings, st
 
 from repro.kernels.ops import pq_scan_grouped, pq_scan_paged
 from repro.kernels.ref import onehot_lut_ref, pq_scan_paged_ref

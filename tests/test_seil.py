@@ -1,7 +1,7 @@
 """SEIL layout invariants (paper §5) — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stub import given, settings, st
 
 from repro.core.seil import (build_seil, build_id_map, cell_stats, delete_ids,
                              vectors_in_large_cells)
