@@ -3,26 +3,89 @@
 One function per paper table/figure (see DESIGN.md §6).  Prints
 ``name,us_per_call,derived`` CSV; raw rows go to benchmarks/results/.
 ``--full`` widens datasets/queries; ``--only fig8`` runs one bench.
+
+The engine bench additionally writes a machine-readable
+``BENCH_engine.json`` at the repo root (recall / QPS / DCO per
+exec-mode x nprobe config, plus searcher compile-cache stats) so the
+perf trajectory is tracked across PRs instead of only printed.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
 from . import suite
 
+BENCH_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_engine.json")
+BENCH_JSON_SCHEMA_VERSION = 1
+
+
+def write_bench_json(engine_out: dict, dataset: str, path: str) -> None:
+    """Flatten the exec-mode sweep into per-config rows and persist."""
+    configs = []
+    for mode in ("paged", "grouped"):
+        for row in engine_out.get(mode, ()):
+            configs.append({
+                "config": f"{mode}/nprobe{row['nprobe']}",
+                "exec_mode": mode,
+                "nprobe": row["nprobe"],
+                "recall": row["recall"],
+                "qps": row["qps"],
+                "dco": row["dco"],
+            })
+    payload = {
+        "schema_version": BENCH_JSON_SCHEMA_VERSION,
+        "dataset": dataset,
+        "id_mismatch_points": engine_out.get("id_mismatch_points"),
+        "searcher": engine_out.get("searcher", {}),
+        "configs": configs,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    sys.stderr.write(f"[bench json -> {os.path.abspath(path)}]\n")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--bench-json", type=str, default=BENCH_JSON_DEFAULT,
+                    help="where the engine bench writes its machine-readable "
+                         "summary ('' disables)")
+    ap.add_argument("--bench-dataset", type=str, default="sift1m",
+                    help="dataset for the engine bench / BENCH_engine.json")
     args = ap.parse_args()
 
+    benches = _bench_list(args)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            if name == "engine_modes" and args.bench_json:
+                write_bench_json(out, args.bench_dataset, args.bench_json)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},NaN,FAILED")
+        sys.stderr.write(f"[bench {name}: {time.perf_counter()-t0:.1f}s]\n")
+    if failures:
+        sys.exit(1)
+
+
+def _bench_list(args):
     main_sets = ("sift1m", "msong", "gist", "openai") if args.full \
         else ("sift1m",)
-    benches = [
+    return [
         ("fig5", lambda: suite.bench_cells()),
         ("fig7_k10", lambda: suite.bench_recall_curves(main_sets, k=10,
                                                        quick=not args.full)),
@@ -43,24 +106,10 @@ def main() -> None:
         ("fig17", lambda: suite.bench_seil_soar()),
         ("table3", lambda: suite.bench_match_table(
             main_sets if args.full else ("sift1m",))),
-        ("engine_modes", lambda: suite.bench_exec_modes()),
+        ("engine_modes",
+         lambda: suite.bench_exec_modes(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
-    print("name,us_per_call,derived")
-    failures = 0
-    for name, fn in benches:
-        if args.only and args.only not in name:
-            continue
-        t0 = time.perf_counter()
-        try:
-            fn()
-        except Exception:
-            failures += 1
-            traceback.print_exc()
-            print(f"{name},NaN,FAILED")
-        sys.stderr.write(f"[bench {name}: {time.perf_counter()-t0:.1f}s]\n")
-    if failures:
-        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -398,6 +398,8 @@ def bench_exec_modes(dataset="sift1m", k=10, nprobes=(4, 8, 16, 32)):
     emit(f"engine_exec_modes/{dataset}/equivalence", 0.0,
          f"id_mismatch_points={mismatches}")
     out["id_mismatch_points"] = mismatches
+    # compile-cache accounting across every session the sweep created
+    out["searcher"] = idx.searcher_stats()
     save_json("engine_exec_modes", out)
     assert mismatches == 0, "grouped mode must return identical ids"
     return out

@@ -1,12 +1,17 @@
-"""Quickstart: build a RAIRS index, search it, and see why RAIR+SEIL win.
+"""Quickstart: build a RAIRS index, open a compiled searcher session,
+persist the index, and see why RAIR+SEIL win.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import jax
 import numpy as np
 
-from repro.core import (IndexConfig, build_index, dco_summary, ground_truth,
-                        recall_at_k, vectors_in_large_cells)
+from repro.core import (IndexConfig, SearchParams, build_index, dco_summary,
+                        ground_truth, load_index, recall_at_k, save_index,
+                        vectors_in_large_cells)
 from repro.data import make_dataset
 
 # 1. a SIFT-like corpus (clustered, low intrinsic dimension)
@@ -19,19 +24,42 @@ index = build_index(jax.random.PRNGKey(0), x,
 print(f"cells: {vectors_in_large_cells(index.assigns):.0%} of vectors live "
       f"in shared cells >= 1 block (the skew SEIL exploits)")
 
-# 3. search; compare against the single-assignment baseline at equal nprobe
+# 3. open a compiled searcher session (params validated + resolved once,
+#    executables cached per batch-size bucket) and compare against the
+#    single-assignment baseline at equal nprobe
+params = SearchParams(k=10, nprobe=6)
 baseline = build_index(jax.random.PRNGKey(0), x,
                        IndexConfig(nlist=64, strategy="single"),
                        centroids=index.centroids, codebook=index.codebook)
 for name, idx in [("IVFPQfs (single)", baseline), ("RAIRS", index)]:
-    res = idx.search(queries, k=10, nprobe=6)
+    searcher = idx.searcher(params)
+    res = searcher(queries)
     rec = recall_at_k(np.asarray(res.ids), gt)
     s = dco_summary(res)
     print(f"{name:18s} nprobe=6: recall@10={rec:.3f} "
           f"distance-computations/query={s['total_dco']:.0f}")
 
-# 4. the same search through the Pallas TPU kernel path (interpret on CPU)
-res_k = index.search(queries[:8], k=10, nprobe=6, use_kernel=True)
-res_j = index.search(queries[:8], k=10, nprobe=6, use_kernel=False)
+# 4. sessions absorb varying batch sizes without retracing: every batch
+#    pads to a cached bucket executable (watch the compile counters)
+searcher = index.searcher(params)
+for bs in (200, 64, 100, 200):
+    searcher(queries[:bs])
+print(f"session stats after mixed batches: {searcher.compile_stats()}")
+
+# 5. persistence: save/load round-trips the whole index (config, centroids,
+#    codebook, SEIL arrays, cached codes) — no re-training on restart
+with tempfile.TemporaryDirectory() as td:
+    bundle = os.path.join(td, "rairs_unit.npz")
+    save_index(index, bundle)
+    restored = load_index(bundle)
+    res2 = restored.searcher(params)(queries)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(res2.ids))
+    print(f"save/load round-trip: identical results "
+          f"({os.path.getsize(bundle) / 1e6:.1f}MB bundle)")
+
+# 6. the same search through the Pallas TPU kernel path (interpret on CPU)
+kp = SearchParams(k=10, nprobe=6, use_kernel=True)
+res_k = index.searcher(kp)(queries[:8])
+res_j = index.searcher(params)(queries[:8])
 assert np.array_equal(np.asarray(res_k.ids), np.asarray(res_j.ids))
 print("pallas pq_scan kernel path == jnp path (8 queries checked)")

@@ -5,11 +5,17 @@ training, product quantization, AIR-metric assignment, SEIL layout, and
 the static-shape deduplicating searcher with exact refinement.
 """
 from .assign import (rair_assign, rair_assign_multi, single_assign,  # noqa
-                     candidate_lists, air_skip_fraction)
+                     candidate_lists, air_skip_fraction,
+                     STRATEGY_REGISTRY, register_strategy, get_strategy,
+                     available_strategies)
 from .engine import (EXEC_MODES, BlockStore, ListSelection, ListTables,  # noqa
                      QueryPlan, ScanOut, plan_blocks, scan_blocks,
                      select_lists, finalize_candidates)
 from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
+from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION, load_index,  # noqa
+                 read_index_meta, save_index)
+from .params import MAX_AUTO_BUCKET, SearchParams  # noqa
+from .searcher import Searcher, SearcherStats  # noqa
 from .kmeans import kmeans_fit, kmeans_step_sharded, pairwise_sq_l2  # noqa
 from .metrics import ground_truth, recall_at_k, per_query_recall, dco_summary  # noqa
 from .pq import PQCodebook, pq_train, pq_encode, pq_lut, pq_adc, pq_decode  # noqa

@@ -14,10 +14,11 @@ public entry used by the index builder.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kmeans import pairwise_sq_l2
 
@@ -157,6 +158,78 @@ def rair_assign_multi(x, centroids, *, m: int = 3, aggr: str = "max",
         cids, cd2 = candidate_lists(xb, centroids, n_cands)
         return _assign_m_chunk(xb, centroids, cids, cd2, m, aggr, lam)
     return _chunked(fn, x, chunk)
+
+
+# ----------------------------------------------------------------------------
+# Strategy registry (paper §6.1 "Solutions to Compare", pluggable)
+# ----------------------------------------------------------------------------
+# Maps a strategy name to an assignment function
+#     fn(x (n, D), centroids (nlist, D), cfg: IndexConfig) -> np.ndarray (n, m)
+# of sorted per-vector list ids.  ``IndexConfig`` validates its strategy
+# against this registry at construction, and ``compute_assignments``
+# dispatches through it — adding a SOAR-style variant is one decorated
+# function, no core edits.
+StrategyFn = Callable[[jnp.ndarray, jnp.ndarray, object], np.ndarray]
+STRATEGY_REGISTRY: Dict[str, StrategyFn] = {}
+
+
+def register_strategy(name: str, overwrite: bool = False):
+    """Decorator: register an assignment strategy under `name`."""
+    def deco(fn: StrategyFn) -> StrategyFn:
+        if not overwrite and name in STRATEGY_REGISTRY:
+            raise ValueError(f"strategy {name!r} already registered")
+        STRATEGY_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_strategy(name: str) -> StrategyFn:
+    try:
+        return STRATEGY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; registered: "
+            f"{available_strategies()}") from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(STRATEGY_REGISTRY))
+
+
+@register_strategy("single")
+def _strategy_single(x, centroids, cfg):
+    """IVFPQfs baseline: one (duplicated) nearest-list assignment."""
+    return np.asarray(single_assign(x, centroids))
+
+
+def _rair_family(x, centroids, cfg, metric: str, strict: bool):
+    return np.asarray(rair_assign(
+        x, centroids, metric=metric, lam=cfg.lam, n_cands=cfg.n_cands,
+        strict=strict))
+
+
+@register_strategy("naive")
+def _strategy_naive(x, centroids, cfg):
+    """NaiveRA: strict 2nd-nearest list."""
+    return _rair_family(x, centroids, cfg, metric="naive", strict=True)
+
+
+@register_strategy("soar")
+def _strategy_soar(x, centroids, cfg):
+    """SOARL2: strict orthogonality-weighted residual."""
+    return _rair_family(x, centroids, cfg, metric="soar", strict=True)
+
+
+@register_strategy("rair")
+def _strategy_rair(x, centroids, cfg):
+    """RAIR: AIR metric, primary may win (single assignment kept)."""
+    return _rair_family(x, centroids, cfg, metric="air", strict=False)
+
+
+@register_strategy("srair")
+def _strategy_srair(x, centroids, cfg):
+    """SRAIR: AIR metric, strictly two distinct lists."""
+    return _rair_family(x, centroids, cfg, metric="air", strict=True)
 
 
 def air_skip_fraction(x, centroids, lam=0.5, n_cands=10, chunk=8192) -> float:

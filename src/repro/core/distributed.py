@@ -32,6 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..dist import shard_map
 from .engine import (BlockStore, ListTables, plan_blocks, scan_blocks,
                      select_lists)
+from .params import SearchParams
 
 
 class DistSearchResult(NamedTuple):
@@ -106,13 +107,48 @@ def pq_lut_from_tables(codebooks, queries):
     return jnp.sum(diff * diff, axis=-1)
 
 
-def distributed_search(index, mesh: Mesh, queries, *, nprobe: int, k: int,
-                       k_factor: int = 10, max_scan_local: int = 512,
-                       axes=("data",), exec_mode: str = "paged",
-                       query_tile: int = 8):
+def distributed_search(index, mesh: Mesh, queries, *,
+                       params: SearchParams = None,
+                       nprobe: int = None, k: int = None,
+                       k_factor: int = None, max_scan_local: int = 512,
+                       axes=("data",), exec_mode: str = None,
+                       query_tile: int = None):
     """Host-callable wrapper: pads + shards a RairsIndex over `axes` and
-    runs the shard_map serve step (used by tests and launch/serve)."""
+    runs the shard_map serve step (used by tests and launch/serve).
+
+    Query-side knobs come from `params` (the session API's SearchParams);
+    individual kwargs override its fields.  Without `params`, `nprobe`
+    and `k` are required (as before the session API).  `max_scan_local`
+    stays separate — it is the per-device plan budget, a property of the
+    shard layout rather than of the query.  Fields the shard_map path
+    does not implement (`use_kernel`, `max_scan`, `batch_buckets`) are
+    rejected rather than silently dropped."""
+    import dataclasses as _dc
     import numpy as np
+    if params is None:
+        if nprobe is None or k is None:
+            raise TypeError(
+                "distributed_search requires nprobe= and k= when no "
+                "params=SearchParams(...) is given")
+        params = SearchParams()
+    over = {name: v for name, v in (("nprobe", nprobe), ("k", k),
+                                    ("k_factor", k_factor),
+                                    ("exec_mode", exec_mode),
+                                    ("query_tile", query_tile))
+            if v is not None}
+    if over:
+        params = _dc.replace(params, **over)
+    unsupported = [name for name, v in (("use_kernel", params.use_kernel),
+                                        ("max_scan", params.max_scan),
+                                        ("batch_buckets", params.batch_buckets))
+                   if v not in (None, False)]
+    if unsupported:
+        raise ValueError(
+            f"distributed_search does not support SearchParams fields "
+            f"{unsupported} (use max_scan_local for the per-device budget; "
+            f"the shard_map step runs the jnp scan path)")
+    nprobe, k, k_factor = params.nprobe, params.k, params.k_factor
+    exec_mode, query_tile = params.exec_mode, params.query_tile
     nd = 1
     for a in axes:
         nd *= mesh.shape[a]

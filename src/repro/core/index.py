@@ -1,9 +1,14 @@
 """RairsIndex — the public index object tying RAIR + PQ + SEIL together.
 
 `build_index` is paper Alg. 1 (AddVectors) for a bulk batch:
-RairAssign -> PQEncoding -> SeilInsert; `RairsIndex.search` is Alg. 2.
+RairAssign -> PQEncoding -> SeilInsert; querying is Alg. 2 through a
+compiled searcher session: ``index.searcher(SearchParams(...))`` (see
+DESIGN.md §7; ``RairsIndex.search`` is a thin kwarg wrapper over the
+same sessions).  ``save_index``/``load_index`` (core/io.py) persist the
+built index so serving restarts skip the train+build phase.
 
-Strategy presets (paper §6.1 "Solutions to Compare"):
+Strategy presets (paper §6.1 "Solutions to Compare", extensible via
+``assign.register_strategy``):
   single  -> IVFPQfs   (baseline single assignment)
   naive   -> NaiveRA   (2nd-nearest list, strict)
   soar    -> SOARL2    (orthogonal residual, strict)
@@ -14,7 +19,6 @@ Strategy presets (paper §6.1 "Solutions to Compare"):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -22,12 +26,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .assign import rair_assign, rair_assign_multi, single_assign
+from .assign import (AGGRS, STRATEGY_REGISTRY, available_strategies,
+                     get_strategy, rair_assign_multi)
 from .kmeans import kmeans_fit
+from .params import SearchParams
 from .pq import PQCodebook, pq_encode, pq_train
-from .search import SearchResult, seil_search
+from .search import SearchResult
+from .searcher import Searcher
 from .seil import SeilArrays, SeilStats, build_seil
 
+# kept for callers that enumerate the paper's preset strategies; the
+# authoritative (extensible) set is assign.STRATEGY_REGISTRY
 STRATEGIES = ("single", "naive", "soar", "rair", "srair")
 
 
@@ -47,6 +56,32 @@ class IndexConfig:
     kmeans_iters: int = 15
     pq_iters: int = 12
     train_sample: int = 131072
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGY_REGISTRY:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; registered: "
+                f"{available_strategies()}")
+        if self.metric not in ("l2", "ip"):
+            raise ValueError(f"metric must be 'l2' or 'ip', got {self.metric!r}")
+        if not 1 <= self.nbits <= 8:
+            raise ValueError(
+                f"nbits must be in [1, 8] (codes are uint8), got {self.nbits}")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+        if self.nlist < 1:
+            raise ValueError(f"nlist must be >= 1, got {self.nlist}")
+        if self.multi_m < 2:
+            raise ValueError(f"multi_m must be >= 2, got {self.multi_m}")
+        if self.aggr not in AGGRS:
+            raise ValueError(f"aggr must be one of {AGGRS}, got {self.aggr!r}")
+        if self.n_cands < 2:
+            raise ValueError(
+                f"n_cands must be >= 2 (primary + alternates), got {self.n_cands}")
+        if self.m_pq is not None and self.m_pq < 1:
+            raise ValueError(f"m_pq must be >= 1 or None, got {self.m_pq}")
+        if self.lam < 0:
+            raise ValueError(f"lam must be >= 0, got {self.lam}")
 
 
 @dataclasses.dataclass
@@ -79,42 +114,69 @@ class RairsIndex:
         want = int(nprobe * max(avg_blocks * slack, 4.0)) + 8
         return min(cap, max(want, 16))
 
+    def searcher(self, params: Optional[SearchParams] = None,
+                 **kwargs) -> Searcher:
+        """Create (or fetch) a compiled search session for `params`.
+
+        Sessions are cached per params object on this index, so repeated
+        requests for the same parameters share AOT-compiled executables.
+        Keyword arguments build (or override fields of) the params:
+        ``index.searcher(k=10, nprobe=16)``.
+        """
+        if params is None:
+            params = SearchParams(**kwargs)
+        elif kwargs:
+            params = dataclasses.replace(params, **kwargs)
+        cache = getattr(self, "_searcher_cache", None)
+        if cache is None:
+            cache = {}
+            self._searcher_cache = cache
+        if params not in cache:
+            cache[params] = Searcher(self, params)
+        return cache[params]
+
+    def searcher_stats(self) -> dict:
+        """Aggregate compile-cache stats over every cached session (the
+        public accessor — benchmarks/serving should not reach into the
+        session cache)."""
+        sessions = list(getattr(self, "_searcher_cache", {}).values())
+        return {
+            "sessions": len(sessions),
+            "compiles": sum(s.stats.compiles for s in sessions),
+            "cache_hits": sum(s.stats.cache_hits for s in sessions),
+        }
+
     def search(self, queries: jnp.ndarray, k: int, nprobe: int,
                k_factor: int = 10, max_scan: Optional[int] = None,
                use_kernel: bool = False, exec_mode: str = "paged",
                query_tile: int = 8) -> SearchResult:
-        bigk = k * k_factor
-        if max_scan is None:
-            max_scan = self.default_max_scan(nprobe)
-        return seil_search(
-            self.arrays, self.centroids, self.codebook, self.vectors,
-            queries, nprobe=nprobe, bigk=bigk, k=k, max_scan=max_scan,
-            metric=self.config.metric, dedup_results=self.needs_result_dedup,
-            use_kernel=use_kernel, oversample=self.result_oversample,
-            exec_mode=exec_mode, query_tile=query_tile)
+        """Convenience kwarg path: builds/reuses a Searcher session.
+
+        Prefer ``index.searcher(SearchParams(...))`` for serving loops —
+        it makes the compiled session (and its cache stats) explicit.
+        See DESIGN.md §7 for the migration note.
+        """
+        return self.searcher(SearchParams(
+            k=k, nprobe=nprobe, k_factor=k_factor, max_scan=max_scan,
+            use_kernel=use_kernel, exec_mode=exec_mode,
+            query_tile=query_tile))(queries)
 
 
 def compute_assignments(x: jnp.ndarray, centroids: jnp.ndarray,
                         cfg: IndexConfig) -> np.ndarray:
+    """Dispatch to the registered assignment strategy (m-assignment,
+    paper §4.3, overrides the pairwise strategies when multi_m > 2)."""
     if cfg.multi_m > 2:
         return np.asarray(rair_assign_multi(
             x, centroids, m=cfg.multi_m, aggr=cfg.aggr, lam=cfg.lam,
             n_cands=cfg.n_cands))
-    if cfg.strategy == "single":
-        return np.asarray(single_assign(x, centroids))
-    strict = cfg.strategy in ("naive", "soar", "srair")
-    metric = {"naive": "naive", "soar": "soar",
-              "rair": "air", "srair": "air"}[cfg.strategy]
-    return np.asarray(rair_assign(
-        x, centroids, metric=metric, lam=cfg.lam, n_cands=cfg.n_cands,
-        strict=strict))
+    return np.asarray(get_strategy(cfg.strategy)(x, centroids, cfg))
 
 
 def build_index(key: jax.Array, x: jnp.ndarray, cfg: IndexConfig,
                 centroids: Optional[jnp.ndarray] = None,
                 codebook: Optional[PQCodebook] = None) -> RairsIndex:
     """Train (k-means + PQ) and add all vectors (Alg. 1)."""
-    assert cfg.strategy in STRATEGIES
     n, d = x.shape
     m_pq = cfg.m_pq or d // 2
     k1, k2 = jax.random.split(key)

@@ -1,0 +1,104 @@
+"""Index persistence — save/load a built RairsIndex as one npz bundle.
+
+The bundle holds every array the query path needs (centroids, PQ
+codebooks, SEIL block store + per-list tables, refine vectors) plus the
+build-side state that makes the index appendable (assignments, cached PQ
+codes), so ``load_index`` returns an object equivalent to the one
+``build_index`` produced: searches, ``insert_batch`` and ``searcher``
+sessions all work without re-training (tests/test_searcher.py asserts
+result equality).
+
+Config / stats / provenance travel as a JSON document embedded in the
+npz (as a uint8 array — no pickling), headed by a format name and
+version so future layout changes stay detectable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from .index import IndexConfig, RairsIndex
+from .pq import PQCodebook
+from .seil import SeilArrays, SeilStats
+
+INDEX_FORMAT = "rairs-index"
+INDEX_FORMAT_VERSION = 1
+
+_SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
+                "refs", "refs_other", "misc")
+
+
+def save_index(index: RairsIndex, path: Union[str, os.PathLike],
+               extra: dict = None) -> None:
+    """Write `index` to `path` as a compressed npz bundle (exact path —
+    no implicit .npz suffix is appended).  `extra` is a JSON-able dict
+    of caller provenance (e.g. {"dataset": "sift1m"}) stored alongside
+    the config and readable via ``read_index_meta``."""
+    meta = {
+        "format": INDEX_FORMAT,
+        "format_version": INDEX_FORMAT_VERSION,
+        "config": dataclasses.asdict(index.config),
+        "stats": dataclasses.asdict(index.stats),
+        "build_seconds": index.build_seconds,
+        "has_codes": index.codes is not None,
+        "extra": dict(extra or {}),
+    }
+    arrays = {
+        "meta_json": np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8),
+        "centroids": np.asarray(index.centroids),
+        "codebooks": np.asarray(index.codebook.codebooks),
+        "vectors": np.asarray(index.vectors),
+        "assigns": np.asarray(index.assigns),
+    }
+    for f in _SEIL_FIELDS:
+        arrays[f] = np.asarray(getattr(index.arrays, f))
+    if index.codes is not None:
+        arrays["codes"] = np.asarray(index.codes)
+    with open(path, "wb") as fh:
+        np.savez_compressed(fh, **arrays)
+
+
+def _check_meta(path, z) -> dict:
+    if "meta_json" not in z:
+        raise ValueError(f"{path}: not a {INDEX_FORMAT} bundle")
+    meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
+    if meta.get("format") != INDEX_FORMAT:
+        raise ValueError(
+            f"{path}: format {meta.get('format')!r} != {INDEX_FORMAT!r}")
+    version = meta.get("format_version")
+    if version != INDEX_FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: unsupported format_version {version} "
+            f"(this build reads version {INDEX_FORMAT_VERSION})")
+    return meta
+
+
+def read_index_meta(path: Union[str, os.PathLike]) -> dict:
+    """Read only the JSON metadata of a bundle (config / stats / extra
+    provenance) without materializing the arrays."""
+    with np.load(path, allow_pickle=False) as z:
+        return _check_meta(path, z)
+
+
+def load_index(path: Union[str, os.PathLike]) -> RairsIndex:
+    """Load an index bundle written by ``save_index``."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = _check_meta(path, z)
+        cfg = IndexConfig(**meta["config"])
+        arrays = SeilArrays(**{f: jnp.asarray(z[f]) for f in _SEIL_FIELDS})
+        return RairsIndex(
+            config=cfg,
+            centroids=jnp.asarray(z["centroids"]),
+            codebook=PQCodebook(jnp.asarray(z["codebooks"])),
+            arrays=arrays,
+            vectors=jnp.asarray(z["vectors"]),
+            stats=SeilStats(**meta["stats"]),
+            assigns=np.asarray(z["assigns"]),
+            codes=np.asarray(z["codes"]) if meta["has_codes"] else None,
+            build_seconds=dict(meta.get("build_seconds", {})),
+        )

@@ -1,0 +1,104 @@
+"""SearchParams — the frozen, validated query-side parameter object.
+
+All knobs of the four-stage query pipeline live here (DESIGN.md §7).
+A ``SearchParams`` is hashable, so it keys compiled-searcher caches:
+``RairsIndex.searcher(params)`` returns a long-lived session that
+AOT-compiles the pipeline once per batch-size bucket and is reused for
+every identical params object.
+
+``max_scan=None`` means "derive the per-query block budget from the
+index" (``RairsIndex.default_max_scan``); ``resolve`` pins it so a
+session never re-derives per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .engine import EXEC_MODES
+
+# default pad-and-dispatch buckets: powers of two up to this cap; larger
+# batches are chunked so the executable set stays small and bounded.
+MAX_AUTO_BUCKET = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Validated query parameters (paper Alg. 2 knobs + engine controls).
+
+    k            final neighbours per query
+    nprobe       probed lists (Alg. 2 L1)
+    k_factor     refinement oversampling: bigK = k * k_factor
+    max_scan     static per-query block budget (None -> index default)
+    exec_mode    "paged" (per-query) | "grouped" (§5.3 list-major batch)
+    use_kernel   route the ADC scan through the Pallas kernel
+    query_tile   grouped-mode query tile (VMEM residency per fetch)
+    batch_buckets  optional ascending pad-and-dispatch bucket sizes;
+                 None -> powers of two up to MAX_AUTO_BUCKET
+    """
+    k: int = 10
+    nprobe: int = 16
+    k_factor: int = 10
+    max_scan: Optional[int] = None
+    exec_mode: str = "paged"
+    use_kernel: bool = False
+    query_tile: int = 8
+    batch_buckets: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.nprobe < 1:
+            raise ValueError(f"nprobe must be >= 1, got {self.nprobe}")
+        if self.k_factor < 1:
+            raise ValueError(f"k_factor must be >= 1, got {self.k_factor}")
+        if self.max_scan is not None and self.max_scan < 1:
+            raise ValueError(f"max_scan must be >= 1 or None, got {self.max_scan}")
+        if self.exec_mode not in EXEC_MODES:
+            raise ValueError(
+                f"exec_mode must be one of {EXEC_MODES}, got {self.exec_mode!r}")
+        if self.query_tile < 1:
+            raise ValueError(f"query_tile must be >= 1, got {self.query_tile}")
+        if self.batch_buckets is not None:
+            bb = tuple(int(b) for b in self.batch_buckets)
+            if not bb or any(b < 1 for b in bb) or list(bb) != sorted(set(bb)):
+                raise ValueError(
+                    "batch_buckets must be a non-empty ascending tuple of "
+                    f"positive sizes, got {self.batch_buckets!r}")
+            object.__setattr__(self, "batch_buckets", bb)
+
+    @property
+    def bigk(self) -> int:
+        return self.k * self.k_factor
+
+    def resolve(self, index) -> "SearchParams":
+        """Pin index-dependent defaults and cross-check against the index."""
+        nlist = index.config.nlist
+        if self.nprobe > nlist:
+            raise ValueError(
+                f"nprobe={self.nprobe} exceeds the index's nlist={nlist}")
+        if self.max_scan is not None:
+            return self
+        return dataclasses.replace(
+            self, max_scan=index.default_max_scan(self.nprobe))
+
+    def bucket_for(self, batch: int) -> int:
+        """Smallest dispatch bucket that fits `batch` (after chunking)."""
+        if self.batch_buckets is not None:
+            for b in self.batch_buckets:
+                if b >= batch:
+                    return b
+            return self.batch_buckets[-1]
+        if batch >= MAX_AUTO_BUCKET:
+            return MAX_AUTO_BUCKET
+        b = 1
+        while b < batch:
+            b *= 2
+        return b
+
+    @property
+    def max_chunk(self) -> int:
+        """Largest batch a single executable handles; bigger batches chunk."""
+        if self.batch_buckets is not None:
+            return self.batch_buckets[-1]
+        return MAX_AUTO_BUCKET

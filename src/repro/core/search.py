@@ -24,6 +24,11 @@ bitwise-identical results and counters (tests/test_engine.py).
 The distributed serving step (core/distributed.py) composes the same
 stages over a sharded ``BlockStore`` — improvements to any stage apply
 to both paths.
+
+``seil_search`` is the unit Searcher sessions compile: a session AOT-
+lowers this exact jitted function per batch-size bucket
+(``seil_search.lower(...).compile()``, core/searcher.py), which is why
+session results are bitwise identical to direct calls.
 """
 from __future__ import annotations
 

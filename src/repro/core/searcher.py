@@ -1,0 +1,131 @@
+"""Compiled searcher sessions — the query-side public API (DESIGN.md §7).
+
+A ``Searcher`` binds one ``RairsIndex`` to one ``SearchParams`` and
+AOT-compiles the four-stage pipeline (``seil_search``) per batch-size
+bucket.  Arbitrary batch sizes are padded up to the nearest bucket and
+dispatched to a cached executable, so steady-state serving traffic with
+varying batch shapes hits a small fixed set of XLA programs instead of
+retracing the jit per shape.
+
+Padding is row-safe: every pipeline stage is per-query (row-wise top-k,
+gathers, reductions), so the first B rows of a padded batch are bitwise
+identical to an unpadded run — asserted in tests/test_searcher.py.
+
+Sessions are long-lived by design: they hold the lowered executables,
+the resolved params, and compile/cache statistics, and they are the
+natural home for the follow-on serving state (incremental batch-union
+plans, query-tile clustering — ROADMAP.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .params import SearchParams
+from .search import SearchResult, seil_search
+
+
+@dataclasses.dataclass
+class SearcherStats:
+    """Compile/dispatch accounting for one session."""
+    compiles: int = 0        # executables built (one per bucket)
+    calls: int = 0           # searcher invocations
+    dispatches: int = 0      # chunk dispatches (>= calls)
+    cache_hits: int = 0      # dispatches served by an existing executable
+    padded_rows: int = 0     # total pad rows added across dispatches
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class Searcher:
+    """A compiled search session over one index (create via
+    ``RairsIndex.searcher(params)``).
+
+    Calling the session with a ``(B, D)`` query batch returns a
+    ``SearchResult`` identical to the legacy ``index.search`` kwarg path
+    for the same parameters.  ``stats`` exposes compile-cache counters;
+    ``buckets`` lists the batch sizes with a live executable.
+    """
+
+    def __init__(self, index, params: SearchParams):
+        if not isinstance(params, SearchParams):
+            raise TypeError(f"params must be SearchParams, got {type(params)}")
+        self.index = index
+        self.params = params.resolve(index)
+        self.stats = SearcherStats()
+        self._compiled: Dict[int, Any] = {}
+
+    @property
+    def buckets(self):
+        """Batch-size buckets with a compiled executable, ascending."""
+        return tuple(sorted(self._compiled))
+
+    def compile_stats(self) -> Dict[str, Any]:
+        d = self.stats.as_dict()
+        d["buckets"] = list(self.buckets)
+        return d
+
+    def _executable(self, bucket: int):
+        hit = bucket in self._compiled
+        if not hit:
+            p = self.params
+            idx = self.index
+            q_spec = jax.ShapeDtypeStruct(
+                (bucket, idx.vectors.shape[1]), jnp.float32)
+            lowered = seil_search.lower(
+                idx.arrays, idx.centroids, idx.codebook, idx.vectors, q_spec,
+                nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+                metric=idx.config.metric,
+                dedup_results=idx.needs_result_dedup,
+                use_kernel=p.use_kernel, oversample=idx.result_oversample,
+                exec_mode=p.exec_mode, query_tile=p.query_tile)
+            self._compiled[bucket] = lowered.compile()
+            self.stats.compiles += 1
+        else:
+            self.stats.cache_hits += 1
+        self.stats.dispatches += 1
+        return self._compiled[bucket]
+
+    def warmup(self, *batch_sizes: int) -> "Searcher":
+        """Pre-compile the buckets covering `batch_sizes` (chainable)."""
+        for b in batch_sizes:
+            self._executable(self.params.bucket_for(min(b, self.params.max_chunk)))
+        return self
+
+    def __call__(self, queries: jnp.ndarray) -> SearchResult:
+        q = jnp.asarray(queries)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (B, D), got shape {q.shape}")
+        if q.shape[0] == 0:
+            raise ValueError("empty query batch (B=0)")
+        if q.dtype != jnp.float32:
+            q = q.astype(jnp.float32)
+        idx = self.index
+        n = q.shape[0]
+        outs = []
+        s = 0
+        while s < n:
+            b = min(n - s, self.params.max_chunk)
+            bucket = self.params.bucket_for(b)
+            qc = q[s:s + b]
+            if b < bucket:
+                qc = jnp.concatenate(
+                    [qc, jnp.zeros((bucket - b, q.shape[1]), q.dtype)], axis=0)
+                self.stats.padded_rows += bucket - b
+            fn = self._executable(bucket)
+            r = fn(idx.arrays, idx.centroids, idx.codebook, idx.vectors, qc)
+            if b < bucket:
+                r = jax.tree.map(lambda a: a[:b], r)
+            outs.append(r)
+            s += b
+        self.stats.calls += 1
+        if len(outs) == 1:
+            return outs[0]
+        return jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *outs)
+
+    # explicit alias for callers that prefer a method name
+    search = __call__

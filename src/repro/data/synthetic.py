@@ -21,6 +21,7 @@ Zipf-ish data norms for inner-product skew.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Tuple
 
 import jax
@@ -75,7 +76,10 @@ def make_dataset(name: str, seed: int = 0
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, DatasetSpec]:
     """Returns (data (n,D), queries (nq,D), spec)."""
     spec = DATASETS[name]
-    key = jax.random.PRNGKey(hash(name) % (2 ** 31) + seed)
+    # crc32, NOT hash(): the builtin is salted per process, which would
+    # regenerate a different corpus on every run and break index
+    # persistence (save in one process, serve from another).
+    key = jax.random.PRNGKey(zlib.crc32(name.encode()) % (2 ** 31) + seed)
     kd, kq, kp, ks, kw, kn = jax.random.split(key, 6)
     z = _latent_mixture(kd, spec.n, spec.n_components, spec.latent,
                         spec.zipf, spec.spread)

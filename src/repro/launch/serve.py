@@ -1,8 +1,14 @@
-"""RAIRS ANN serving driver: build an index over a synthetic corpus and
-serve batched queries — the paper's own workload end-to-end.
+"""RAIRS ANN serving driver: build (or load) an index over a synthetic
+corpus and serve batched queries through a compiled searcher session —
+the paper's own workload end-to-end.
 
 ``PYTHONPATH=src python -m repro.launch.serve --dataset sift1m
 --nprobe 16 --batches 4``
+
+Persistence (skip the train+build phase on repeat runs):
+
+``... --save /tmp/sift1m.npz``      # first run: build then save
+``... --load /tmp/sift1m.npz``      # later runs: load, serve immediately
 """
 from __future__ import annotations
 
@@ -12,8 +18,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (IndexConfig, build_index, dco_summary, ground_truth,
-                        recall_at_k)
+from repro.core import (IndexConfig, SearchParams, available_strategies,
+                        build_index, dco_summary, ground_truth, load_index,
+                        read_index_meta, recall_at_k, save_index)
 from repro.data import make_dataset
 
 
@@ -21,11 +28,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sift1m")
     ap.add_argument("--strategy", default="rair",
-                    choices=("single", "naive", "soar", "rair", "srair"))
+                    choices=available_strategies())
     ap.add_argument("--no-seil", action="store_true")
     ap.add_argument("--nlist", type=int, default=256)
     ap.add_argument("--nprobe", type=int, default=16)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-scan", type=int, default=None,
+                    help="per-query block budget (default: index-derived)")
     ap.add_argument("--batches", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--exec-mode", default="paged",
@@ -34,36 +43,73 @@ def main():
                          "batched execution (paper §5.3)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the ADC scan through the Pallas kernel")
+    ap.add_argument("--save", metavar="PATH", default=None,
+                    help="persist the built index bundle to PATH")
+    ap.add_argument("--load", metavar="PATH", default=None,
+                    help="load an index bundle from PATH (skips train+build)")
     args = ap.parse_args()
+    if args.load and args.save:
+        ap.error("--save and --load are mutually exclusive (a loaded "
+                 "bundle is never re-written)")
 
     x, q, spec = make_dataset(args.dataset)
-    cfg = IndexConfig(nlist=args.nlist, strategy=args.strategy,
-                      seil=not args.no_seil, metric=spec.metric)
-    t0 = time.perf_counter()
-    index = build_index(jax.random.PRNGKey(0), x, cfg)
-    print(f"built {args.strategy}{'' if args.no_seil else '+SEIL'} index "
-          f"over {x.shape[0]} vectors in {time.perf_counter() - t0:.1f}s "
-          f"(phases: { {k: round(v, 1) for k, v in index.build_seconds.items()} })")
+    if args.load:
+        meta = read_index_meta(args.load)
+        saved_ds = meta.get("extra", {}).get("dataset")
+        if saved_ds is not None and saved_ds != args.dataset:
+            ap.error(f"{args.load} was built over dataset {saved_ds!r}, "
+                     f"not --dataset {args.dataset!r}; recall against the "
+                     f"wrong corpus is meaningless")
+        t0 = time.perf_counter()
+        index = load_index(args.load)
+        cfg = index.config
+        if index.vectors.shape[1] != x.shape[1]:
+            ap.error(f"{args.load} holds {index.vectors.shape[1]}-d vectors "
+                     f"but --dataset {args.dataset} is {x.shape[1]}-d")
+        print(f"loaded {cfg.strategy}{'+SEIL' if cfg.seil else ''} index "
+              f"over {index.vectors.shape[0]} vectors from {args.load} "
+              f"in {time.perf_counter() - t0:.1f}s (train+build skipped; "
+              f"--strategy/--nlist/--no-seil come from the bundle)")
+    else:
+        cfg = IndexConfig(nlist=args.nlist, strategy=args.strategy,
+                          seil=not args.no_seil, metric=spec.metric)
+        t0 = time.perf_counter()
+        index = build_index(jax.random.PRNGKey(0), x, cfg)
+        print(f"built {args.strategy}{'' if args.no_seil else '+SEIL'} index "
+              f"over {x.shape[0]} vectors in {time.perf_counter() - t0:.1f}s "
+              f"(phases: { {k: round(v, 1) for k, v in index.build_seconds.items()} })")
+        if args.save:
+            t0 = time.perf_counter()
+            save_index(index, args.save, extra={"dataset": args.dataset})
+            print(f"saved index bundle to {args.save} "
+                  f"in {time.perf_counter() - t0:.1f}s")
     print(f"  blocks={index.stats.n_blocks} items={index.stats.n_items_stored} "
           f"refs={index.stats.n_ref_entries} "
           f"logical={index.stats.logical_bytes / 1e6:.1f}MB")
 
-    gt = ground_truth(x, q[:args.batches * args.batch_size], args.k,
-                      metric=spec.metric)
+    searcher = index.searcher(SearchParams(
+        k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
+        exec_mode=args.exec_mode, use_kernel=args.use_kernel))
+
+    # score against the index's own corpus (== x when freshly built; under
+    # --load it guards against dataset-generator drift since the save)
+    gt = ground_truth(index.vectors, q[:args.batches * args.batch_size],
+                      args.k, metric=index.config.metric)
     for b in range(args.batches):
         qb = q[b * args.batch_size:(b + 1) * args.batch_size]
         t0 = time.perf_counter()
-        res = index.search(qb, k=args.k, nprobe=args.nprobe,
-                           exec_mode=args.exec_mode,
-                           use_kernel=args.use_kernel)
+        res = searcher(qb)
         res.ids.block_until_ready()
         dt = time.perf_counter() - t0
         rec = recall_at_k(np.asarray(res.ids),
                           gt[b * args.batch_size:(b + 1) * args.batch_size])
         s = dco_summary(res)
+        st = searcher.stats
         print(f"batch {b}: recall@{args.k}={rec:.4f} "
               f"dco/query={s['total_dco']:.0f} "
-              f"qps={args.batch_size / dt:.0f}")
+              f"qps={qb.shape[0] / dt:.0f} "
+              f"compile[new={st.compiles} hit={st.cache_hits} "
+              f"buckets={list(searcher.buckets)}]")
 
 
 if __name__ == "__main__":
