@@ -7,7 +7,10 @@ One function per paper table/figure (see DESIGN.md §6).  Prints
 The engine bench additionally writes a machine-readable
 ``BENCH_engine.json`` at the repo root (recall / QPS / DCO per
 exec-mode x nprobe config, plus searcher compile-cache stats) so the
-perf trajectory is tracked across PRs instead of only printed.
+perf trajectory is tracked across PRs instead of only printed.  The
+stream bench does the same with ``BENCH_stream.json`` (append
+throughput delta-path vs legacy rebuild, layout-build count — must be
+0 on the delta path —, compaction cost, recall under churn).
 """
 from __future__ import annotations
 
@@ -22,7 +25,10 @@ from . import suite
 
 BENCH_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_engine.json")
+STREAM_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_stream.json")
 BENCH_JSON_SCHEMA_VERSION = 1
+STREAM_JSON_SCHEMA_VERSION = 1
 
 
 def write_bench_json(engine_out: dict, dataset: str, path: str) -> None:
@@ -51,6 +57,19 @@ def write_bench_json(engine_out: dict, dataset: str, path: str) -> None:
     sys.stderr.write(f"[bench json -> {os.path.abspath(path)}]\n")
 
 
+def write_stream_json(stream_out: dict, dataset: str, path: str) -> None:
+    """Persist the streaming bench (append/compact/churn) summary."""
+    payload = {
+        "schema_version": STREAM_JSON_SCHEMA_VERSION,
+        "dataset": dataset,
+        **stream_out,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    sys.stderr.write(f"[stream json -> {os.path.abspath(path)}]\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -58,8 +77,12 @@ def main() -> None:
     ap.add_argument("--bench-json", type=str, default=BENCH_JSON_DEFAULT,
                     help="where the engine bench writes its machine-readable "
                          "summary ('' disables)")
+    ap.add_argument("--stream-json", type=str, default=STREAM_JSON_DEFAULT,
+                    help="where the stream bench writes its machine-readable "
+                         "summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
-                    help="dataset for the engine bench / BENCH_engine.json")
+                    help="dataset for the engine/stream benches and their "
+                         "BENCH_*.json files")
     args = ap.parse_args()
 
     benches = _bench_list(args)
@@ -73,6 +96,8 @@ def main() -> None:
             out = fn()
             if name == "engine_modes" and args.bench_json:
                 write_bench_json(out, args.bench_dataset, args.bench_json)
+            if name == "stream" and args.stream_json:
+                write_stream_json(out, args.bench_dataset, args.stream_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -108,6 +133,7 @@ def _bench_list(args):
             main_sets if args.full else ("sift1m",))),
         ("engine_modes",
          lambda: suite.bench_exec_modes(dataset=args.bench_dataset)),
+        ("stream", lambda: suite.bench_stream(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

@@ -14,8 +14,7 @@ import numpy as np
 from repro.core import (IndexConfig, build_index, dco_summary, insert_batch,
                         per_query_recall, recall_at_k)
 from repro.core.assign import candidate_lists, rair_assign
-from repro.core.seil import build_id_map, cell_stats, delete_ids, \
-    vectors_in_large_cells
+from repro.core.seil import cell_stats, vectors_in_large_cells
 
 from .common import (NPROBES, at_recall, curve, emit, get_context, qps_at,
                      save_json, timed_search)
@@ -147,7 +146,11 @@ def bench_latency(dataset="sift1m"):
 
 
 def bench_insert_delete(dataset="sift1m"):
-    """Fig 12: insertion/deletion throughput, RAIRS vs IVFPQfs."""
+    """Fig 12: insertion/deletion throughput, RAIRS vs IVFPQfs — both
+    routed through the streaming subsystem (core/stream/): inserts land
+    in the delta segment via the `insert_batch` compat wrapper, deletes
+    flip tombstone bits (the old layout-level `seil.delete_ids` path is
+    measurement-only and left consistency-incoherent by design)."""
     ctx = get_context(dataset)
     n = ctx.x.shape[0]
     n0 = int(n * 0.8)
@@ -162,16 +165,13 @@ def bench_insert_delete(dataset="sift1m"):
         t0 = time.perf_counter()
         for b in range(5):
             s = n0 + b * batch
-            idx = insert_batch(idx, ctx.x[s:s + batch])
+            idx = insert_batch(idx, ctx.x[s:s + batch])  # -> StreamingIndex
         t_ins = time.perf_counter() - t0
-        id_map = build_id_map(idx.arrays)
         rng = np.random.default_rng(0)
-        victims = rng.choice(n, size=5 * batch, replace=False)
+        victims = rng.choice(idx.n_total, size=5 * batch, replace=False)
         t0 = time.perf_counter()
-        arrays = idx.arrays
         for b in range(5):
-            arrays = delete_ids(arrays, id_map,
-                                victims[b * batch:(b + 1) * batch])
+            idx.delete(victims[b * batch:(b + 1) * batch])
         t_del = time.perf_counter() - t0
         out[name] = {"insert_vec_per_s": 5 * batch / t_ins,
                      "delete_vec_per_s": 5 * batch / t_del}
@@ -180,6 +180,91 @@ def bench_insert_delete(dataset="sift1m"):
     emit("fig12_insert_delete", 0.0,
          f"insert_rel={rel_i:.3f} delete_rel={rel_d:.3f}")
     save_json("fig12_insert_delete", out)
+    return out
+
+
+def bench_stream(dataset="sift1m", batches=8):
+    """Streaming-subsystem bench (-> BENCH_stream.json): append
+    throughput through the delta path vs the legacy pooled full-layout
+    rebuild, deletion throughput, compaction cost, and recall under
+    churn vs a brute-force oracle over the surviving corpus."""
+    import repro.core.index as index_mod
+    from repro.core import StreamingIndex, build_seil_call_count
+    from repro.core.seil import build_seil
+
+    ctx = get_context(dataset, n_queries=200)
+    n = ctx.x.shape[0]
+    n0 = int(n * 0.8)
+    batch = max(1, (n - n0) // batches)
+    cfg = IndexConfig(nlist=ctx.nlist, strategy="rair", seil=True,
+                      metric=ctx.metric)
+    idx = build_index(jax.random.PRNGKey(0), ctx.x[:n0], cfg,
+                      centroids=ctx.centroids, codebook=ctx.codebook)
+
+    # legacy baseline: one pooled re-add, i.e. what insert_batch did per
+    # call before the delta path (assign+encode the batch, then rebuild
+    # the whole SEIL layout from pooled items)
+    xb = ctx.x[n0:n0 + batch]
+    t0 = time.perf_counter()
+    a_new = index_mod.compute_assignments(xb, idx.centroids, cfg)
+    c_new = np.asarray(index_mod.pq_encode(idx.codebook, xb))
+    all_a = np.concatenate([idx.assigns, a_new], axis=0)
+    all_c = np.concatenate([idx.codes, c_new], axis=0)
+    build_seil(all_a, all_c, np.arange(all_a.shape[0], dtype=np.int32),
+               cfg.nlist, block=cfg.block, shared=True, code_bits=cfg.nbits)
+    rebuild_vps = batch / (time.perf_counter() - t0)
+
+    stream = StreamingIndex(idx)
+    layout_calls0 = build_seil_call_count()
+    t0 = time.perf_counter()
+    inserted = 0
+    for b in range(batches):
+        s = n0 + b * batch
+        inserted += len(stream.insert(ctx.x[s:s + batch]))
+    delta_vps = inserted / (time.perf_counter() - t0)
+    delta_layout_builds = build_seil_call_count() - layout_calls0
+
+    rng = np.random.default_rng(0)
+    victims = rng.choice(stream.n_total, size=max(1, stream.n_total // 10),
+                         replace=False)
+    t0 = time.perf_counter()
+    deleted = stream.delete(victims)
+    delete_vps = deleted / (time.perf_counter() - t0)
+
+    from repro.core import ground_truth
+    live = stream.live_ids()
+    gt = live[ground_truth(stream.live_vectors(), ctx.q, 10,
+                           metric=ctx.metric)]
+    r = stream.search(ctx.q, k=10, nprobe=16)
+    recall_churn = recall_at_k(np.asarray(r.ids), gt)
+
+    info = stream.compact()
+    gt2 = stream.live_ids()[ground_truth(stream.live_vectors(), ctx.q, 10,
+                                         metric=ctx.metric)]
+    r2 = stream.search(ctx.q, k=10, nprobe=16)
+    recall_post = recall_at_k(np.asarray(r2.ids), gt2)
+
+    out = {
+        "n_base": n0, "append_batch": batch, "append_batches": batches,
+        "append_vec_per_s_delta": delta_vps,
+        "append_vec_per_s_rebuild": rebuild_vps,
+        "append_speedup": delta_vps / rebuild_vps,
+        "delta_layout_builds": int(delta_layout_builds),  # must be 0
+        "delete_vec_per_s": delete_vps,
+        "deleted": int(deleted),
+        "compact_seconds": info["seconds"],
+        "compact_layout_seconds": info["layout_seconds"],
+        "recall_churn": recall_churn,
+        "recall_post_compact": recall_post,
+        "n_live": stream.n_live,
+        "searcher": stream.searcher_stats(),
+    }
+    emit("stream", 0.0,
+         f"append_speedup={out['append_speedup']:.1f}x "
+         f"layout_builds={delta_layout_builds} "
+         f"recall_churn={recall_churn:.3f} "
+         f"recall_post_compact={recall_post:.3f}")
+    save_json("stream", out)
     return out
 
 

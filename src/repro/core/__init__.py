@@ -16,9 +16,12 @@ from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION, load_index,  # noqa
                  read_index_meta, save_index)
 from .params import MAX_AUTO_BUCKET, SearchParams  # noqa
 from .searcher import Searcher, SearcherStats  # noqa
+from .stream import (StaleSessionError, StreamConfig, StreamingIndex,  # noqa
+                     StreamingSearcher, StreamStats, streaming_search)
 from .kmeans import kmeans_fit, kmeans_step_sharded, pairwise_sq_l2  # noqa
 from .metrics import ground_truth, recall_at_k, per_query_recall, dco_summary  # noqa
 from .pq import PQCodebook, pq_train, pq_encode, pq_lut, pq_adc, pq_decode  # noqa
 from .search import seil_search, SearchResult  # noqa
-from .seil import (SeilArrays, SeilStats, build_seil, cell_stats,  # noqa
-                   vectors_in_large_cells, build_id_map, delete_ids)
+from .seil import (SeilArrays, SeilStats, build_seil, build_seil_call_count,  # noqa
+                   cell_stats, vectors_in_large_cells, build_id_map,
+                   delete_ids)

@@ -8,13 +8,31 @@ from .types import BIG
 
 
 def finalize_candidates(flat_d, flat_i, *, bigk, k, vectors, queries,
-                        metric, dedup_results, oversample: int = 2):
+                        metric, dedup_results, oversample: int = 2,
+                        extra_d=None, extra_i=None, live=None):
     """Shared tail of all search paths: top-bigK (+ optional id-dedup for
     duplicated layouts), exact-distance refinement, top-K packing.
 
     Duplicated layouts (no SEIL / m-assignment) retrieve `oversample*bigK`
     candidates before id-dedup so duplicate copies cannot displace unique
-    candidates (a dedup-on-insert result queue), then truncate to bigK."""
+    candidates (a dedup-on-insert result queue), then truncate to bigK.
+
+    Streaming hooks (core/stream/, both default-off and bitwise inert
+    when unused):
+      extra_d/extra_i  (B, C) ADC distances + ids of delta-segment
+                       candidates, merged ahead of the top-bigK so fresh
+                       inserts compete with base-layout candidates;
+      live             (n_total,) bool tombstone mask over the id space —
+                       dead candidates (deleted base or delta items) are
+                       forced to +inf before selection, so they can
+                       neither be returned nor displace live candidates.
+    """
+    if extra_d is not None:
+        flat_d = jnp.concatenate([flat_d, extra_d], axis=1)
+        flat_i = jnp.concatenate([flat_i, extra_i], axis=1)
+    if live is not None:
+        dead = (flat_i >= 0) & ~live[jnp.maximum(flat_i, 0)]
+        flat_d = jnp.where(dead, jnp.inf, flat_d)
     bq = flat_d.shape[0]
     fetch = bigk * (oversample if dedup_results else 1)
     fetch = min(fetch, flat_d.shape[1])

@@ -135,6 +135,14 @@ class RairsIndex:
             cache[params] = Searcher(self, params)
         return cache[params]
 
+    def streaming(self, config=None):
+        """Wrap this (immutable) index as the base epoch of a mutable
+        ``StreamingIndex`` (core/stream/, DESIGN.md §8): inserts go to a
+        delta segment, deletes to a tombstone mask, ``compact()`` folds
+        both into a fresh base.  `config` is an optional StreamConfig."""
+        from .stream import StreamingIndex
+        return StreamingIndex(self, config)
+
     def searcher_stats(self) -> dict:
         """Aggregate compile-cache stats over every cached session (the
         public accessor — benchmarks/serving should not reach into the
@@ -211,23 +219,19 @@ def build_index(key: jax.Array, x: jnp.ndarray, cfg: IndexConfig,
                       assigns=assigns, codes=codes, build_seconds=times)
 
 
-def insert_batch(index: RairsIndex, x_new: jnp.ndarray) -> RairsIndex:
-    """Append a batch (paper Fig. 12): re-assign new vectors, rebuild layout
-    from pooled items (centroids/codebooks frozen, as in Faiss add())."""
-    cfg = index.config
-    assigns_new = compute_assignments(x_new, index.centroids, cfg)
-    codes_new = np.asarray(pq_encode(index.codebook, x_new))
-    all_assigns = np.concatenate([index.assigns, assigns_new], axis=0)
-    codes_old = index.codes
-    if codes_old is None:  # index predates the code cache: encode once
-        codes_old = np.asarray(pq_encode(index.codebook, index.vectors))
-    all_codes = np.concatenate([codes_old, codes_new], axis=0)
-    n_total = all_assigns.shape[0]
-    shared = cfg.seil and cfg.multi_m == 2
-    arrays, stats = build_seil(
-        all_assigns, all_codes, np.arange(n_total, dtype=np.int32),
-        cfg.nlist, block=cfg.block, shared=shared, code_bits=cfg.nbits)
-    return dataclasses.replace(
-        index, arrays=arrays, stats=stats, assigns=all_assigns,
-        codes=all_codes,
-        vectors=jnp.concatenate([index.vectors, jnp.asarray(x_new)], axis=0))
+def insert_batch(index, x_new: jnp.ndarray):
+    """Append a batch through the streaming delta path (paper Fig. 12,
+    DESIGN.md §8) — compat wrapper over ``StreamingIndex``.
+
+    Historically this re-ran ``build_seil`` over the pooled corpus on
+    every append (O(n) per batch).  It now wraps `index` in (or reuses)
+    a ``StreamingIndex`` and appends to its delta segment in O(batch);
+    the result is read-side compatible with ``RairsIndex`` (vectors /
+    search / searcher), new ids continue the old numbering, and
+    ``.compact()`` folds the delta into a base whose search results are
+    bitwise equal to the old pooled rebuild (tests/test_stream.py)."""
+    from .stream import StreamingIndex   # local: stream imports this module
+    stream = (index if isinstance(index, StreamingIndex)
+              else index.streaming())
+    stream.insert(x_new)
+    return stream

@@ -1,4 +1,4 @@
-"""Index persistence — save/load a built RairsIndex as one npz bundle.
+"""Index persistence — save/load a built index as one npz bundle.
 
 The bundle holds every array the query path needs (centroids, PQ
 codebooks, SEIL block store + per-list tables, refine vectors) plus the
@@ -11,6 +11,14 @@ result equality).
 Config / stats / provenance travel as a JSON document embedded in the
 npz (as a uint8 array — no pickling), headed by a format name and
 version so future layout changes stay detectable.
+
+Format v2 (DESIGN.md §8) adds optional *streaming* state: a bundle may
+carry a ``StreamingIndex`` — the base epoch arrays exactly as before,
+plus the delta segment (vectors/codes/assigns/liveness) and the base
+tombstone bitmap (bit-packed), with epoch/version counters in the JSON
+meta.  ``save_index`` accepts either index type; ``load_index`` returns
+whichever type the bundle holds.  v1 bundles (pre-streaming) load
+unchanged — v1 is exactly "v2 with no streaming section".
 """
 from __future__ import annotations
 
@@ -25,40 +33,60 @@ import numpy as np
 from .index import IndexConfig, RairsIndex
 from .pq import PQCodebook
 from .seil import SeilArrays, SeilStats
+from .stream import StreamConfig, StreamingIndex
 
 INDEX_FORMAT = "rairs-index"
-INDEX_FORMAT_VERSION = 1
+INDEX_FORMAT_VERSION = 2
+READ_FORMAT_VERSIONS = (1, 2)   # v1 = v2 without the streaming section
 
 _SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
                 "refs", "refs_other", "misc")
 
 
-def save_index(index: RairsIndex, path: Union[str, os.PathLike],
-               extra: dict = None) -> None:
+def save_index(index: Union[RairsIndex, StreamingIndex],
+               path: Union[str, os.PathLike], extra: dict = None) -> None:
     """Write `index` to `path` as a compressed npz bundle (exact path —
     no implicit .npz suffix is appended).  `extra` is a JSON-able dict
     of caller provenance (e.g. {"dataset": "sift1m"}) stored alongside
-    the config and readable via ``read_index_meta``."""
+    the config and readable via ``read_index_meta``.  A StreamingIndex
+    is persisted without compacting: the delta segment and tombstones
+    round-trip as-is."""
+    stream = index if isinstance(index, StreamingIndex) else None
+    base = stream.base if stream is not None else index
     meta = {
         "format": INDEX_FORMAT,
         "format_version": INDEX_FORMAT_VERSION,
-        "config": dataclasses.asdict(index.config),
-        "stats": dataclasses.asdict(index.stats),
-        "build_seconds": index.build_seconds,
-        "has_codes": index.codes is not None,
+        "config": dataclasses.asdict(base.config),
+        "stats": dataclasses.asdict(base.stats),
+        "build_seconds": base.build_seconds,
+        "has_codes": base.codes is not None,
         "extra": dict(extra or {}),
     }
     arrays = {
-        "meta_json": np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8),
-        "centroids": np.asarray(index.centroids),
-        "codebooks": np.asarray(index.codebook.codebooks),
-        "vectors": np.asarray(index.vectors),
-        "assigns": np.asarray(index.assigns),
+        "centroids": np.asarray(base.centroids),
+        "codebooks": np.asarray(base.codebook.codebooks),
+        "vectors": np.asarray(base.vectors),
+        "assigns": np.asarray(base.assigns),
     }
     for f in _SEIL_FIELDS:
-        arrays[f] = np.asarray(getattr(index.arrays, f))
-    if index.codes is not None:
-        arrays["codes"] = np.asarray(index.codes)
+        arrays[f] = np.asarray(getattr(base.arrays, f))
+    if base.codes is not None:
+        arrays["codes"] = np.asarray(base.codes)
+    if stream is not None:
+        d = stream._delta
+        meta["streaming"] = {
+            "epoch": stream.epoch,
+            "version": stream.version,
+            "delta_count": int(d.count),
+            "stream_config": dataclasses.asdict(stream.stream_config),
+        }
+        arrays["delta_vectors"] = d.vectors[:d.count]
+        arrays["delta_codes"] = d.codes[:d.count]
+        arrays["delta_assigns"] = d.assigns[:d.count]
+        arrays["delta_live"] = d.live[:d.count]
+        arrays["base_live"] = np.packbits(stream._base_live)
+    arrays["meta_json"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), np.uint8)
     with open(path, "wb") as fh:
         np.savez_compressed(fh, **arrays)
 
@@ -71,10 +99,10 @@ def _check_meta(path, z) -> dict:
         raise ValueError(
             f"{path}: format {meta.get('format')!r} != {INDEX_FORMAT!r}")
     version = meta.get("format_version")
-    if version != INDEX_FORMAT_VERSION:
+    if version not in READ_FORMAT_VERSIONS:
         raise ValueError(
             f"{path}: unsupported format_version {version} "
-            f"(this build reads version {INDEX_FORMAT_VERSION})")
+            f"(this build reads versions {READ_FORMAT_VERSIONS})")
     return meta
 
 
@@ -85,13 +113,19 @@ def read_index_meta(path: Union[str, os.PathLike]) -> dict:
         return _check_meta(path, z)
 
 
-def load_index(path: Union[str, os.PathLike]) -> RairsIndex:
-    """Load an index bundle written by ``save_index``."""
+def load_index(path: Union[str, os.PathLike]
+               ) -> Union[RairsIndex, StreamingIndex]:
+    """Load a bundle written by ``save_index``.
+
+    Returns a plain ``RairsIndex`` for frozen bundles (all v1 bundles,
+    and v2 bundles saved from a RairsIndex) or a ``StreamingIndex`` —
+    delta segment, tombstones and epoch/version counters restored —
+    when the bundle carries streaming state."""
     with np.load(path, allow_pickle=False) as z:
         meta = _check_meta(path, z)
         cfg = IndexConfig(**meta["config"])
         arrays = SeilArrays(**{f: jnp.asarray(z[f]) for f in _SEIL_FIELDS})
-        return RairsIndex(
+        base = RairsIndex(
             config=cfg,
             centroids=jnp.asarray(z["centroids"]),
             codebook=PQCodebook(jnp.asarray(z["codebooks"])),
@@ -102,3 +136,17 @@ def load_index(path: Union[str, os.PathLike]) -> RairsIndex:
             codes=np.asarray(z["codes"]) if meta["has_codes"] else None,
             build_seconds=dict(meta.get("build_seconds", {})),
         )
+        sm = meta.get("streaming")
+        if sm is None:
+            return base
+        stream = StreamingIndex(base, StreamConfig(**sm["stream_config"]))
+        stream.restore_state(
+            epoch=sm["epoch"], version=sm["version"],
+            base_live=np.unpackbits(
+                z["base_live"], count=base.vectors.shape[0]).astype(bool),
+            delta_vectors=np.asarray(z["delta_vectors"]),
+            delta_codes=np.asarray(z["delta_codes"]),
+            delta_assigns=np.asarray(z["delta_assigns"]),
+            delta_live=np.asarray(z["delta_live"], bool),
+        )
+        return stream

@@ -9,6 +9,12 @@ every identical params object.
 ``max_scan=None`` means "derive the per-query block budget from the
 index" (``RairsIndex.default_max_scan``); ``resolve`` pins it so a
 session never re-derives per call.
+
+Mutable indexes key on params too: ``StreamingIndex.searcher(params)``
+(core/stream/, DESIGN.md §8) caches sessions per params object and
+shares compiled streaming executables keyed by ``(params, delta
+capacity)``, so the same hashability contract lets churn-driven session
+turnover reuse executables instead of recompiling.
 """
 from __future__ import annotations
 

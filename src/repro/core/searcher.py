@@ -15,6 +15,12 @@ Sessions are long-lived by design: they hold the lowered executables,
 the resolved params, and compile/cache statistics, and they are the
 natural home for the follow-on serving state (incremental batch-union
 plans, query-tile clustering — ROADMAP.md).
+
+Mutable indexes extend this machinery (DESIGN.md §8): a session records
+the ``epoch`` of the index it compiled against, and the ``_lower`` /
+``_call_inputs`` / ``_check_current`` hooks let ``StreamingSearcher``
+(core/stream/) swap in the streaming pipeline and fail deterministically
+once the owning ``StreamingIndex`` has mutated past the session.
 """
 from __future__ import annotations
 
@@ -56,6 +62,7 @@ class Searcher:
             raise TypeError(f"params must be SearchParams, got {type(params)}")
         self.index = index
         self.params = params.resolve(index)
+        self.epoch = getattr(index, "epoch", 0)
         self.stats = SearcherStats()
         self._compiled: Dict[int, Any] = {}
 
@@ -69,21 +76,35 @@ class Searcher:
         d["buckets"] = list(self.buckets)
         return d
 
+    # -- overridable hooks (core/stream/ swaps in the streaming pipeline) --
+    def _check_current(self) -> None:
+        """Raise if the underlying index has mutated past this session.
+        A plain ``RairsIndex`` is immutable, so the base hook is a no-op;
+        ``StreamingSearcher`` raises ``StaleSessionError`` here."""
+
+    def _lower(self, bucket: int):
+        """Lower the search pipeline for one batch-size bucket."""
+        p = self.params
+        idx = self.index
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, idx.vectors.shape[1]), jnp.float32)
+        return seil_search.lower(
+            idx.arrays, idx.centroids, idx.codebook, idx.vectors, q_spec,
+            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            use_kernel=p.use_kernel, oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile)
+
+    def _call_inputs(self) -> tuple:
+        """Runtime arguments preceding the query batch at dispatch."""
+        idx = self.index
+        return (idx.arrays, idx.centroids, idx.codebook, idx.vectors)
+
     def _executable(self, bucket: int):
         hit = bucket in self._compiled
         if not hit:
-            p = self.params
-            idx = self.index
-            q_spec = jax.ShapeDtypeStruct(
-                (bucket, idx.vectors.shape[1]), jnp.float32)
-            lowered = seil_search.lower(
-                idx.arrays, idx.centroids, idx.codebook, idx.vectors, q_spec,
-                nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
-                metric=idx.config.metric,
-                dedup_results=idx.needs_result_dedup,
-                use_kernel=p.use_kernel, oversample=idx.result_oversample,
-                exec_mode=p.exec_mode, query_tile=p.query_tile)
-            self._compiled[bucket] = lowered.compile()
+            self._compiled[bucket] = self._lower(bucket).compile()
             self.stats.compiles += 1
         else:
             self.stats.cache_hits += 1
@@ -97,6 +118,7 @@ class Searcher:
         return self
 
     def __call__(self, queries: jnp.ndarray) -> SearchResult:
+        self._check_current()
         q = jnp.asarray(queries)
         if q.ndim != 2:
             raise ValueError(f"queries must be (B, D), got shape {q.shape}")
@@ -104,7 +126,6 @@ class Searcher:
             raise ValueError("empty query batch (B=0)")
         if q.dtype != jnp.float32:
             q = q.astype(jnp.float32)
-        idx = self.index
         n = q.shape[0]
         outs = []
         s = 0
@@ -117,7 +138,7 @@ class Searcher:
                     [qc, jnp.zeros((bucket - b, q.shape[1]), q.dtype)], axis=0)
                 self.stats.padded_rows += bucket - b
             fn = self._executable(bucket)
-            r = fn(idx.arrays, idx.centroids, idx.codebook, idx.vectors, qc)
+            r = fn(*self._call_inputs(), qc)
             if b < bucket:
                 r = jax.tree.map(lambda a: a[:b], r)
             outs.append(r)

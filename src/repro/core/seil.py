@@ -102,6 +102,18 @@ def _pad_table(groups: np.ndarray, values: np.ndarray, nlist: int,
     return table
 
 
+# Monotonic count of full layout builds.  The streaming subsystem
+# (core/stream/) asserts its delta append path never triggers one, and
+# benchmarks/run.py records it in BENCH_stream.json — a rebuild is the
+# O(n) cost the delta segment exists to avoid.
+_BUILD_SEIL_CALLS = 0
+
+
+def build_seil_call_count() -> int:
+    """Number of full layout builds since process start."""
+    return _BUILD_SEIL_CALLS
+
+
 def build_seil(
     assigns: np.ndarray,        # (n, m) sorted list ids per vector
     codes: np.ndarray,          # (n, M) uint8
@@ -112,6 +124,8 @@ def build_seil(
     code_bits: int = 4,
 ) -> Tuple[SeilArrays, SeilStats]:
     """Build the SEIL (or baseline duplicated) list layout. Paper Alg. 4."""
+    global _BUILD_SEIL_CALLS
+    _BUILD_SEIL_CALLS += 1
     assigns = np.asarray(assigns, np.int32)
     codes = np.asarray(codes, np.uint8)
     ids = np.asarray(ids, np.int32)
@@ -281,7 +295,14 @@ def build_id_map(arrays: SeilArrays) -> Dict[int, list]:
 
 
 def delete_ids(arrays: SeilArrays, id_map: Dict[int, list], del_ids) -> SeilArrays:
-    """Invalidate entries for `del_ids` (paper §6.1 deletion support)."""
+    """Invalidate entries for `del_ids` (paper §6.1 deletion support).
+
+    LAYOUT-LEVEL ONLY: this rewrites ``SeilArrays`` in isolation and
+    leaves an index's ``assigns``/``codes``/``vectors``/``SeilStats`` —
+    and any cached searcher session — stale.  Index-level deletion must
+    go through ``StreamingIndex.delete`` (core/stream/), which masks
+    tombstones at query time and keeps every view plus session
+    versioning coherent (tests/test_stream.py guards the regression)."""
     ids = np.asarray(arrays.block_ids).copy()
     for i in del_ids:
         for (b, s) in id_map.get(int(i), ()):

@@ -1,0 +1,10 @@
+"""Streaming mutable index subsystem (DESIGN.md §8).
+
+``StreamingIndex`` wraps an immutable ``RairsIndex`` base epoch with an
+append-only delta segment, a tombstone bitmap, threshold/explicit
+compaction, and (epoch, version)-pinned searcher sessions.
+"""
+from .delta import DeltaSegment  # noqa: F401
+from .search import delta_adc, streaming_search  # noqa: F401
+from .streaming import (StaleSessionError, StreamConfig,  # noqa: F401
+                        StreamingIndex, StreamingSearcher, StreamStats)

@@ -1,0 +1,93 @@
+"""Delta segment — the append-only mutable tail of a ``StreamingIndex``.
+
+Holds everything a post-epoch insert needs to be searchable and later
+foldable into a fresh SEIL base: raw vectors (exact refinement), PQ
+codes (ADC scan), and strategy-registry assignments (compaction input).
+The buffers are host-side numpy; ``StreamingIndex`` owns the device
+mirrors.
+
+Capacity grows in fixed geometric buckets (``pad * 2**j``), so the
+padded device views keep a small bounded set of shapes and the compiled
+streaming executables never retrace on steady-state appends.  Slots are
+never reused: a deleted delta item keeps its slot with ``live=False``
+until the next compaction discards the whole segment — ids therefore
+stay append-ordered and dense in ``[0, count)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class DeltaSegment:
+    """Padded append-only buffers for one epoch's inserts."""
+
+    def __init__(self, dim: int, m_pq: int, m_assign: int, pad: int = 256):
+        if pad < 1:
+            raise ValueError(f"pad must be >= 1, got {pad}")
+        self.dim = int(dim)
+        self.m_pq = int(m_pq)
+        self.m_assign = int(m_assign)
+        self.pad = int(pad)
+        self.count = 0         # slots ever used (monotonic)
+        self.capacity = 0      # allocated slots (bucketed)
+        self.vectors = np.zeros((0, self.dim), np.float32)
+        self.codes = np.zeros((0, self.m_pq), np.uint8)
+        self.assigns = np.zeros((0, self.m_assign), np.int32)
+        self.live = np.zeros((0,), bool)
+
+    def _cap_for(self, n: int) -> int:
+        if n <= 0:
+            return 0
+        cap = self.pad
+        while cap < n:
+            cap *= 2
+        return cap
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live[:self.count].sum())
+
+    @property
+    def n_dead(self) -> int:
+        return self.count - self.n_live
+
+    def append(self, vectors: np.ndarray, codes: np.ndarray,
+               assigns: np.ndarray):
+        """Append a batch; returns ``(slots, grew)`` where `slots` are the
+        newly used slot indices and `grew` flags a capacity-bucket jump
+        (device mirrors must be rebuilt rather than patched)."""
+        b = vectors.shape[0]
+        s0 = self.count
+        need = s0 + b
+        grew = need > self.capacity
+        if grew:
+            cap = self._cap_for(need)
+
+            def regrow(old, shape, dtype):
+                out = np.zeros(shape, dtype)
+                out[:s0] = old[:s0]
+                return out
+
+            self.vectors = regrow(self.vectors, (cap, self.dim), np.float32)
+            self.codes = regrow(self.codes, (cap, self.m_pq), np.uint8)
+            self.assigns = regrow(self.assigns, (cap, self.m_assign), np.int32)
+            self.live = regrow(self.live, (cap,), bool)
+            self.capacity = cap
+        self.vectors[s0:need] = vectors
+        self.codes[s0:need] = codes
+        self.assigns[s0:need] = assigns
+        self.live[s0:need] = True
+        self.count = need
+        return np.arange(s0, need, dtype=np.int64), grew
+
+    def mark_dead(self, slots: np.ndarray) -> int:
+        """Tombstone `slots`; returns how many were live until now."""
+        slots = np.asarray(slots, np.int64).ravel()
+        if slots.size == 0:
+            return 0
+        if (slots < 0).any() or (slots >= self.count).any():
+            raise ValueError(
+                f"delta slots out of range [0, {self.count}): {slots}")
+        newly = int(self.live[slots].sum())
+        self.live[slots] = False
+        return newly

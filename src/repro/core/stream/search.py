@@ -1,0 +1,92 @@
+"""Streaming query pipeline: base engine stages + delta scan + tombstones.
+
+``streaming_search`` runs the same four engine stages as ``seil_search``
+over the immutable base layout, then extends the candidate stream with
+the mutable epoch state before the shared finalize stage:
+
+  * the **delta segment** is scanned exhaustively — every live slot of
+    the padded flat code buffer gets one ADC distance per query (no IVF
+    routing; the segment is small by construction and is folded into the
+    base at compaction).  Delta candidates enter ``finalize_candidates``
+    through its ``extra_d/extra_i`` merge, so they compete with base
+    candidates under the exact same top-bigK / refinement rules;
+  * the **tombstone mask** (``live``, over the whole id space base +
+    delta) is applied inside finalize — deleted items are forced to
+    +inf before selection instead of being rewritten out of the layout.
+
+DCO accounting stays paper-faithful: every live delta slot costs one
+ADC distance computation per query (added to ``approx_dco``); dead slots
+cost nothing; refinement counts once per surviving unique candidate.
+
+All shapes are static given (batch bucket, delta capacity): the delta
+buffers are padded to fixed capacity buckets (stream/delta.py), so
+steady-state churn dispatches to cached executables without retracing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..engine import (finalize_candidates, plan_blocks, scan_blocks,
+                      select_lists, store_from_arrays, tables_from_arrays)
+from ..pq import PQCodebook, pq_lut, pq_lut_ip
+from ..search import SearchResult
+from ..seil import SeilArrays
+
+
+def delta_adc(lut: jnp.ndarray, delta_codes: jnp.ndarray) -> jnp.ndarray:
+    """ADC distances of every delta slot: (B, M, K) lut x (C, M) codes
+    -> (B, C).  d[b, c] = sum_m lut[b, m, codes[c, m]]."""
+    m = delta_codes.shape[1]
+    g = lut[:, jnp.arange(m)[None, :], delta_codes.astype(jnp.int32)]
+    return jnp.sum(g, axis=-1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nprobe", "bigk", "k", "max_scan", "metric",
+                     "dedup_results", "use_kernel", "oversample",
+                     "exec_mode", "query_tile"))
+def streaming_search(
+    arrays: SeilArrays,
+    centroids: jnp.ndarray,       # (nlist, D)
+    codebook: PQCodebook,
+    vectors: jnp.ndarray,         # (n_base + cap, D) refine store, id-aligned
+    delta_codes: jnp.ndarray,     # (cap, M) uint8 padded delta buffer
+    delta_ids: jnp.ndarray,       # (cap,) int32 global ids, -1 dead/unused
+    live: jnp.ndarray,            # (n_base + cap,) bool tombstone mask
+    queries: jnp.ndarray,         # (B, D)
+    *,
+    nprobe: int,
+    bigk: int,
+    k: int,
+    max_scan: int,
+    metric: str = "l2",
+    dedup_results: bool = True,
+    use_kernel: bool = False,
+    oversample: int = 2,
+    exec_mode: str = "paged",
+    query_tile: int = 8,
+) -> SearchResult:
+    selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
+    plan = plan_blocks(tables_from_arrays(arrays), selection,
+                       max_scan=max_scan)
+    lut = (pq_lut(codebook, queries) if metric == "l2"
+           else pq_lut_ip(codebook, queries))                # (B, M, 16)
+    scan = scan_blocks(store_from_arrays(arrays), plan, lut,
+                       selection.rank_of, exec_mode=exec_mode,
+                       use_kernel=use_kernel, query_tile=query_tile)
+    alive = delta_ids >= 0                                   # (cap,)
+    dd = jnp.where(alive[None, :], delta_adc(lut, delta_codes), jnp.inf)
+    di = jnp.broadcast_to(delta_ids[None, :], dd.shape)
+    out_ids, out_d, refine_dco = finalize_candidates(
+        scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
+        queries=queries, metric=metric, dedup_results=dedup_results,
+        oversample=oversample, extra_d=dd, extra_i=di, live=live)
+    approx_dco = scan.approx_dco + jnp.sum(alive).astype(jnp.int32)
+    return SearchResult(
+        ids=out_ids, dists=out_d, approx_dco=approx_dco,
+        refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,
+        dropped_blocks=plan.dropped)

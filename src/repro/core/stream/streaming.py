@@ -1,0 +1,569 @@
+"""StreamingIndex — a mutable, epoch-versioned view over a frozen base.
+
+The paper builds SEIL once over a static corpus; production corpora
+churn.  ``StreamingIndex`` makes insert/delete first-class (DESIGN.md
+§8) without giving up the static-shape query engine:
+
+  * the **base** is an ordinary immutable ``RairsIndex`` (one *epoch*);
+  * inserts go to an append-only **delta segment** (stream/delta.py):
+    assigned through the strategy registry and PQ-encoded exactly like
+    the base, then scanned through a padded flat buffer that merges into
+    the shared finalize stage (stream/search.py) — no layout rebuild;
+  * deletes flip bits in a **tombstone mask** over the whole id space;
+    dead items are masked at query time, never rewritten out;
+  * **compaction** folds survivors (base minus tombstones, plus live
+    delta) into a fresh ``build_seil`` base, renumbers ids densely
+    (``last_remap`` maps old -> new, -1 = deleted) and bumps ``epoch``;
+  * **sessions** (``StreamingSearcher``) pin the (epoch, version) they
+    compiled against: any mutation bumps ``version``, and a stale
+    session raises ``StaleSessionError`` instead of silently serving
+    pre-mutation state — the failure mode of the old layout-level
+    ``seil.delete_ids`` path.  Fresh sessions share compiled executables
+    through a stream-level cache keyed by (params, delta capacity), so
+    steady-state churn never recompiles.
+
+Mutation costs: insert is O(batch) (assign + encode + buffer patch),
+delete is O(batch) (scatter into the mask), compaction is the one O(n)
+operation — amortized by thresholds (``StreamConfig``) or triggered
+explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# module (not symbol) imports: the insert path must observe monkeypatched
+# index_mod.pq_encode / compute_assignments exactly like build_index does
+from .. import index as index_mod
+from ..params import SearchParams
+from ..search import SearchResult
+from ..searcher import Searcher
+from ..seil import build_seil
+from .delta import DeltaSegment
+from .search import streaming_search
+
+
+class StaleSessionError(RuntimeError):
+    """A searcher session outlived the index state it compiled against."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Streaming-side knobs (query knobs stay in ``SearchParams``).
+
+    delta_pad           delta capacity bucket quantum: buffers are padded
+                        to ``delta_pad * 2**j`` slots so compiled shapes
+                        stay bounded under churn
+    compact_delta_frac  auto-compact when the delta segment exceeds this
+                        fraction of the base size (None = manual only)
+    compact_dead_frac   auto-compact when tombstoned items exceed this
+                        fraction of the id space (None = manual only)
+    """
+    delta_pad: int = 256
+    compact_delta_frac: Optional[float] = None
+    compact_dead_frac: Optional[float] = None
+
+    def __post_init__(self):
+        if self.delta_pad < 1:
+            raise ValueError(f"delta_pad must be >= 1, got {self.delta_pad}")
+        for name in ("compact_delta_frac", "compact_dead_frac"):
+            v = getattr(self, name)
+            if v is not None and not v > 0:
+                raise ValueError(f"{name} must be > 0 or None, got {v!r}")
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Mutation / session accounting for one StreamingIndex."""
+    inserts: int = 0           # vectors appended
+    deletes: int = 0           # items newly tombstoned
+    compactions: int = 0
+    auto_compactions: int = 0  # subset of compactions (threshold-triggered)
+    sessions: int = 0          # StreamingSearcher objects created
+    invalidations: int = 0     # cached sessions dropped as stale
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _DeviceState:
+    """Device mirrors of the mutable state, patched in O(batch) between
+    capacity-bucket jumps (which rebuild them wholesale)."""
+    vectors_full: jnp.ndarray   # (n_base + cap, D) id-aligned refine store
+    delta_codes: jnp.ndarray    # (cap, M) uint8
+    delta_ids: jnp.ndarray      # (cap,) int32 global ids, -1 dead/unused
+    live_full: jnp.ndarray      # (n_base + cap,) bool
+    capacity: int
+
+
+class StreamingIndex:
+    """Mutable index: an immutable ``RairsIndex`` base epoch plus delta
+    segment, tombstone mask, and versioned searcher sessions.
+
+    Duck-type compatible with the read side of ``RairsIndex`` (config /
+    centroids / codebook / vectors / stats / searcher / search), so
+    existing call sites — including the ``insert_batch`` compat wrapper —
+    keep working unchanged.
+    """
+
+    def __init__(self, base, config: Optional[StreamConfig] = None):
+        if isinstance(base, StreamingIndex):
+            raise TypeError("base must be an immutable RairsIndex, not a "
+                            "StreamingIndex (nest epochs via compact())")
+        self.base = base
+        self.stream_config = config or StreamConfig()
+        self.epoch = 0
+        self.version = 0            # bumps on every insert/delete/compact
+        self.stats = StreamStats()
+        self.last_remap = None      # old id -> new id after last compact
+        self._retired: Dict[str, int] = {}   # folded stats of dead sessions
+        self._reset_epoch_state()
+
+    def _reset_epoch_state(self):
+        base = self.base
+        self._delta = DeltaSegment(
+            dim=int(base.vectors.shape[1]), m_pq=int(base.codebook.m),
+            m_assign=int(base.assigns.shape[1]),
+            pad=self.stream_config.delta_pad)
+        self._base_live = np.ones(self.n_base, bool)
+        self._dead_base = 0
+        self._dev: Optional[_DeviceState] = None
+        self._sessions: Dict[SearchParams, "StreamingSearcher"] = {}
+        self._exec_cache: Dict[tuple, dict] = {}
+
+    # ------------------------------------------------------------------
+    # sizes / views
+    # ------------------------------------------------------------------
+    @property
+    def n_base(self) -> int:
+        return int(self.base.vectors.shape[0])
+
+    @property
+    def n_total(self) -> int:
+        """Size of the id space (base + every delta slot ever used)."""
+        return self.n_base + self._delta.count
+
+    @property
+    def n_delta(self) -> int:
+        """Live items in the delta segment."""
+        return self._delta.n_live
+
+    @property
+    def n_dead(self) -> int:
+        return self._dead_base + self._delta.n_dead
+
+    @property
+    def n_live(self) -> int:
+        return self.n_total - self.n_dead
+
+    @property
+    def has_mutations(self) -> bool:
+        """Any insert/delete since the current epoch's base was built."""
+        return self._delta.count > 0 or self._dead_base > 0
+
+    # read-side duck typing with RairsIndex --------------------------------
+    @property
+    def config(self):
+        return self.base.config
+
+    @property
+    def centroids(self):
+        return self.base.centroids
+
+    @property
+    def codebook(self):
+        return self.base.codebook
+
+    @property
+    def arrays(self):
+        return self.base.arrays
+
+    @property
+    def seil_stats(self):
+        return self.base.stats
+
+    # RairsIndex exposes `.stats` as SeilStats; StreamingIndex.stats is the
+    # mutation counter, so the layout stats keep their own accessor above.
+
+    @property
+    def needs_result_dedup(self) -> bool:
+        return self.base.needs_result_dedup
+
+    @property
+    def result_oversample(self) -> int:
+        return self.base.result_oversample
+
+    def default_max_scan(self, nprobe: int, slack: float = 1.3) -> int:
+        return self.base.default_max_scan(nprobe, slack)
+
+    @property
+    def vectors(self) -> jnp.ndarray:
+        """(n_total, D) id-aligned vector view (tombstoned rows included)."""
+        d = self._delta
+        if d.count == 0:
+            return self.base.vectors
+        return jnp.concatenate(
+            [self.base.vectors, jnp.asarray(d.vectors[:d.count])], axis=0)
+
+    @property
+    def assigns(self) -> np.ndarray:
+        """(n_total, m) id-aligned assignment view (analysis benches)."""
+        d = self._delta
+        if d.count == 0:
+            return self.base.assigns
+        return np.concatenate(
+            [np.asarray(self.base.assigns), d.assigns[:d.count]], axis=0)
+
+    @property
+    def codes(self) -> Optional[np.ndarray]:
+        """(n_total, M) id-aligned cached-PQ-code view (None only for a
+        pre-code-cache base that was never mutated)."""
+        d = self._delta
+        base_codes = self.base.codes
+        if d.count == 0:
+            return base_codes
+        if base_codes is None:   # pre-cache bundle: encode once, like compact
+            base_codes = np.asarray(
+                index_mod.pq_encode(self.base.codebook, self.base.vectors))
+        return np.concatenate(
+            [np.asarray(base_codes), d.codes[:d.count]], axis=0)
+
+    def live_mask(self) -> np.ndarray:
+        """(n_total,) host bool: True where the id is still live."""
+        return np.concatenate(
+            [self._base_live, self._delta.live[:self._delta.count]])
+
+    def live_ids(self) -> np.ndarray:
+        return np.nonzero(self.live_mask())[0].astype(np.int64)
+
+    def live_vectors(self) -> jnp.ndarray:
+        """(n_live, D) surviving vectors in id order (oracle / recall)."""
+        d = self._delta
+        host = np.concatenate(
+            [np.asarray(self.base.vectors), d.vectors[:d.count]], axis=0)
+        return jnp.asarray(host[self.live_mask()])
+
+    # ------------------------------------------------------------------
+    # device mirrors
+    # ------------------------------------------------------------------
+    def _device_state(self) -> _DeviceState:
+        if self._dev is None:
+            d = self._delta
+            nb = self.n_base
+            vec = np.concatenate(
+                [np.asarray(self.base.vectors), d.vectors], axis=0)
+            ids = np.full(d.capacity, -1, np.int32)
+            used = np.arange(d.count)
+            live_used = used[d.live[:d.count]]
+            ids[live_used] = nb + live_used
+            live_full = np.concatenate([self._base_live, d.live])
+            self._dev = _DeviceState(
+                vectors_full=jnp.asarray(vec),
+                delta_codes=jnp.asarray(d.codes),
+                delta_ids=jnp.asarray(ids),
+                live_full=jnp.asarray(live_full),
+                capacity=d.capacity)
+        return self._dev
+
+    # ------------------------------------------------------------------
+    # mutations
+    # ------------------------------------------------------------------
+    def insert(self, x) -> np.ndarray:
+        """Append vectors through the delta path; returns their global ids.
+
+        O(batch): strategy-registry assignment + PQ encoding of the new
+        rows and buffer patches — never a layout rebuild (asserted via
+        ``seil.build_seil_call_count`` in tests and BENCH_stream.json).
+        """
+        x = np.asarray(x, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.base.vectors.shape[1]:
+            raise ValueError(
+                f"insert batch must be (B, {self.base.vectors.shape[1]}), "
+                f"got {x.shape}")
+        if x.shape[0] == 0:
+            return np.zeros(0, np.int64)
+        base = self.base
+        xj = jnp.asarray(x)
+        assigns = np.asarray(index_mod.compute_assignments(
+            xj, base.centroids, base.config), np.int32)
+        codes = np.asarray(index_mod.pq_encode(base.codebook, xj))
+        nb = self.n_base
+        slots, grew = self._delta.append(x, codes, assigns)
+        ids = nb + slots
+        if self._dev is not None and not grew:
+            dv = self._dev
+            s0 = int(slots[0])
+            dv.vectors_full = jax.lax.dynamic_update_slice(
+                dv.vectors_full, xj, (jnp.int32(nb + s0), jnp.int32(0)))
+            dv.delta_codes = jax.lax.dynamic_update_slice(
+                dv.delta_codes, jnp.asarray(codes),
+                (jnp.int32(s0), jnp.int32(0)))
+            dv.delta_ids = jax.lax.dynamic_update_slice(
+                dv.delta_ids, jnp.asarray(ids, jnp.int32), (jnp.int32(s0),))
+            dv.live_full = jax.lax.dynamic_update_slice(
+                dv.live_full, jnp.ones(len(slots), bool),
+                (jnp.int32(nb + s0),))
+        else:
+            self._dev = None            # capacity bucket jump: rebuild lazily
+        self.version += 1
+        self.stats.inserts += x.shape[0]
+        epoch_before = self.epoch
+        self._maybe_auto_compact()
+        if self.epoch != epoch_before:
+            # compaction renumbered the id space; the fresh inserts are
+            # alive by construction, so the remap covers all of them
+            ids = self.last_remap[ids]
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone `ids` (base and/or delta); returns how many were
+        live until now.  Dead/duplicate ids are a no-op; out-of-range
+        ids raise.  O(batch): bitmap scatter, no layout rewrite."""
+        ids = np.unique(np.asarray(ids, np.int64).ravel())
+        if ids.size == 0:
+            return 0
+        if ids[0] < 0 or ids[-1] >= self.n_total:
+            raise ValueError(
+                f"delete ids out of range [0, {self.n_total})")
+        nb = self.n_base
+        bids = ids[ids < nb]
+        dslots = ids[ids >= nb] - nb
+        newly_base = int(self._base_live[bids].sum())
+        newly = newly_base + int(self._delta.live[dslots].sum())
+        if newly == 0:
+            return 0        # idempotent retry: nothing changed, nothing stales
+        self._base_live[bids] = False
+        self._dead_base += newly_base
+        self._delta.mark_dead(dslots)
+        if self._dev is not None:
+            dv = self._dev
+            dv.live_full = dv.live_full.at[jnp.asarray(ids)].set(False)
+            if dslots.size:
+                dv.delta_ids = dv.delta_ids.at[jnp.asarray(dslots)].set(-1)
+        self.version += 1
+        self.stats.deletes += newly
+        self._maybe_auto_compact()
+        return newly
+
+    def compact(self, reason: str = "manual") -> dict:
+        """Fold delta + tombstones into a fresh base epoch.
+
+        Survivors keep their relative (id) order — base first, then delta
+        — and are renumbered densely, so the new base is exactly what
+        ``build_index`` would produce over the surviving corpus with the
+        same frozen centroids/codebook (asserted in tests/test_stream.py).
+        ``last_remap[old_id] -> new_id`` (-1 = deleted) records the
+        renumbering; every open session becomes stale.
+        """
+        t0 = time.perf_counter()
+        base, d = self.base, self._delta
+        cfg = base.config
+        alive_b = self._base_live
+        alive_d = d.live[:d.count]
+        codes_base = base.codes
+        if codes_base is None:     # pre-cache bundle: encode once
+            codes_base = np.asarray(
+                index_mod.pq_encode(base.codebook, base.vectors))
+        vec = np.concatenate(
+            [np.asarray(base.vectors)[alive_b], d.vectors[:d.count][alive_d]],
+            axis=0)
+        codes = np.concatenate(
+            [np.asarray(codes_base)[alive_b], d.codes[:d.count][alive_d]],
+            axis=0)
+        assigns = np.concatenate(
+            [np.asarray(base.assigns)[alive_b], d.assigns[:d.count][alive_d]],
+            axis=0)
+        n = vec.shape[0]
+        shared = cfg.seil and cfg.multi_m == 2
+        t1 = time.perf_counter()
+        arrays, seil_stats = build_seil(
+            assigns, codes, np.arange(n, dtype=np.int32), cfg.nlist,
+            block=cfg.block, shared=shared, code_bits=cfg.nbits)
+        t_layout = time.perf_counter() - t1
+        alive_full = np.concatenate([alive_b, alive_d])
+        remap = np.full(alive_full.shape[0], -1, np.int64)
+        remap[np.nonzero(alive_full)[0]] = np.arange(n)
+        self.base = index_mod.RairsIndex(
+            config=cfg, centroids=base.centroids, codebook=base.codebook,
+            arrays=arrays, vectors=jnp.asarray(vec), stats=seil_stats,
+            assigns=assigns, codes=codes,
+            build_seconds={"layout": t_layout})
+        self.last_remap = remap
+        self.epoch += 1
+        self.version += 1
+        self.stats.compactions += 1
+        self._retire_sessions()
+        self._reset_epoch_state()
+        return {"epoch": self.epoch, "reason": reason, "n_live": n,
+                "dropped": int(alive_full.size - n),
+                "seconds": time.perf_counter() - t0,
+                "layout_seconds": t_layout, "id_remap": remap}
+
+    def restore_state(self, *, epoch: int, version: int,
+                      base_live: np.ndarray, delta_vectors: np.ndarray,
+                      delta_codes: np.ndarray, delta_assigns: np.ndarray,
+                      delta_live: np.ndarray) -> None:
+        """Rehydrate persisted epoch state (bundle v2 load, core/io.py)
+        into a freshly wrapped base — exact codes/assigns/liveness are
+        restored, nothing is recomputed.  Only valid before any
+        mutation."""
+        if self.version != 0 or self._delta.count != 0:
+            raise RuntimeError("restore_state requires a pristine "
+                               "StreamingIndex")
+        if delta_vectors.shape[0]:
+            self._delta.append(delta_vectors, delta_codes, delta_assigns)
+            self._delta.mark_dead(np.nonzero(~delta_live)[0])
+        if base_live.shape[0] != self.n_base:
+            raise ValueError(
+                f"base_live has {base_live.shape[0]} bits for a base of "
+                f"{self.n_base} vectors")
+        self._base_live[:] = base_live
+        self._dead_base = int((~base_live).sum())
+        self._dev = None
+        self.epoch = int(epoch)
+        self.version = int(version)
+
+    def _maybe_auto_compact(self):
+        sc = self.stream_config
+        if (sc.compact_delta_frac is not None
+                and self._delta.count > sc.compact_delta_frac
+                * max(1, self.n_base)):
+            self.stats.auto_compactions += 1
+            self.compact(reason="delta_threshold")
+        elif (sc.compact_dead_frac is not None
+                and self.n_dead > sc.compact_dead_frac
+                * max(1, self.n_total)):
+            self.stats.auto_compactions += 1
+            self.compact(reason="dead_threshold")
+
+    # ------------------------------------------------------------------
+    # sessions
+    # ------------------------------------------------------------------
+    def searcher(self, params: Optional[SearchParams] = None,
+                 **kwargs) -> "StreamingSearcher":
+        """Create (or fetch) a session pinned to the current version.
+
+        A cached session is returned only while the index has not
+        mutated past it; otherwise its stats are folded into the
+        aggregate, it is dropped as stale, and a fresh session — sharing
+        this stream's compiled-executable cache — replaces it.
+        """
+        if params is None:
+            params = SearchParams(**kwargs)
+        elif kwargs:
+            params = dataclasses.replace(params, **kwargs)
+        sess = self._sessions.get(params)
+        if sess is not None and sess.version == self.version:
+            return sess
+        if sess is not None:
+            self._fold_session(sess)
+            self.stats.invalidations += 1
+        sess = StreamingSearcher(self, params)
+        self._sessions[params] = sess
+        self.stats.sessions += 1
+        return sess
+
+    def search(self, queries: jnp.ndarray, k: int, nprobe: int,
+               k_factor: int = 10, max_scan: Optional[int] = None,
+               use_kernel: bool = False, exec_mode: str = "paged",
+               query_tile: int = 8) -> SearchResult:
+        """Convenience kwarg path mirroring ``RairsIndex.search`` —
+        always dispatches through a current (never stale) session."""
+        return self.searcher(SearchParams(
+            k=k, nprobe=nprobe, k_factor=k_factor, max_scan=max_scan,
+            use_kernel=use_kernel, exec_mode=exec_mode,
+            query_tile=query_tile))(queries)
+
+    def _fold_session(self, sess: "Searcher"):
+        for key, v in sess.stats.as_dict().items():
+            self._retired[key] = self._retired.get(key, 0) + v
+
+    def _retire_sessions(self):
+        for sess in self._sessions.values():
+            self._fold_session(sess)
+        self._sessions.clear()
+
+    def searcher_stats(self) -> dict:
+        """Aggregate compile-cache stats over live + retired sessions,
+        extending the RairsIndex accessor with mutation/epoch fields."""
+        live = list(self._sessions.values())
+        out = {
+            "sessions": self.stats.sessions,
+            "invalidations": self.stats.invalidations,
+            "epoch": self.epoch,
+            "version": self.version,
+        }
+        for key in ("compiles", "cache_hits"):
+            out[key] = (self._retired.get(key, 0)
+                        + sum(getattr(s.stats, key) for s in live))
+        out["base"] = self.base.searcher_stats()
+        return out
+
+
+class StreamingSearcher(Searcher):
+    """An (epoch, version)-pinned session over a ``StreamingIndex``.
+
+    A pristine epoch (no mutations yet) delegates to the wrapped base
+    index's own session, so an unmutated ``StreamingIndex`` searches
+    bitwise-identically to its ``RairsIndex``.  Once mutated, the
+    session dispatches ``streaming_search`` (base stages + exhaustive
+    delta scan + tombstone mask) per batch bucket; executables live in a
+    stream-level cache keyed by (params, delta capacity), so the session
+    churn caused by version pinning never recompiles.
+    """
+
+    def __init__(self, stream: StreamingIndex, params: SearchParams):
+        self.stream = stream
+        self.version = stream.version
+        super().__init__(stream.base, params)
+        self.epoch = stream.epoch
+        if stream.has_mutations:
+            self._delegate = None
+            self._compiled = stream._exec_cache.setdefault(
+                (self.params, stream._delta.capacity), {})
+        else:
+            self._delegate = stream.base.searcher(params)
+
+    def _check_current(self):
+        st = self.stream
+        if self.version != st.version:
+            raise StaleSessionError(
+                f"searcher session pinned (epoch {self.epoch}, version "
+                f"{self.version}) but the StreamingIndex is at (epoch "
+                f"{st.epoch}, version {st.version}); mutations invalidate "
+                f"sessions — re-fetch via stream.searcher(params)")
+
+    def _lower(self, bucket: int):
+        p = self.params
+        idx = self.stream.base
+        dev = self.stream._device_state()
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, idx.vectors.shape[1]), jnp.float32)
+        return streaming_search.lower(
+            idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
+            dev.delta_codes, dev.delta_ids, dev.live_full, q_spec,
+            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            use_kernel=p.use_kernel, oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile)
+
+    def _call_inputs(self) -> tuple:
+        idx = self.stream.base
+        dev = self.stream._device_state()
+        return (idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
+                dev.delta_codes, dev.delta_ids, dev.live_full)
+
+    def __call__(self, queries: jnp.ndarray) -> SearchResult:
+        if self._delegate is not None:
+            self._check_current()
+            return self._delegate(queries)
+        return super().__call__(queries)
+
+    search = __call__

@@ -9,6 +9,21 @@ Persistence (skip the train+build phase on repeat runs):
 
 ``... --save /tmp/sift1m.npz``      # first run: build then save
 ``... --load /tmp/sift1m.npz``      # later runs: load, serve immediately
+
+Streaming ops (corpus churn through the mutable-index subsystem,
+DESIGN.md §8).  ``--insert N`` holds the last N corpus vectors out of
+the build and appends them through the delta path; ``--delete N``
+tombstones N random live ids; ``--compact`` folds delta + tombstones
+into a fresh base epoch.  Saved bundles carry the streaming state
+(format v2), so an insert->delete->save / load round-trip resumes with
+the same delta segment and tombstones:
+
+``... --insert 512 --delete 128 --compact --save /tmp/churned.npz``
+
+``--load`` composes with the churn ops (resume churn from a bundle and
+persist the result to a new path); bundles record how many corpus rows
+they consumed, so repeated ``--insert`` runs keep appending fresh rows
+instead of duplicating indexed ones.
 """
 from __future__ import annotations
 
@@ -18,10 +33,52 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (IndexConfig, SearchParams, available_strategies,
-                        build_index, dco_summary, ground_truth, load_index,
+from repro.core import (IndexConfig, SearchParams, StreamConfig,
+                        StreamingIndex, available_strategies, build_index,
+                        dco_summary, ground_truth, load_index,
                         read_index_meta, recall_at_k, save_index)
 from repro.data import make_dataset
+
+
+def apply_stream_ops(index, args, x, rows_used: int):
+    """Wrap `index` for mutation and run the requested churn ops.
+
+    `rows_used` is how many corpus rows the index has already consumed
+    (build + prior inserts, tracked in bundle provenance), so --insert
+    only ever appends genuinely fresh rows — re-inserting indexed rows
+    would duplicate vectors and corrupt the reported recall.  Returns
+    ``(stream, rows_used')``."""
+    stream = (index if isinstance(index, StreamingIndex)
+              else index.streaming(StreamConfig(delta_pad=args.delta_pad)))
+    if args.insert:
+        take = min(args.insert, x.shape[0] - rows_used)
+        if take < args.insert:
+            print(f"--insert {args.insert}: only {max(take, 0)} fresh corpus "
+                  f"rows remain ({rows_used} already consumed)")
+        if take > 0:
+            t0 = time.perf_counter()
+            ids = stream.insert(x[rows_used:rows_used + take])
+            rows_used += take
+            print(f"inserted {len(ids)} vectors (ids {ids[0]}..{ids[-1]}) "
+                  f"via the delta path in {time.perf_counter() - t0:.2f}s "
+                  f"(no layout rebuild)")
+    if args.delete:
+        rng = np.random.default_rng(0)
+        live = stream.live_ids()
+        victims = rng.choice(live, size=min(args.delete, len(live)),
+                             replace=False)
+        t0 = time.perf_counter()
+        n = stream.delete(victims)
+        print(f"tombstoned {n} ids in {time.perf_counter() - t0:.2f}s")
+    if args.compact:
+        info = stream.compact()
+        print(f"compacted to epoch {info['epoch']}: n_live={info['n_live']} "
+              f"dropped={info['dropped']} in {info['seconds']:.2f}s "
+              f"(layout {info['layout_seconds']:.2f}s)")
+    print(f"  stream: epoch={stream.epoch} version={stream.version} "
+          f"live={stream.n_live} delta={stream.n_delta} "
+          f"dead={stream.n_dead}")
+    return stream, rows_used
 
 
 def main():
@@ -44,15 +101,27 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the ADC scan through the Pallas kernel")
     ap.add_argument("--save", metavar="PATH", default=None,
-                    help="persist the built index bundle to PATH")
+                    help="persist the index bundle (after any stream ops)")
     ap.add_argument("--load", metavar="PATH", default=None,
                     help="load an index bundle from PATH (skips train+build)")
+    ap.add_argument("--insert", type=int, default=0, metavar="N",
+                    help="hold N corpus vectors out of the build and insert "
+                         "them through the streaming delta path")
+    ap.add_argument("--delete", type=int, default=0, metavar="N",
+                    help="tombstone N random live ids")
+    ap.add_argument("--compact", action="store_true",
+                    help="fold delta + tombstones into a fresh base epoch")
+    ap.add_argument("--delta-pad", type=int, default=256,
+                    help="delta-segment capacity bucket quantum")
     args = ap.parse_args()
-    if args.load and args.save:
-        ap.error("--save and --load are mutually exclusive (a loaded "
-                 "bundle is never re-written)")
+    stream_ops = bool(args.insert or args.delete or args.compact)
+    if args.load and args.save and not stream_ops:
+        ap.error("--save with --load needs stream ops (an unmutated "
+                 "loaded bundle is never re-written); add "
+                 "--insert/--delete/--compact to churn then persist")
 
     x, q, spec = make_dataset(args.dataset)
+    rows_used = x.shape[0]
     if args.load:
         meta = read_index_meta(args.load)
         saved_ds = meta.get("extra", {}).get("dataset")
@@ -66,35 +135,59 @@ def main():
         if index.vectors.shape[1] != x.shape[1]:
             ap.error(f"{args.load} holds {index.vectors.shape[1]}-d vectors "
                      f"but --dataset {args.dataset} is {x.shape[1]}-d")
-        print(f"loaded {cfg.strategy}{'+SEIL' if cfg.seil else ''} index "
-              f"over {index.vectors.shape[0]} vectors from {args.load} "
+        rows_used = meta.get("extra", {}).get(
+            "corpus_rows_used", index.vectors.shape[0])
+        streaming = isinstance(index, StreamingIndex)
+        print(f"loaded {cfg.strategy}{'+SEIL' if cfg.seil else ''} "
+              f"{'streaming ' if streaming else ''}index over "
+              f"{index.vectors.shape[0]} vectors from {args.load} "
               f"in {time.perf_counter() - t0:.1f}s (train+build skipped; "
               f"--strategy/--nlist/--no-seil come from the bundle)")
+        if streaming:
+            print(f"  restored stream: epoch={index.epoch} "
+                  f"version={index.version} live={index.n_live} "
+                  f"delta={index.n_delta} dead={index.n_dead}")
     else:
         cfg = IndexConfig(nlist=args.nlist, strategy=args.strategy,
                           seil=not args.no_seil, metric=spec.metric)
+        # --insert serves held-out corpus rows so churned recall is honest
+        holdout = min(args.insert, x.shape[0] // 2)
+        x_build = x[:x.shape[0] - holdout] if holdout else x
+        rows_used = x_build.shape[0]
         t0 = time.perf_counter()
-        index = build_index(jax.random.PRNGKey(0), x, cfg)
+        index = build_index(jax.random.PRNGKey(0), x_build, cfg)
         print(f"built {args.strategy}{'' if args.no_seil else '+SEIL'} index "
-              f"over {x.shape[0]} vectors in {time.perf_counter() - t0:.1f}s "
+              f"over {x_build.shape[0]} vectors in {time.perf_counter() - t0:.1f}s "
               f"(phases: { {k: round(v, 1) for k, v in index.build_seconds.items()} })")
-        if args.save:
-            t0 = time.perf_counter()
-            save_index(index, args.save, extra={"dataset": args.dataset})
-            print(f"saved index bundle to {args.save} "
-                  f"in {time.perf_counter() - t0:.1f}s")
-    print(f"  blocks={index.stats.n_blocks} items={index.stats.n_items_stored} "
-          f"refs={index.stats.n_ref_entries} "
-          f"logical={index.stats.logical_bytes / 1e6:.1f}MB")
+
+    if stream_ops or isinstance(index, StreamingIndex):
+        index, rows_used = apply_stream_ops(index, args, x, rows_used)
+    if args.save:
+        t0 = time.perf_counter()
+        save_index(index, args.save,
+                   extra={"dataset": args.dataset,
+                          "corpus_rows_used": int(rows_used)})
+        print(f"saved index bundle to {args.save} "
+              f"in {time.perf_counter() - t0:.1f}s")
+    base = index.base if isinstance(index, StreamingIndex) else index
+    print(f"  blocks={base.stats.n_blocks} items={base.stats.n_items_stored} "
+          f"refs={base.stats.n_ref_entries} "
+          f"logical={base.stats.logical_bytes / 1e6:.1f}MB")
 
     searcher = index.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel))
 
-    # score against the index's own corpus (== x when freshly built; under
-    # --load it guards against dataset-generator drift since the save)
-    gt = ground_truth(index.vectors, q[:args.batches * args.batch_size],
-                      args.k, metric=index.config.metric)
+    # score against the index's own live corpus (== x when freshly built;
+    # under churn the oracle runs over survivors with ids mapped back)
+    nq = args.batches * args.batch_size
+    if isinstance(index, StreamingIndex):
+        live = index.live_ids()
+        gt = live[ground_truth(index.live_vectors(), q[:nq], args.k,
+                               metric=index.config.metric)]
+    else:
+        gt = ground_truth(index.vectors, q[:nq], args.k,
+                          metric=index.config.metric)
     for b in range(args.batches):
         qb = q[b * args.batch_size:(b + 1) * args.batch_size]
         t0 = time.perf_counter()
@@ -110,6 +203,8 @@ def main():
               f"qps={qb.shape[0] / dt:.0f} "
               f"compile[new={st.compiles} hit={st.cache_hits} "
               f"buckets={list(searcher.buckets)}]")
+    if isinstance(index, StreamingIndex):
+        print(f"stream searcher stats: {index.searcher_stats()}")
 
 
 if __name__ == "__main__":
