@@ -10,7 +10,11 @@ exec-mode x nprobe config, plus searcher compile-cache stats) so the
 perf trajectory is tracked across PRs instead of only printed.  The
 stream bench does the same with ``BENCH_stream.json`` (append
 throughput delta-path vs legacy rebuild, layout-build count — must be
-0 on the delta path —, compaction cost, recall under churn).
+0 on the delta path —, compaction cost, recall under churn), and the
+distributed bench with ``BENCH_dist.json`` (recall / QPS / DCO of
+``ShardedIndex`` sessions vs device count for both exec modes; sweep
+wider by setting ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+before the run).
 """
 from __future__ import annotations
 
@@ -27,8 +31,11 @@ BENCH_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_engine.json")
 STREAM_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_stream.json")
+DIST_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_dist.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
+DIST_JSON_SCHEMA_VERSION = 1
 
 
 def write_bench_json(engine_out: dict, dataset: str, path: str) -> None:
@@ -70,6 +77,22 @@ def write_stream_json(stream_out: dict, dataset: str, path: str) -> None:
     sys.stderr.write(f"[stream json -> {os.path.abspath(path)}]\n")
 
 
+def write_dist_json(dist_out: dict, dataset: str, path: str) -> None:
+    """Persist the distributed scaling bench summary."""
+    import jax
+    payload = {
+        "schema_version": DIST_JSON_SCHEMA_VERSION,
+        "dataset": dataset,
+        "devices_available": len(jax.devices()),
+        "platform": jax.devices()[0].platform,
+        **dist_out,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    sys.stderr.write(f"[dist json -> {os.path.abspath(path)}]\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -80,6 +103,9 @@ def main() -> None:
     ap.add_argument("--stream-json", type=str, default=STREAM_JSON_DEFAULT,
                     help="where the stream bench writes its machine-readable "
                          "summary ('' disables)")
+    ap.add_argument("--dist-json", type=str, default=DIST_JSON_DEFAULT,
+                    help="where the distributed bench writes its machine-"
+                         "readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
                          "BENCH_*.json files")
@@ -98,6 +124,8 @@ def main() -> None:
                 write_bench_json(out, args.bench_dataset, args.bench_json)
             if name == "stream" and args.stream_json:
                 write_stream_json(out, args.bench_dataset, args.stream_json)
+            if name == "dist" and args.dist_json:
+                write_dist_json(out, args.bench_dataset, args.dist_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -134,6 +162,7 @@ def _bench_list(args):
         ("engine_modes",
          lambda: suite.bench_exec_modes(dataset=args.bench_dataset)),
         ("stream", lambda: suite.bench_stream(dataset=args.bench_dataset)),
+        ("dist", lambda: suite.bench_dist(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

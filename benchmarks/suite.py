@@ -268,6 +268,68 @@ def bench_stream(dataset="sift1m", batches=8):
     return out
 
 
+def bench_dist(dataset="sift1m", k=10, nprobe=16,
+               exec_modes=("paged", "grouped")):
+    """Distributed scaling bench (-> BENCH_dist.json): recall / QPS /
+    DCO of ``ShardedIndex`` sessions vs device count, both exec modes.
+
+    Device counts sweep the powers of two up to ``len(jax.devices())``
+    — on a stock CPU host that is just ndev=1 (the parity point, still
+    asserted bitwise vs the plain Searcher); run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
+    scaling curve.  QPS on a virtual-device CPU mesh measures overhead
+    trends, not TPU throughput (see DESIGN.md §4)."""
+    from jax.sharding import Mesh
+
+    from repro.core import SearchParams
+
+    ctx = get_context(dataset, n_queries=256)
+    idx = ctx.index("rair", True)
+    gt = ctx.gt(k)
+    devs = jax.devices()
+    ndevs = [n for n in (1, 2, 4, 8, 16) if n <= len(devs)]
+    max_scan = idx.default_max_scan(nprobe)
+    params0 = SearchParams(k=k, nprobe=nprobe, max_scan=max_scan,
+                           batch_buckets=(64,))
+    rows, mismatches = [], 0
+    for nd in ndevs:
+        mesh = Mesh(np.asarray(devs[:nd]), ("data",))
+        sharded = idx.shard(mesh)
+        for mode in exec_modes:
+            import dataclasses as _dc
+            searcher = sharded.searcher(_dc.replace(params0, exec_mode=mode))
+            searcher(ctx.q[:64]).ids.block_until_ready()   # compile
+            t0 = time.perf_counter()
+            outs = [jax.tree.map(np.asarray, searcher(ctx.q[s:s + 64]))
+                    for s in range(0, ctx.q.shape[0], 64)]
+            dt = time.perf_counter() - t0
+            res = jax.tree.map(lambda *a: np.concatenate(a, 0), *outs)
+            if nd == 1:
+                ref = idx.searcher(
+                    _dc.replace(params0, exec_mode=mode))(ctx.q)
+                if not np.array_equal(np.asarray(ref.ids), res.ids):
+                    mismatches += 1
+            rows.append({
+                "ndev": nd, "exec_mode": mode,
+                "recall": recall_at_k(res.ids, gt),
+                "qps": ctx.q.shape[0] / dt,
+                "us_per_query": dt / ctx.q.shape[0] * 1e6,
+                "dco": dco_summary(res)["total_dco"],
+            })
+            emit(f"dist/{dataset}/ndev{nd}/{mode}",
+                 rows[-1]["us_per_query"],
+                 f"recall={rows[-1]['recall']:.4f} "
+                 f"qps={rows[-1]['qps']:.0f} dco={rows[-1]['dco']:.0f}")
+    out = {"ndev_swept": ndevs, "nprobe": nprobe,
+           "one_dev_id_mismatch_points": mismatches, "configs": rows}
+    emit(f"dist/{dataset}/parity", 0.0,
+         f"one_dev_id_mismatch_points={mismatches}")
+    save_json("dist_scaling", out)
+    assert mismatches == 0, \
+        "1-device ShardedIndex must match the plain Searcher bitwise"
+    return out
+
+
 def _dco_at(ctx, name, target=0.9, k=10, **over):
     strat, seil = SOLUTIONS[name]
     rows = curve(ctx, ctx.index(strat, seil, **over), k=k)

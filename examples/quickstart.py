@@ -63,3 +63,13 @@ res_k = index.searcher(kp)(queries[:8])
 res_j = index.searcher(params)(queries[:8])
 assert np.array_equal(np.asarray(res_k.ids), np.asarray(res_j.ids))
 print("pallas pq_scan kernel path == jnp path (8 queries checked)")
+
+# 7. a mesh is a deployment detail: shard the index and serve through the
+#    *same* session API (1-device mesh here; bitwise-identical results —
+#    on a real pod only the mesh constructor changes)
+mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+sharded = index.shard(mesh)
+res_m = sharded.searcher(params)(queries[:64])
+assert np.array_equal(np.asarray(res_m.ids), np.asarray(res.ids[:64]))
+print(f"sharded ({sharded.ndev}-device) session == single-host session; "
+      f"stats: {sharded.searcher_stats()}")

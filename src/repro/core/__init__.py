@@ -12,10 +12,13 @@ from .engine import (EXEC_MODES, BlockStore, ListSelection, ListTables,  # noqa
                      QueryPlan, ScanOut, plan_blocks, scan_blocks,
                      select_lists, finalize_candidates)
 from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
-from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION, load_index,  # noqa
-                 read_index_meta, save_index)
+from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION,  # noqa
+                 SHARDED_FORMAT_VERSION, load_index, read_index_meta,
+                 save_index)
 from .params import MAX_AUTO_BUCKET, SearchParams  # noqa
 from .searcher import Searcher, SearcherStats  # noqa
+from .sharded import ShardedIndex, ShardedSearcher, shard_index  # noqa
+from .distributed import build_serve_step, distributed_search  # noqa
 from .stream import (StaleSessionError, StreamConfig, StreamingIndex,  # noqa
                      StreamingSearcher, StreamStats, streaming_search)
 from .kmeans import kmeans_fit, kmeans_step_sharded, pairwise_sq_l2  # noqa

@@ -1,39 +1,141 @@
-"""Distributed RAIRS index: shard_map serving step for billion-vector
-corpora (the paper's SIFT1B regime on the production mesh).
+"""Distributed lowering backend: the per-device shard_map serve step
+behind ``ShardedIndex`` sessions (core/sharded.py, DESIGN.md §4).
 
-Sharding scheme (DESIGN.md §4):
-  * flat block arrays shard over the ("pod","data") axes by block-id
-    range — balanced by construction (straggler mitigation is
-    structural: every device owns TB/ndev blocks and scans at most the
-    same static budget per query);
-  * centroids + per-list block tables replicate (nlist x maxb int32 —
-    MBs, not GBs);
-  * refine vectors shard by vector-id range over the same axes.
+Sharding scheme:
+  * flat block arrays shard over the mesh axes by block-id range —
+    balanced by construction (straggler mitigation is structural: every
+    device owns TB/ndev blocks and scans at most the same static budget
+    per query);
+  * centroids + per-list block tables + PQ codebooks replicate
+    (nlist x maxb int32 — MBs, not GBs);
+  * refine vectors shard by vector-id range over the same axes;
+  * streaming state replicates: the delta segment is tiny by
+    construction (folded into the base at compaction) and the tombstone
+    mask is one bit per id, so every device scans the full delta and
+    masks with the full bitmap — but only the ``slot % ndev`` owner
+    *contributes* each delta candidate to the merge, so SEIL-exact
+    (dedup-free) result streams stay duplicate-free across shards.
 
 Per query batch each device composes the SAME engine stages as the
 single-host searcher (core/engine/, DESIGN.md §5): ``select_lists``
 runs replicated, ``plan_blocks`` windows the deduplicated candidate
-set to the device's block range (``local_lo``/``local_count``), and
-``scan_blocks`` scans the local ``BlockStore`` in either exec mode
-("paged" per-query paging or "grouped" list-major batching).  A local
-top-bigK plus one `all_gather` of (bigK ids, dists) merges candidates;
-refinement scores each candidate on its owner device and a `pmin`
-reduces exact distances — two small collectives per batch instead of
+set to the device's block range, ``scan_blocks`` scans the local
+``BlockStore`` in either exec mode, and the shared finalize tail is
+split around two small collectives: a local stable top-fetch
+(``preselect_candidates``) + one ``all_gather`` merges candidate
+streams, then ``finalize_candidates`` refines owner-scored exact
+distances with one ``pmin`` — two collectives per batch instead of
 moving vector data.
+
+``build_serve_step`` is the only lowering entry point; ``ShardedSearcher``
+AOT-compiles it per batch bucket through the ``Searcher._lower`` hook.
+``make_distributed_serve_step`` / ``distributed_search`` remain as thin
+deprecated shims over the unified API.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh  # noqa: F401  (re-export for callers)
 
-from ..dist import shard_map
-from .engine import (BlockStore, ListTables, plan_blocks, scan_blocks,
+from .engine import (BlockStore, ListTables, finalize_candidates,
+                     plan_blocks, preselect_candidates, scan_blocks,
                      select_lists)
 from .params import SearchParams
+from .pq import PQCodebook, pq_lut, pq_lut_ip
+from .search import SearchResult
+from .stream.search import delta_adc
 
+
+def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
+                     metric: str = "l2", dedup_results: bool = False,
+                     oversample: int = 2, exec_mode: str = "paged",
+                     query_tile: int = 8, axes=("data",), ndev: int = 1,
+                     streaming: bool = False):
+    """Build the per-device serve step for shard_map.
+
+    Returns ``serve(block_codes, block_ids, block_other, owned,
+    owned_other, refs, refs_other, misc, centroids, codebooks, vectors,
+    vec_lo, block_lo, dev_rank, delta_codes, delta_ids, live, queries)
+    -> SearchResult`` where the first three arrays and ``vectors`` are
+    the device's shard, ``vec_lo/block_lo/dev_rank`` are per-device
+    scalars (sharded (ndev,) arrays), and everything else replicates.
+    With ``streaming=False`` the delta/live arguments are zero-width
+    placeholders and the streaming merge is compiled out.
+    """
+    fetch = bigk * (oversample if dedup_results else 1)
+    axes = tuple(axes)
+
+    def serve(block_codes, block_ids, block_other, owned, owned_other,
+              refs, refs_other, misc, centroids, codebooks, vectors,
+              vec_lo, block_lo, dev_rank, delta_codes, delta_ids, live,
+              queries):
+        # -- replicated control path: list selection + dedup + local plan
+        # (identical on every device; no collective needed)
+        selection = select_lists(queries, centroids, nprobe=nprobe,
+                                 metric=metric)
+        tables = ListTables(owned=owned, owned_other=owned_other, refs=refs,
+                            refs_other=refs_other, misc=misc)
+        plan = plan_blocks(tables, selection, max_scan=max_scan_local,
+                           local_lo=block_lo[0],
+                           local_count=block_ids.shape[0])
+
+        # -- local ADC scan over the device's block shard (either mode)
+        cb = PQCodebook(codebooks)
+        lut = pq_lut(cb, queries) if metric == "l2" else pq_lut_ip(cb, queries)
+        store = BlockStore(block_codes=block_codes, block_ids=block_ids,
+                           block_other=block_other)
+        scan = scan_blocks(store, plan, lut, selection.rank_of,
+                           exec_mode=exec_mode, query_tile=query_tile)
+        flat_d, flat_i = scan.flat_d, scan.flat_i
+        approx_dco = scan.approx_dco
+
+        if streaming:
+            # delta scanned on every device (replicated compute, no extra
+            # collective) but each slot has one owner (slot % ndev) so the
+            # gathered candidate stream holds each delta id exactly once
+            # — and logical DCO is counted exactly once per live slot.
+            cap = delta_ids.shape[0]
+            alive = delta_ids >= 0
+            mine = alive & ((jnp.arange(cap, dtype=jnp.int32) % ndev)
+                            == dev_rank[0])
+            dd = jnp.where(mine[None, :], delta_adc(lut, delta_codes),
+                           jnp.inf)
+            di = jnp.broadcast_to(delta_ids[None, :], dd.shape)
+            flat_d = jnp.concatenate([flat_d, dd], axis=1)
+            flat_i = jnp.concatenate([flat_i, di], axis=1)
+            # tombstone mask over the whole id space, replicated
+            dead = (flat_i >= 0) & ~live[jnp.maximum(flat_i, 0)]
+            flat_d = jnp.where(dead, jnp.inf, flat_d)
+            approx_dco = approx_dco + jnp.sum(mine).astype(jnp.int32)
+
+        # -- collective 1: local stable top-fetch, all_gather the streams
+        l_d, l_ids = preselect_candidates(flat_d, flat_i, fetch=fetch)
+        g_d = jax.lax.all_gather(l_d, axes, axis=1, tiled=True)
+        g_ids = jax.lax.all_gather(l_ids, axes, axis=1, tiled=True)
+
+        # -- shared finalize tail; collective 2: pmin of owner-scored
+        # exact distances (vec_lo windows the row shard)
+        out_ids, out_d, refine_dco = finalize_candidates(
+            g_d, g_ids, bigk=bigk, k=k, vectors=vectors, queries=queries,
+            metric=metric, dedup_results=dedup_results,
+            oversample=oversample, vec_lo=vec_lo[0], reduce_axes=axes)
+        return SearchResult(
+            ids=out_ids, dists=out_d,
+            approx_dco=jax.lax.psum(approx_dco, axes),
+            refine_dco=refine_dco,
+            scanned_blocks=jax.lax.psum(scan.scanned_blocks, axes),
+            dropped_blocks=jax.lax.psum(plan.dropped, axes))
+
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# deprecated compat shims (pre-ShardedIndex entry points)
+# ---------------------------------------------------------------------------
 
 class DistSearchResult(NamedTuple):
     ids: jnp.ndarray
@@ -45,86 +147,61 @@ def make_distributed_serve_step(nlist: int, nprobe: int, bigk: int, k: int,
                                 max_scan_local: int, axes=("data",),
                                 exec_mode: str = "paged",
                                 query_tile: int = 8):
-    """Returns serve(arrays, tables, centroids, codebook_dec, vectors,
-    queries) for use inside shard_map (see distributed_search)."""
+    """Deprecated: use ``index.shard(mesh).searcher(params)``.
+
+    Thin shim over ``build_serve_step`` preserving the old 14-argument
+    serve signature and ``DistSearchResult`` return (no result dedup, no
+    streaming state, l2 only) for callers that still hand-roll the
+    shard_map wrapping."""
+    warnings.warn(
+        "make_distributed_serve_step is deprecated; create a session via "
+        "index.shard(mesh).searcher(params) (core/sharded.py) — it serves "
+        "the same shard_map step through the unified Searcher API",
+        DeprecationWarning, stacklevel=2)
+    step = build_serve_step(
+        nprobe=nprobe, bigk=bigk, k=k, max_scan_local=max_scan_local,
+        metric="l2", dedup_results=False, oversample=1, exec_mode=exec_mode,
+        query_tile=query_tile, axes=axes, ndev=1, streaming=False)
 
     def serve(block_codes, block_ids, block_other, owned, owned_other,
               refs, refs_other, misc, centroids, lut_codebooks, vectors,
               vec_lo, block_lo, queries):
-        # -- replicated control path: list selection + dedup + local plan
-        # (identical on every device; no collective needed)
-        selection = select_lists(queries, centroids, nprobe=nprobe,
-                                 metric="l2")
-        tables = ListTables(owned=owned, owned_other=owned_other, refs=refs,
-                            refs_other=refs_other, misc=misc)
-        plan = plan_blocks(tables, selection, max_scan=max_scan_local,
-                           local_lo=block_lo[0],
-                           local_count=block_ids.shape[0])
-
-        # -- local scan over the device's block shard
-        lut = pq_lut_from_tables(lut_codebooks, queries)
-        store = BlockStore(block_codes=block_codes, block_ids=block_ids,
-                           block_other=block_other)
-        scan = scan_blocks(store, plan, lut, selection.rank_of,
-                           exec_mode=exec_mode, query_tile=query_tile)
-
-        # -- local top-bigK, then one all_gather to merge
-        neg, pos = jax.lax.top_k(-scan.flat_d,
-                                 min(bigk, scan.flat_d.shape[1]))
-        l_ids = jnp.take_along_axis(scan.flat_i, pos, axis=1)
-        l_d = -neg
-        g_ids = jax.lax.all_gather(l_ids, axes, axis=1, tiled=True)
-        g_d = jax.lax.all_gather(l_d, axes, axis=1, tiled=True)
-        negg, posg = jax.lax.top_k(-g_d, bigk)
-        cand_ids = jnp.take_along_axis(g_ids, posg, axis=1)
-        cand_ok = jnp.isfinite(-negg)
-        cand_ids = jnp.where(cand_ok, cand_ids, -1)
-
-        # -- distributed refine: owner device scores, pmin reduces
-        nloc = vectors.shape[0]
-        rel = cand_ids - vec_lo[0]
-        mine = cand_ok & (rel >= 0) & (rel < nloc)
-        cv = vectors[jnp.clip(rel, 0, nloc - 1)]
-        diff = cv - queries[:, None, :]
-        exact = jnp.where(mine, jnp.sum(diff * diff, -1), jnp.inf)
-        exact = jax.lax.pmin(exact, axes)
-        negk, posk = jax.lax.top_k(-exact, k)
-        out_ids = jnp.take_along_axis(cand_ids, posk, axis=1)
-        out_d = -negk
-        out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
-        return DistSearchResult(ids=out_ids, dists=out_d,
-                                local_dco=jax.lax.psum(scan.approx_dco, axes))
+        m = lut_codebooks.shape[0]
+        res = step(block_codes, block_ids, block_other, owned, owned_other,
+                   refs, refs_other, misc, centroids, lut_codebooks,
+                   vectors, vec_lo, block_lo,
+                   jnp.zeros_like(block_lo),            # dev_rank (unused)
+                   jnp.zeros((0, m), jnp.uint8),        # delta_codes
+                   jnp.zeros((0,), jnp.int32),          # delta_ids
+                   jnp.zeros((0,), bool),               # live
+                   queries)
+        return DistSearchResult(ids=res.ids, dists=res.dists,
+                                local_dco=res.approx_dco)
 
     return serve
 
 
-def pq_lut_from_tables(codebooks, queries):
-    """(M, ksub, dsub) f32 codebooks -> per-query LUTs (B, M, ksub)."""
-    b, d = queries.shape
-    m, ksub, dsub = codebooks.shape
-    qs = queries.reshape(b, m, dsub)
-    diff = qs[:, :, None, :] - codebooks[None]
-    return jnp.sum(diff * diff, axis=-1)
-
-
-def distributed_search(index, mesh: Mesh, queries, *,
+def distributed_search(index, mesh, queries, *,
                        params: SearchParams = None,
                        nprobe: int = None, k: int = None,
                        k_factor: int = None, max_scan_local: int = 512,
                        axes=("data",), exec_mode: str = None,
                        query_tile: int = None):
-    """Host-callable wrapper: pads + shards a RairsIndex over `axes` and
-    runs the shard_map serve step (used by tests and launch/serve).
+    """Deprecated host-callable wrapper, now a thin shim: shards `index`
+    over `mesh` via ``index.shard(...)`` and serves one batch through a
+    ``ShardedIndex`` session.  Prefer holding the session::
 
-    Query-side knobs come from `params` (the session API's SearchParams);
-    individual kwargs override its fields.  Without `params`, `nprobe`
-    and `k` are required (as before the session API).  `max_scan_local`
-    stays separate — it is the per-device plan budget, a property of the
-    shard layout rather than of the query.  Fields the shard_map path
-    does not implement (`use_kernel`, `max_scan`, `batch_buckets`) are
-    rejected rather than silently dropped."""
+        sharded  = index.shard(mesh, axes=axes, max_scan_local=...)
+        searcher = sharded.searcher(SearchParams(...))
+        result   = searcher(queries)
+
+    Query-side knobs come from `params` (individual kwargs override its
+    fields); without `params`, `nprobe` and `k` are required.
+    ``max_scan_local`` stays separate — it is the per-device plan
+    budget, a property of the shard layout rather than of the query.
+    Returns the unified ``SearchResult`` (the legacy ``local_dco`` field
+    is ``approx_dco``)."""
     import dataclasses as _dc
-    import numpy as np
     if params is None:
         if nprobe is None or k is None:
             raise TypeError(
@@ -138,58 +215,13 @@ def distributed_search(index, mesh: Mesh, queries, *,
             if v is not None}
     if over:
         params = _dc.replace(params, **over)
-    unsupported = [name for name, v in (("use_kernel", params.use_kernel),
-                                        ("max_scan", params.max_scan),
-                                        ("batch_buckets", params.batch_buckets))
-                   if v not in (None, False)]
-    if unsupported:
+    if params.max_scan is not None:
+        # the wrapper always pins a per-device budget, which would
+        # silently override the per-query field — refuse instead
         raise ValueError(
-            f"distributed_search does not support SearchParams fields "
-            f"{unsupported} (use max_scan_local for the per-device budget; "
-            f"the shard_map step runs the jnp scan path)")
-    nprobe, k, k_factor = params.nprobe, params.k, params.k_factor
-    exec_mode, query_tile = params.exec_mode, params.query_tile
-    nd = 1
-    for a in axes:
-        nd *= mesh.shape[a]
-    arrays = index.arrays
-    owned_np = np.asarray(arrays.owned)
-    bo_np = np.asarray(arrays.block_other)
-    owned_other = np.where(owned_np >= 0,
-                           bo_np[np.maximum(owned_np, 0), 0], -1
-                           ).astype(np.int32)
-    tb = arrays.block_codes.shape[0]
-    pad = (-tb) % nd
-
-    def padb(x, fill):
-        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
-                       constant_values=fill)
-
-    codes = padb(arrays.block_codes, 0)
-    bids = padb(arrays.block_ids, -1)
-    both = padb(arrays.block_other, -1)
-    n = index.vectors.shape[0]
-    vpad = (-n) % nd
-    vecs = jnp.pad(index.vectors, ((0, vpad), (0, 0)))
-    tb_l = (tb + pad) // nd
-    n_l = (n + vpad) // nd
-    block_lo = jnp.arange(nd, dtype=jnp.int32) * tb_l
-    vec_lo = jnp.arange(nd, dtype=jnp.int32) * n_l
-
-    serve = make_distributed_serve_step(
-        nlist=index.config.nlist, nprobe=nprobe, bigk=k * k_factor, k=k,
-        max_scan_local=max_scan_local, axes=axes, exec_mode=exec_mode,
-        query_tile=query_tile)
-    spec_sharded = P(axes)
-    spec_rep = P()
-    fn = shard_map(
-        serve, mesh=mesh,
-        in_specs=(spec_sharded, spec_sharded, spec_sharded, spec_rep,
-                  spec_rep, spec_rep, spec_rep, spec_rep, spec_rep,
-                  spec_rep, spec_sharded, spec_sharded, spec_sharded,
-                  spec_rep),
-        out_specs=DistSearchResult(ids=spec_rep, dists=spec_rep,
-                                   local_dco=spec_rep))
-    return fn(codes, bids, both, arrays.owned, jnp.asarray(owned_other),
-              arrays.refs, arrays.refs_other, arrays.misc, index.centroids,
-              index.codebook.codebooks, vecs, vec_lo, block_lo, queries)
+            "distributed_search does not support SearchParams.max_scan; "
+            "use max_scan_local= for the per-device plan budget (or hold "
+            "a session: index.shard(mesh, max_scan_local=...)"
+            ".searcher(params))")
+    sharded = index.shard(mesh, axes=axes, max_scan_local=max_scan_local)
+    return sharded.searcher(params)(queries)

@@ -7,11 +7,12 @@ Composable, individually-jittable stages over static-shape pytrees:
     scan_blocks   -> ScanOut         ADC scan, exec_mode "paged"|"grouped"
     finalize_candidates              top-bigK + id-dedup + exact refine
 
-``core/search.py`` (single host) and ``core/distributed.py`` (shard_map)
-are thin compositions of these stages; they differ only in which
-``BlockStore`` they scan and in the plan's block-range window.
+``core/search.py`` (single host) and ``core/distributed.py`` (the
+shard_map serve step behind ``core/sharded.py``) are thin compositions
+of these stages; they differ only in which ``BlockStore`` they scan and
+in the plan's block-range window.
 """
-from .finalize import finalize_candidates  # noqa: F401
+from .finalize import finalize_candidates, preselect_candidates  # noqa: F401
 from .plan import compact_plan, gather_candidates, plan_blocks  # noqa: F401
 from .scan import EXEC_MODES, batch_union, scan_blocks  # noqa: F401
 from .select import rank_table, select_lists  # noqa: F401

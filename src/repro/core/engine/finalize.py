@@ -7,9 +7,28 @@ import jax.numpy as jnp
 from .types import BIG
 
 
+def preselect_candidates(flat_d, flat_i, *, fetch: int):
+    """Stable top-``fetch`` over a flat candidate stream: returns
+    ``(cand_d, cand_ids)`` sorted ascending by distance, ties broken by
+    flat position (``jax.lax.top_k`` is stable).
+
+    This is the per-device half of the distributed merge (core/sharded.py):
+    each shard preselects its local top-fetch, the shards ``all_gather``,
+    and ``finalize_candidates`` runs over the union.  Because the
+    selection is stable, ``finalize_candidates(preselect(x)) ==
+    finalize_candidates(x)`` bitwise whenever the preselect width covers
+    the finalize fetch — the 1-device parity invariant asserted in
+    tests/test_sharded.py.
+    """
+    fetch = min(fetch, flat_d.shape[1])
+    neg, pos = jax.lax.top_k(-flat_d, fetch)
+    return -neg, jnp.take_along_axis(flat_i, pos, axis=1)
+
+
 def finalize_candidates(flat_d, flat_i, *, bigk, k, vectors, queries,
                         metric, dedup_results, oversample: int = 2,
-                        extra_d=None, extra_i=None, live=None):
+                        extra_d=None, extra_i=None, live=None,
+                        vec_lo=None, reduce_axes=None):
     """Shared tail of all search paths: top-bigK (+ optional id-dedup for
     duplicated layouts), exact-distance refinement, top-K packing.
 
@@ -26,6 +45,15 @@ def finalize_candidates(flat_d, flat_i, *, bigk, k, vectors, queries,
                        dead candidates (deleted base or delta items) are
                        forced to +inf before selection, so they can
                        neither be returned nor displace live candidates.
+
+    Sharded hooks (core/sharded.py, inert when unused): with ``vec_lo``
+    the refine store is a row shard covering global ids
+    [vec_lo, vec_lo + len(vectors)); each device scores only the
+    candidates it owns (+inf elsewhere) and ``reduce_axes`` pmin-merges
+    exact distances across the mesh, so refinement never moves vector
+    data.  On one device (vec_lo=0, full store) the owner mask equals
+    ``cand_ok`` and the pmin is the identity — bitwise the single-host
+    path.
     """
     if extra_d is not None:
         flat_d = jnp.concatenate([flat_d, extra_d], axis=1)
@@ -50,13 +78,22 @@ def finalize_candidates(flat_d, flat_i, *, bigk, k, vectors, queries,
         cand_ok &= jnp.cumsum(cand_ok, axis=1) <= bigk       # truncate
     cand_ids = jnp.where(cand_ok, cand_ids, -1)
 
-    cv = vectors[jnp.maximum(cand_ids, 0)]                   # (B, bigK, D)
+    if vec_lo is None:
+        cv = vectors[jnp.maximum(cand_ids, 0)]               # (B, bigK, D)
+        score_ok = cand_ok
+    else:
+        nloc = vectors.shape[0]
+        rel = cand_ids - vec_lo
+        score_ok = cand_ok & (rel >= 0) & (rel < nloc)       # owner mask
+        cv = vectors[jnp.clip(rel, 0, nloc - 1)]
     if metric == "l2":
         diff = cv - queries[:, None, :]
         exact = jnp.sum(diff * diff, axis=-1)
     else:
         exact = -jnp.einsum("bkd,bd->bk", cv, queries)
-    exact = jnp.where(cand_ok, exact, jnp.inf)
+    exact = jnp.where(score_ok, exact, jnp.inf)
+    if reduce_axes is not None:
+        exact = jax.lax.pmin(exact, reduce_axes)
     refine_dco = jnp.sum(cand_ok, axis=1).astype(jnp.int32)
     negk, posk = jax.lax.top_k(-exact, k)
     out_ids = jnp.take_along_axis(cand_ids, posk, axis=1)

@@ -143,6 +143,18 @@ class RairsIndex:
         from .stream import StreamingIndex
         return StreamingIndex(self, config)
 
+    def shard(self, mesh, axes=("data",), max_scan_local=None):
+        """Deploy this index over `mesh` as a ``ShardedIndex``
+        (core/sharded.py, DESIGN.md §4): block arrays and refine vectors
+        shard by id range, centroids/tables/codebooks replicate, and
+        ``.searcher(params)`` sessions lower shard_map executables with
+        the same bucket/cache machinery as the single-host path.
+        Cached per (mesh, axes, max_scan_local) so repeated shards of
+        one index share placed arrays and compiled executables."""
+        from .sharded import shard_index
+        return shard_index(self, mesh, axes=axes,
+                           max_scan_local=max_scan_local)
+
     def searcher_stats(self) -> dict:
         """Aggregate compile-cache stats over every cached session (the
         public accessor — benchmarks/serving should not reach into the

@@ -1,4 +1,4 @@
-"""Index persistence — save/load a built index as one npz bundle.
+"""Index persistence — single-file npz bundles and sharded v3 bundles.
 
 The bundle holds every array the query path needs (centroids, PQ
 codebooks, SEIL block store + per-list tables, refine vectors) plus the
@@ -19,13 +19,30 @@ tombstone bitmap (bit-packed), with epoch/version counters in the JSON
 meta.  ``save_index`` accepts either index type; ``load_index`` returns
 whichever type the bundle holds.  v1 bundles (pre-streaming) load
 unchanged — v1 is exactly "v2 with no streaming section".
+
+Format v3 (DESIGN.md §4) is the *sharded* layout for mesh deployments:
+``save_index(index, path, shards=N)`` (or passing a ``ShardedIndex``)
+writes a directory —
+
+    path/MANIFEST.json   format header, shard row ranges, embedded meta
+    path/common.npz      replicated arrays: centroids, codebooks, the
+                         per-list SEIL tables, streaming state
+    path/shard_0000.npz… row shards: block arrays by block-id range,
+                         vectors/assigns/codes by vector-id range
+
+Shard count in the file layout is independent of the serving mesh
+(ranges are even splits of the unpadded arrays), so a 4-shard bundle
+loads onto an 8-device mesh and vice versa.  ``load_index`` reassembles
+and returns the same index type as the v1/v2 path — pass ``mesh=`` to
+get a ``ShardedIndex`` back directly.  v1/v2 single-file bundles load
+unchanged (asserted against golden fixtures in tests/test_io_compat.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Union
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -36,21 +53,25 @@ from .seil import SeilArrays, SeilStats
 from .stream import StreamConfig, StreamingIndex
 
 INDEX_FORMAT = "rairs-index"
-INDEX_FORMAT_VERSION = 2
-READ_FORMAT_VERSIONS = (1, 2)   # v1 = v2 without the streaming section
+INDEX_FORMAT_VERSION = 2          # single-file bundles
+SHARDED_FORMAT_VERSION = 3        # manifest + per-shard bundles
+READ_FORMAT_VERSIONS = (1, 2, 3)  # v1 = v2 without the streaming section
+MANIFEST_NAME = "MANIFEST.json"
 
 _SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
                 "refs", "refs_other", "misc")
+# v3 split of the SEIL arrays: block store shards by block-id range,
+# the per-list directory replicates in common.npz
+_BLOCK_FIELDS = ("block_codes", "block_ids", "block_other")
+_TABLE_FIELDS = ("owned", "refs", "refs_other", "misc")
+_VECTOR_FIELDS = ("vectors", "assigns", "codes")   # shard by vector-id range
+_STREAM_FIELDS = ("delta_vectors", "delta_codes", "delta_assigns",
+                  "delta_live", "base_live")
 
 
-def save_index(index: Union[RairsIndex, StreamingIndex],
-               path: Union[str, os.PathLike], extra: dict = None) -> None:
-    """Write `index` to `path` as a compressed npz bundle (exact path —
-    no implicit .npz suffix is appended).  `extra` is a JSON-able dict
-    of caller provenance (e.g. {"dataset": "sift1m"}) stored alongside
-    the config and readable via ``read_index_meta``.  A StreamingIndex
-    is persisted without compacting: the delta segment and tombstones
-    round-trip as-is."""
+def _gather_arrays(index: Union[RairsIndex, StreamingIndex],
+                   extra: Optional[dict]) -> tuple:
+    """(meta, arrays) shared by the single-file and sharded writers."""
     stream = index if isinstance(index, StreamingIndex) else None
     base = stream.base if stream is not None else index
     meta = {
@@ -85,16 +106,93 @@ def save_index(index: Union[RairsIndex, StreamingIndex],
         arrays["delta_assigns"] = d.assigns[:d.count]
         arrays["delta_live"] = d.live[:d.count]
         arrays["base_live"] = np.packbits(stream._base_live)
-    arrays["meta_json"] = np.frombuffer(
-        json.dumps(meta).encode("utf-8"), np.uint8)
-    with open(path, "wb") as fh:
-        np.savez_compressed(fh, **arrays)
+    return meta, arrays
 
 
-def _check_meta(path, z) -> dict:
-    if "meta_json" not in z:
-        raise ValueError(f"{path}: not a {INDEX_FORMAT} bundle")
-    meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
+def save_index(index, path: Union[str, os.PathLike], extra: dict = None,
+               *, shards: Optional[int] = None) -> None:
+    """Write `index` to `path`.
+
+    Default: one compressed npz bundle at exactly `path` (no implicit
+    .npz suffix).  With ``shards=N`` — or when `index` is a
+    ``ShardedIndex``, defaulting N to its device count — `path` becomes
+    a directory holding a v3 manifest + per-shard bundles (see module
+    docstring).  `extra` is a JSON-able dict of caller provenance
+    (e.g. {"dataset": "sift1m"}) readable via ``read_index_meta``.  A
+    StreamingIndex is persisted without compacting: the delta segment
+    and tombstones round-trip as-is."""
+    from .sharded import ShardedIndex
+    if isinstance(index, ShardedIndex):
+        shards = shards or index.ndev
+        index = index.index
+    meta, arrays = _gather_arrays(index, extra)
+    if shards is None:
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode("utf-8"), np.uint8)
+        with open(path, "wb") as fh:
+            np.savez_compressed(fh, **arrays)
+        return
+    _save_sharded(meta, arrays, path, int(shards))
+
+
+def _splits(n: int, shards: int):
+    """Even [lo, hi) row ranges (np.array_split semantics)."""
+    bounds = np.linspace(0, n, shards + 1).astype(np.int64)
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(shards)]
+
+
+def _save_sharded(meta: dict, arrays: dict, path, shards: int) -> None:
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    os.makedirs(path, exist_ok=True)
+    tb = arrays["block_ids"].shape[0]
+    n = arrays["vectors"].shape[0]
+    block_rows = _splits(tb, shards)
+    vector_rows = _splits(n, shards)
+    shard_files = []
+    for s in range(shards):
+        blo, bhi = block_rows[s]
+        vlo, vhi = vector_rows[s]
+        payload = {f: arrays[f][blo:bhi] for f in _BLOCK_FIELDS}
+        for f in _VECTOR_FIELDS:
+            if f in arrays:
+                payload[f] = arrays[f][vlo:vhi]
+        fname = f"shard_{s:04d}.npz"
+        with open(os.path.join(path, fname), "wb") as fh:
+            np.savez_compressed(fh, **payload)
+        shard_files.append(fname)
+    common = {f: arrays[f] for f in ("centroids", "codebooks")}
+    for f in _TABLE_FIELDS + _STREAM_FIELDS:
+        if f in arrays:
+            common[f] = arrays[f]
+    with open(os.path.join(path, "common.npz"), "wb") as fh:
+        np.savez_compressed(fh, **common)
+    manifest = {
+        "format": INDEX_FORMAT,
+        "format_version": SHARDED_FORMAT_VERSION,
+        "shards": shards,
+        "common": "common.npz",
+        "shard_files": shard_files,
+        "block_rows": block_rows,
+        "vector_rows": vector_rows,
+        "meta": dict(meta, format_version=SHARDED_FORMAT_VERSION),
+    }
+    with open(os.path.join(path, MANIFEST_NAME), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+        fh.write("\n")
+
+
+def _manifest_path(path) -> Optional[str]:
+    """Resolve `path` to a v3 manifest file, or None for single-file."""
+    p = os.fspath(path)
+    if os.path.isdir(p):
+        return os.path.join(p, MANIFEST_NAME)
+    if os.path.basename(p) == MANIFEST_NAME:
+        return p
+    return None
+
+
+def _check_meta(path, meta: dict) -> dict:
     if meta.get("format") != INDEX_FORMAT:
         raise ValueError(
             f"{path}: format {meta.get('format')!r} != {INDEX_FORMAT!r}")
@@ -106,47 +204,115 @@ def _check_meta(path, z) -> dict:
     return meta
 
 
+def _load_npz_meta(path, z) -> dict:
+    if "meta_json" not in z:
+        raise ValueError(f"{path}: not a {INDEX_FORMAT} bundle")
+    meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
+    _check_meta(path, meta)
+    if meta["format_version"] not in (1, INDEX_FORMAT_VERSION):
+        raise ValueError(
+            f"{path}: single-file bundles carry format_version 1 or "
+            f"{INDEX_FORMAT_VERSION}, got {meta['format_version']} "
+            f"(v{SHARDED_FORMAT_VERSION} bundles are directories with a "
+            f"{MANIFEST_NAME})")
+    return meta
+
+
+def _read_manifest(mpath: str) -> dict:
+    if not os.path.exists(mpath):
+        raise ValueError(f"{mpath}: sharded bundle has no {MANIFEST_NAME}")
+    with open(mpath) as fh:
+        manifest = json.load(fh)
+    _check_meta(mpath, manifest)
+    if manifest.get("format_version") != SHARDED_FORMAT_VERSION:
+        raise ValueError(
+            f"{mpath}: manifest version "
+            f"{manifest.get('format_version')} != {SHARDED_FORMAT_VERSION}")
+    return manifest
+
+
 def read_index_meta(path: Union[str, os.PathLike]) -> dict:
     """Read only the JSON metadata of a bundle (config / stats / extra
-    provenance) without materializing the arrays."""
+    provenance) without materializing the arrays.  Works on single-file
+    bundles and v3 sharded directories alike."""
+    mpath = _manifest_path(path)
+    if mpath is not None:
+        manifest = _read_manifest(mpath)
+        return dict(manifest["meta"], shards=manifest["shards"])
     with np.load(path, allow_pickle=False) as z:
-        return _check_meta(path, z)
+        return _load_npz_meta(path, z)
 
 
-def load_index(path: Union[str, os.PathLike]
+def _index_from(meta: dict, get):
+    """Rebuild the index object from meta + an array accessor (shared by
+    the single-file and sharded loaders)."""
+    cfg = IndexConfig(**meta["config"])
+    arrays = SeilArrays(**{f: jnp.asarray(get(f)) for f in _SEIL_FIELDS})
+    base = RairsIndex(
+        config=cfg,
+        centroids=jnp.asarray(get("centroids")),
+        codebook=PQCodebook(jnp.asarray(get("codebooks"))),
+        arrays=arrays,
+        vectors=jnp.asarray(get("vectors")),
+        stats=SeilStats(**meta["stats"]),
+        assigns=np.asarray(get("assigns")),
+        codes=np.asarray(get("codes")) if meta["has_codes"] else None,
+        build_seconds=dict(meta.get("build_seconds", {})),
+    )
+    sm = meta.get("streaming")
+    if sm is None:
+        return base
+    stream = StreamingIndex(base, StreamConfig(**sm["stream_config"]))
+    stream.restore_state(
+        epoch=sm["epoch"], version=sm["version"],
+        base_live=np.unpackbits(
+            get("base_live"), count=base.vectors.shape[0]).astype(bool),
+        delta_vectors=np.asarray(get("delta_vectors")),
+        delta_codes=np.asarray(get("delta_codes")),
+        delta_assigns=np.asarray(get("delta_assigns")),
+        delta_live=np.asarray(get("delta_live"), bool),
+    )
+    return stream
+
+
+def _load_sharded(mpath: str):
+    manifest = _read_manifest(mpath)
+    root = os.path.dirname(mpath)
+    parts = []
+    for fname in manifest["shard_files"]:
+        with np.load(os.path.join(root, fname), allow_pickle=False) as z:
+            parts.append({k: z[k] for k in z.files})
+    with np.load(os.path.join(root, manifest["common"]),
+                 allow_pickle=False) as z:
+        common = {k: z[k] for k in z.files}
+
+    def get(name):
+        if name in common:
+            return common[name]
+        return np.concatenate([p[name] for p in parts], axis=0)
+
+    meta = dict(manifest["meta"])
+    return _index_from(meta, get)
+
+
+def load_index(path: Union[str, os.PathLike], *, mesh=None, axes=("data",),
+               max_scan_local: Optional[int] = None
                ) -> Union[RairsIndex, StreamingIndex]:
-    """Load a bundle written by ``save_index``.
+    """Load a bundle written by ``save_index`` (any readable version).
 
     Returns a plain ``RairsIndex`` for frozen bundles (all v1 bundles,
-    and v2 bundles saved from a RairsIndex) or a ``StreamingIndex`` —
-    delta segment, tombstones and epoch/version counters restored —
-    when the bundle carries streaming state."""
-    with np.load(path, allow_pickle=False) as z:
-        meta = _check_meta(path, z)
-        cfg = IndexConfig(**meta["config"])
-        arrays = SeilArrays(**{f: jnp.asarray(z[f]) for f in _SEIL_FIELDS})
-        base = RairsIndex(
-            config=cfg,
-            centroids=jnp.asarray(z["centroids"]),
-            codebook=PQCodebook(jnp.asarray(z["codebooks"])),
-            arrays=arrays,
-            vectors=jnp.asarray(z["vectors"]),
-            stats=SeilStats(**meta["stats"]),
-            assigns=np.asarray(z["assigns"]),
-            codes=np.asarray(z["codes"]) if meta["has_codes"] else None,
-            build_seconds=dict(meta.get("build_seconds", {})),
-        )
-        sm = meta.get("streaming")
-        if sm is None:
-            return base
-        stream = StreamingIndex(base, StreamConfig(**sm["stream_config"]))
-        stream.restore_state(
-            epoch=sm["epoch"], version=sm["version"],
-            base_live=np.unpackbits(
-                z["base_live"], count=base.vectors.shape[0]).astype(bool),
-            delta_vectors=np.asarray(z["delta_vectors"]),
-            delta_codes=np.asarray(z["delta_codes"]),
-            delta_assigns=np.asarray(z["delta_assigns"]),
-            delta_live=np.asarray(z["delta_live"], bool),
-        )
-        return stream
+    and v2/v3 bundles saved from a RairsIndex) or a ``StreamingIndex``
+    — delta segment, tombstones and epoch/version counters restored —
+    when the bundle carries streaming state.  v3 sharded directories
+    reassemble transparently.  With ``mesh=`` the loaded index is
+    deployed immediately: returns ``loaded.shard(mesh, axes=...)``."""
+    mpath = _manifest_path(path)
+    if mpath is not None:
+        index = _load_sharded(mpath)
+    else:
+        with np.load(path, allow_pickle=False) as z:
+            meta = _load_npz_meta(path, z)
+            index = _index_from(meta, lambda name: z[name])
+    if mesh is not None:
+        return index.shard(mesh, axes=axes, max_scan_local=max_scan_local)
+    return index

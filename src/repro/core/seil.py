@@ -295,14 +295,22 @@ def build_id_map(arrays: SeilArrays) -> Dict[int, list]:
 
 
 def delete_ids(arrays: SeilArrays, id_map: Dict[int, list], del_ids) -> SeilArrays:
-    """Invalidate entries for `del_ids` (paper §6.1 deletion support).
+    """Deprecated: invalidate layout entries for `del_ids` (paper §6.1).
 
     LAYOUT-LEVEL ONLY: this rewrites ``SeilArrays`` in isolation and
     leaves an index's ``assigns``/``codes``/``vectors``/``SeilStats`` —
     and any cached searcher session — stale.  Index-level deletion must
     go through ``StreamingIndex.delete`` (core/stream/), which masks
     tombstones at query time and keeps every view plus session
-    versioning coherent (tests/test_stream.py guards the regression)."""
+    versioning coherent (tests/test_stream.py guards the regression).
+    Emits a ``DeprecationWarning`` so the footgun is loud: it remains
+    callable only for layout-isolation measurements."""
+    import warnings
+    warnings.warn(
+        "seil.delete_ids is layout-only and leaves assigns/codes/vectors/"
+        "stats and cached sessions stale; use StreamingIndex.delete "
+        "(index.streaming().delete(ids)) for index-level deletion",
+        DeprecationWarning, stacklevel=2)
     ids = np.asarray(arrays.block_ids).copy()
     for i in del_ids:
         for (b, s) in id_map.get(int(i), ()):

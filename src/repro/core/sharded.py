@@ -1,0 +1,453 @@
+"""ShardedIndex — one index, any topology (DESIGN.md §4).
+
+``index.shard(mesh, axes=...)`` wraps a ``RairsIndex`` *or* a
+``StreamingIndex`` as a mesh-resident view that serves through the
+exact same session protocol as the single-host path::
+
+    sharded  = index.shard(mesh)                  # deployment detail
+    searcher = sharded.searcher(SearchParams(k=10, nprobe=16))
+    result   = searcher(queries)                  # pad-and-dispatch buckets
+    searcher.compile_stats()                      # same counters
+
+``ShardedSearcher`` reuses all of ``Searcher``'s machinery (batch-size
+buckets, chunking, compile/cache stats, (epoch, version) pinning) and
+only swaps the ``_lower`` / ``_call_inputs`` hooks: lowering produces a
+``shard_map`` executable of the serve step built by
+``core/distributed.py::build_serve_step`` instead of a single-device
+``seil_search`` program.
+
+Data placement happens once per index state, not per call: block
+arrays/refine vectors are padded to the device count and committed with
+a block-id/vector-id range ``NamedSharding``; centroids, the SEIL list
+tables, PQ codebooks, the delta segment, and the tombstone mask are
+committed replicated.  Placement is two-tier: the base layout (block
+store + tables) is placed once per *epoch*, the mutable pieces
+(vectors incl. delta rows, delta buffers, tombstone mask) once per
+*version* — so insert/delete never re-transfer the block store, only
+compaction does.  A mutated ``StreamingIndex`` base invalidates the
+per-version state and every open session exactly like the single-host
+``StreamingSearcher`` (``StaleSessionError``); compiled executables are
+shared through a shape-keyed cache, so steady-state churn on the mesh
+never recompiles.
+
+On a 1-device mesh the whole pipeline — plan window, local scan,
+stable top-fetch preselect, identity collectives, owner refinement —
+is bitwise identical to the plain ``Searcher`` (asserted in
+tests/test_sharded.py for both exec modes, frozen and streaming).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..dist import shard_map
+from .distributed import build_serve_step
+from .params import SearchParams
+from .search import SearchResult
+from .searcher import Searcher
+from .stream import StaleSessionError, StreamingIndex
+
+
+@dataclasses.dataclass
+class _BasePlacement:
+    """Mesh-resident arrays of one *epoch* of the base layout.
+
+    The block arrays are row shards (block-id range); the list tables,
+    centroids, and codebooks replicate.  Nothing here changes on
+    insert/delete — only compaction (a new epoch) invalidates it — so
+    the expensive block-store transfer happens once per epoch, not once
+    per mutation.
+    """
+    block_codes: jnp.ndarray        # (TBp, BLK, M) sharded
+    block_ids: jnp.ndarray          # (TBp, BLK)    sharded
+    block_other: jnp.ndarray        # (TBp, BLK)    sharded
+    block_lo: jnp.ndarray           # (ndev,)       sharded, per-device scalar
+    dev_rank: jnp.ndarray           # (ndev,)       sharded, per-device scalar
+    owned: jnp.ndarray              # replicated list tables …
+    owned_other: jnp.ndarray
+    refs: jnp.ndarray
+    refs_other: jnp.ndarray
+    misc: jnp.ndarray
+    centroids: jnp.ndarray
+    codebooks: jnp.ndarray
+
+
+@dataclasses.dataclass
+class _PlacedState:
+    """Full per-*version* state: the epoch base plus the mutable pieces
+    (refine vectors incl. delta rows, delta buffers, tombstone mask).
+
+    ``signature`` keys the compiled-executable cache: two states with
+    equal shapes can share every executable because arrays are runtime
+    arguments, never baked into the program.
+    """
+    base: _BasePlacement
+    vectors: jnp.ndarray            # (Np, D)   sharded by vector-id range
+    vec_lo: jnp.ndarray             # (ndev,)   sharded, per-device scalar
+    delta_codes: jnp.ndarray        # (cap, M)  replicated ((0, M) frozen)
+    delta_ids: jnp.ndarray          # (cap,)    replicated
+    live: jnp.ndarray               # (n_total,) replicated ((0,) frozen)
+    signature: Tuple
+
+    def serve_args(self) -> tuple:
+        b = self.base
+        return (b.block_codes, b.block_ids, b.block_other,
+                b.owned, b.owned_other, b.refs, b.refs_other, b.misc,
+                b.centroids, b.codebooks, self.vectors, self.vec_lo,
+                b.block_lo, b.dev_rank,
+                self.delta_codes, self.delta_ids, self.live)
+
+
+class _Placement:
+    """Placed arrays + executable cache shared by every ShardedIndex of
+    one (index, mesh, axes) — views differing only in ``max_scan_local``
+    must not place the index twice."""
+
+    def __init__(self):
+        self.state: Optional[_PlacedState] = None
+        self.version = None
+        self.base: Optional[_BasePlacement] = None
+        self.base_epoch = None
+        self.exec_cache: Dict[tuple, dict] = {}
+
+
+def shard_index(index, mesh, axes=("data",),
+                max_scan_local: Optional[int] = None) -> "ShardedIndex":
+    """Cached ``ShardedIndex`` factory — the implementation behind
+    ``RairsIndex.shard`` / ``StreamingIndex.shard``.  Cached per
+    (mesh, axes, max_scan_local) on the index (``Mesh`` is hashable, so
+    equal meshes hit the same entry); views differing only in
+    ``max_scan_local`` additionally share one placement + executable
+    cache through ``_Placement``, so no configuration ever places the
+    arrays twice."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    key = (mesh, axes, max_scan_local)
+    cache = getattr(index, "_shard_cache", None)
+    if cache is None:
+        cache = {}
+        index._shard_cache = cache
+    if key not in cache:
+        cache[key] = ShardedIndex(index, mesh, axes=axes,
+                                  max_scan_local=max_scan_local)
+    return cache[key]
+
+
+def _pad_rows(x: np.ndarray, mult: int, fill) -> np.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return np.pad(x, widths, constant_values=fill)
+
+
+class ShardedIndex:
+    """A mesh deployment of an index, serving through ``Searcher`` sessions.
+
+    Duck-type compatible with the read side of ``RairsIndex`` /
+    ``StreamingIndex`` (config / centroids / codebook / vectors /
+    searcher / search / searcher_stats), and — over a streaming base —
+    with the mutation side too (insert / delete / compact), so call
+    sites written against the single-host API run unchanged on a mesh.
+    """
+
+    def __init__(self, index, mesh, axes=("data",),
+                 max_scan_local: Optional[int] = None):
+        if isinstance(index, ShardedIndex):
+            raise TypeError("index is already a ShardedIndex")
+        self.index = index
+        self.mesh = mesh
+        self.axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        for a in self.axes:
+            if a not in mesh.shape:
+                raise ValueError(
+                    f"mesh has no axis {a!r} (axes: {tuple(mesh.shape)})")
+        ndev = 1
+        for a in self.axes:
+            ndev *= mesh.shape[a]
+        self.ndev = ndev
+        self.max_scan_local = max_scan_local
+        self.streaming = isinstance(index, StreamingIndex)
+        pcache = getattr(index, "_placement_cache", None)
+        if pcache is None:
+            pcache = {}
+            index._placement_cache = pcache
+        self._placement: _Placement = pcache.setdefault(
+            (mesh, self.axes), _Placement())
+        self._sessions: Dict[SearchParams, "ShardedSearcher"] = {}
+        self._retired: Dict[str, int] = {}
+        self._n_invalidations = 0
+
+    # ------------------------------------------------------------------
+    # read-side duck typing
+    # ------------------------------------------------------------------
+    @property
+    def config(self):
+        return self.index.config
+
+    @property
+    def centroids(self):
+        return self.index.centroids
+
+    @property
+    def codebook(self):
+        return self.index.codebook
+
+    @property
+    def vectors(self):
+        return self.index.vectors
+
+    @property
+    def needs_result_dedup(self) -> bool:
+        return self.index.needs_result_dedup
+
+    @property
+    def result_oversample(self) -> int:
+        return self.index.result_oversample
+
+    def default_max_scan(self, nprobe: int, slack: float = 1.3) -> int:
+        return self.index.default_max_scan(nprobe, slack)
+
+    @property
+    def epoch(self) -> int:
+        return getattr(self.index, "epoch", 0)
+
+    @property
+    def version(self) -> int:
+        return getattr(self.index, "version", 0)
+
+    # mutation passthrough (streaming base only) ------------------------
+    def _stream(self) -> StreamingIndex:
+        if not self.streaming:
+            raise TypeError(
+                "mutations need a streaming base: shard a StreamingIndex "
+                "(index.streaming().shard(mesh)) instead of a frozen "
+                "RairsIndex")
+        return self.index
+
+    def insert(self, x) -> np.ndarray:
+        """Append through the base's delta path; placed state and open
+        sessions refresh lazily on the next ``searcher()`` fetch."""
+        return self._stream().insert(x)
+
+    def delete(self, ids) -> int:
+        return self._stream().delete(ids)
+
+    def compact(self, reason: str = "manual") -> dict:
+        """Fold delta + tombstones on the base; the fresh epoch's block
+        arrays are re-sharded over the mesh on the next session fetch."""
+        return self._stream().compact(reason=reason)
+
+    def live_ids(self) -> np.ndarray:
+        return self._stream().live_ids()
+
+    def live_vectors(self):
+        return self._stream().live_vectors()
+
+    # ------------------------------------------------------------------
+    # mesh placement
+    # ------------------------------------------------------------------
+    def _put(self, x, spec) -> jnp.ndarray:
+        return jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, spec))
+
+    def _place_base(self, base) -> _BasePlacement:
+        """Place one epoch's immutable base layout (the expensive part:
+        the full block store crosses host->device once per epoch)."""
+        nd = self.ndev
+        sh, rep = P(self.axes), P()
+        arrays = base.arrays
+        owned_np = np.asarray(arrays.owned)
+        bo_np = np.asarray(arrays.block_other)
+        owned_other = np.where(owned_np >= 0,
+                               bo_np[np.maximum(owned_np, 0), 0], -1
+                               ).astype(np.int32)
+        codes = _pad_rows(np.asarray(arrays.block_codes), nd, 0)
+        bids = _pad_rows(np.asarray(arrays.block_ids), nd, -1)
+        both = _pad_rows(np.asarray(arrays.block_other), nd, -1)
+        lanes = np.arange(nd, dtype=np.int32)
+        tb_l = codes.shape[0] // nd
+        return _BasePlacement(
+            block_codes=self._put(codes, sh),
+            block_ids=self._put(bids, sh),
+            block_other=self._put(both, sh),
+            block_lo=self._put(lanes * tb_l, sh),
+            dev_rank=self._put(lanes, sh),
+            owned=self._put(arrays.owned, rep),
+            owned_other=self._put(owned_other, rep),
+            refs=self._put(arrays.refs, rep),
+            refs_other=self._put(arrays.refs_other, rep),
+            misc=self._put(arrays.misc, rep),
+            centroids=self._put(base.centroids, rep),
+            codebooks=self._put(base.codebook.codebooks, rep))
+
+    def _build_state(self) -> _PlacedState:
+        idx = self.index
+        nd = self.ndev
+        pl = self._placement
+        sh, rep = P(self.axes), P()
+        if self.streaming:
+            dev = idx._device_state()      # id-aligned base+delta mirrors
+            base = idx.base
+            vectors_full = np.asarray(dev.vectors_full)
+            delta_codes = self._put(dev.delta_codes, rep)
+            delta_ids = self._put(dev.delta_ids, rep)
+            live = self._put(dev.live_full, rep)
+            cap = dev.capacity
+        else:
+            base = idx
+            vectors_full = np.asarray(idx.vectors)
+            delta_codes = self._put(
+                np.zeros((0, base.codebook.m), np.uint8), rep)
+            delta_ids = self._put(np.zeros((0,), np.int32), rep)
+            live = self._put(np.zeros((0,), bool), rep)
+            cap = 0
+        if pl.base is None or pl.base_epoch != self.epoch:
+            pl.base = self._place_base(base)
+            pl.base_epoch = self.epoch
+        vecs = _pad_rows(vectors_full, nd, 0.0)
+        n_l = vecs.shape[0] // nd
+        lanes = np.arange(nd, dtype=np.int32)
+        return _PlacedState(
+            base=pl.base,
+            vectors=self._put(vecs, sh),
+            vec_lo=self._put(lanes * n_l, sh),
+            delta_codes=delta_codes, delta_ids=delta_ids, live=live,
+            signature=(pl.base.block_ids.shape[0], vecs.shape[0], cap, nd))
+
+    def _ensure_state(self) -> _PlacedState:
+        pl = self._placement
+        v = self.version
+        if pl.state is None or pl.version != v:
+            pl.state = self._build_state()
+            pl.version = v
+        return pl.state
+
+    # ------------------------------------------------------------------
+    # sessions
+    # ------------------------------------------------------------------
+    def searcher(self, params: Optional[SearchParams] = None,
+                 **kwargs) -> "ShardedSearcher":
+        """Create (or fetch) a compiled mesh session for `params`.
+
+        Same contract as the single-host ``searcher()``: sessions are
+        cached per params object; over a streaming base a cached session
+        is returned only while the index has not mutated past it —
+        stale sessions are dropped (stats folded) and replaced, with
+        executables shared through a shape-keyed cache.
+        """
+        if params is None:
+            params = SearchParams(**kwargs)
+        elif kwargs:
+            params = dataclasses.replace(params, **kwargs)
+        if params.use_kernel:
+            raise ValueError(
+                "ShardedIndex sessions run the jnp scan path inside "
+                "shard_map; use_kernel=True is not supported")
+        sess = self._sessions.get(params)
+        if sess is not None and sess.version == self.version:
+            return sess
+        if sess is not None:
+            self._fold_session(sess)
+            self._n_invalidations += 1
+        sess = ShardedSearcher(self, params)
+        self._sessions[params] = sess
+        return sess
+
+    def search(self, queries: jnp.ndarray, k: int, nprobe: int,
+               k_factor: int = 10, max_scan: Optional[int] = None,
+               exec_mode: str = "paged", query_tile: int = 8
+               ) -> SearchResult:
+        """Convenience kwarg path mirroring ``RairsIndex.search``."""
+        return self.searcher(SearchParams(
+            k=k, nprobe=nprobe, k_factor=k_factor, max_scan=max_scan,
+            exec_mode=exec_mode, query_tile=query_tile))(queries)
+
+    def _fold_session(self, sess: "Searcher"):
+        for key, v in sess.stats.as_dict().items():
+            self._retired[key] = self._retired.get(key, 0) + v
+
+    def searcher_stats(self) -> dict:
+        live = list(self._sessions.values())
+        out = {
+            "sessions": len(live) + self._n_invalidations,
+            "invalidations": self._n_invalidations,
+            "ndev": self.ndev,
+            "epoch": self.epoch,
+            "version": self.version,
+        }
+        for key in ("compiles", "cache_hits"):
+            out[key] = (self._retired.get(key, 0)
+                        + sum(getattr(s.stats, key) for s in live))
+        return out
+
+
+class ShardedSearcher(Searcher):
+    """A compiled shard_map session over one ``ShardedIndex``.
+
+    Identical outer machinery to ``Searcher`` (create via
+    ``sharded.searcher(params)``): pad-and-dispatch batch buckets,
+    chunking, compile/cache stats, and — over a streaming base —
+    (epoch, version) pinning with deterministic ``StaleSessionError``.
+    Only the two lowering hooks differ: ``_lower`` jits the
+    ``build_serve_step`` shard_map program over the mesh, and
+    ``_call_inputs`` feeds the placed shard arrays.
+    """
+
+    def __init__(self, sharded: ShardedIndex, params: SearchParams):
+        self.sharded = sharded
+        self.version = sharded.version
+        state = sharded._ensure_state()
+        super().__init__(sharded.index, params)
+        self.epoch = sharded.epoch
+        self._state = state
+        # executables depend on (params, per-device budget, shapes) only
+        # — arrays are runtime args — so sibling views and later epochs
+        # with equal shapes share them
+        self._compiled = sharded._placement.exec_cache.setdefault(
+            (self.params, sharded.max_scan_local, state.signature), {})
+
+    def _check_current(self) -> None:
+        sh = self.sharded
+        if self.version != sh.version:
+            raise StaleSessionError(
+                f"sharded session pinned (epoch {self.epoch}, version "
+                f"{self.version}) but the index is at (epoch {sh.epoch}, "
+                f"version {sh.version}); mutations invalidate sessions — "
+                f"re-fetch via sharded.searcher(params)")
+
+    def _lower(self, bucket: int):
+        sh = self.sharded
+        st = self._state
+        p = self.params
+        idx = sh.index
+        serve = build_serve_step(
+            nprobe=p.nprobe, bigk=p.bigk, k=p.k,
+            max_scan_local=(sh.max_scan_local
+                            if sh.max_scan_local is not None else p.max_scan),
+            metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            axes=sh.axes, ndev=sh.ndev, streaming=sh.streaming)
+        s, r = P(sh.axes), P()
+        fn = jax.jit(shard_map(
+            serve, mesh=sh.mesh,
+            in_specs=(s, s, s,                 # block shard
+                      r, r, r, r, r,           # list tables
+                      r, r,                    # centroids, codebooks
+                      s, s, s, s,              # vectors, vec_lo/block_lo/rank
+                      r, r, r,                 # delta + tombstones
+                      r),                      # queries
+            out_specs=SearchResult(ids=r, dists=r, approx_dco=r,
+                                   refine_dco=r, scanned_blocks=r,
+                                   dropped_blocks=r)))
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, sh.index.vectors.shape[1]), jnp.float32)
+        return fn.lower(*st.serve_args(), q_spec)
+
+    def _call_inputs(self) -> tuple:
+        return self._state.serve_args()

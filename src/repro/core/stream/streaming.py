@@ -442,6 +442,19 @@ class StreamingIndex:
             self.stats.auto_compactions += 1
             self.compact(reason="dead_threshold")
 
+    def shard(self, mesh, axes=("data",), max_scan_local=None):
+        """Deploy this mutable index over `mesh` as a ``ShardedIndex``
+        (core/sharded.py): the base epoch shards by block/vector range,
+        the delta segment and tombstone mask replicate (the delta is
+        tiny by construction), and compaction re-shards the fresh base
+        lazily.  Mutations keep flowing through this StreamingIndex
+        (the sharded view forwards insert/delete/compact); sessions on
+        the mesh pin (epoch, version) exactly like single-host ones.
+        Cached per (mesh, axes, max_scan_local)."""
+        from ..sharded import shard_index
+        return shard_index(self, mesh, axes=axes,
+                           max_scan_local=max_scan_local)
+
     # ------------------------------------------------------------------
     # sessions
     # ------------------------------------------------------------------

@@ -124,7 +124,8 @@ def run_rairs_cell(multi_pod: bool, force: bool = False):
     refine) lowered+compiled on the production mesh."""
     import jax.numpy as jnp
     from repro.configs.rairs import CONFIG as R
-    from repro.core.distributed import make_distributed_serve_step
+    from repro.core.distributed import build_serve_step
+    from repro.core.search import SearchResult
 
     cell_id = f"rairs-sift1b__serve__{'pod2' if multi_pod else 'pod1'}"
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -146,18 +147,19 @@ def run_rairs_cell(multi_pod: bool, force: bool = False):
         maxo, maxr, maxm = 560, 560, 64
         bq = 256   # serving batch sized to HBM (temp ~ bq x budget x blk x M)
         S = jax.ShapeDtypeStruct
-        serve = make_distributed_serve_step(
-            nlist=R.nlist, nprobe=R.nprobe, bigk=R.k * R.k_factor, k=R.k,
-            max_scan_local=256, axes=axes)
+        # the ShardedSearcher lowering backend, abstract-shape compiled
+        # (no real index at dry-run time, so no ShardedIndex session)
+        serve = build_serve_step(
+            nprobe=R.nprobe, bigk=R.k * R.k_factor, k=R.k,
+            max_scan_local=256, axes=axes, ndev=nd, streaming=False)
         sh, rep = P(axes), P()
         fn = jax.shard_map(
             serve, mesh=mesh,
             in_specs=(sh, sh, sh, rep, rep, rep, rep, rep, rep, rep, sh,
-                      sh, sh, rep),
-            out_specs=__import__("repro.core.distributed",
-                                 fromlist=["DistSearchResult"]
-                                 ).DistSearchResult(
-                ids=rep, dists=rep, local_dco=rep),
+                      sh, sh, sh, rep, rep, rep, rep),
+            out_specs=SearchResult(
+                ids=rep, dists=rep, approx_dco=rep, refine_dco=rep,
+                scanned_blocks=rep, dropped_blocks=rep),
             check_vma=False)
         args = (S((tb, blk, m), jnp.uint8), S((tb, blk), jnp.int32),
                 S((tb, blk), jnp.int32), S((R.nlist, maxo), jnp.int32),
@@ -166,7 +168,9 @@ def run_rairs_cell(multi_pod: bool, force: bool = False):
                 S((R.nlist, maxm), jnp.int32), S((R.nlist, R.d), jnp.float32),
                 S((m, 16, R.d // m), jnp.float32),
                 S((R.n_vectors, R.d), jnp.bfloat16), S((nd,), jnp.int32),
-                S((nd,), jnp.int32), S((bq, R.d), jnp.float32))
+                S((nd,), jnp.int32), S((nd,), jnp.int32),
+                S((0, m), jnp.uint8), S((0,), jnp.int32), S((0,), jnp.bool_),
+                S((bq, R.d), jnp.float32))
         with mesh:
             lowered = jax.jit(fn).lower(*args)
             t_lower = time.perf_counter() - t0

@@ -24,6 +24,18 @@ the same delta segment and tombstones:
 persist the result to a new path); bundles record how many corpus rows
 they consumed, so repeated ``--insert`` runs keep appending fresh rows
 instead of duplicating indexed ones.
+
+Distributed serving (DESIGN.md §4) is a deployment flag, not a code
+path: ``--ndev N`` shards the index (frozen or streaming) over an
+N-device mesh and serves through the identical session API
+(``index.shard(mesh).searcher(params)``).  ``--shards N`` makes
+``--save`` write a v3 sharded bundle (manifest + per-shard npz) that
+``--load`` reassembles transparently:
+
+``... --ndev 8 --save /tmp/sift1m_sharded --shards 8``
+
+On CPU hosts, virtual devices for smoke runs come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
@@ -32,6 +44,7 @@ import time
 
 import jax
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import (IndexConfig, SearchParams, StreamConfig,
                         StreamingIndex, available_strategies, build_index,
@@ -113,7 +126,24 @@ def main():
                     help="fold delta + tombstones into a fresh base epoch")
     ap.add_argument("--delta-pad", type=int, default=256,
                     help="delta-segment capacity bucket quantum")
+    ap.add_argument("--ndev", type=int, default=0, metavar="N",
+                    help="serve through a ShardedIndex over an N-device "
+                         "mesh (same session API; 0 = single host)")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="with --save: write a v3 sharded bundle "
+                         "(manifest + N per-shard npz files)")
     args = ap.parse_args()
+    if args.ndev:
+        avail = len(jax.devices())
+        if args.ndev > avail:
+            ap.error(f"--ndev {args.ndev} exceeds the {avail} available "
+                     f"device(s); on CPU set XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={args.ndev}")
+        if args.use_kernel:
+            ap.error("--use-kernel is single-host only (the shard_map "
+                     "step runs the jnp scan path)")
+    if args.shards and not args.save:
+        ap.error("--shards only applies to --save")
     stream_ops = bool(args.insert or args.delete or args.compact)
     if args.load and args.save and not stream_ops:
         ap.error("--save with --load needs stream ops (an unmutated "
@@ -166,15 +196,25 @@ def main():
         t0 = time.perf_counter()
         save_index(index, args.save,
                    extra={"dataset": args.dataset,
-                          "corpus_rows_used": int(rows_used)})
-        print(f"saved index bundle to {args.save} "
+                          "corpus_rows_used": int(rows_used)},
+                   shards=args.shards or None)
+        what = f"sharded ({args.shards}-way) bundle" if args.shards \
+            else "index bundle"
+        print(f"saved {what} to {args.save} "
               f"in {time.perf_counter() - t0:.1f}s")
     base = index.base if isinstance(index, StreamingIndex) else index
     print(f"  blocks={base.stats.n_blocks} items={base.stats.n_items_stored} "
           f"refs={base.stats.n_ref_entries} "
           f"logical={base.stats.logical_bytes / 1e6:.1f}MB")
 
-    searcher = index.searcher(SearchParams(
+    serving = index
+    if args.ndev:
+        mesh = Mesh(np.asarray(jax.devices()[:args.ndev]), ("data",))
+        serving = index.shard(mesh)
+        print(f"serving over a {args.ndev}-device mesh (block/vector "
+              f"shards of ~{base.stats.n_blocks // args.ndev} blocks; "
+              f"same session API)")
+    searcher = serving.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel))
 
@@ -205,6 +245,8 @@ def main():
               f"buckets={list(searcher.buckets)}]")
     if isinstance(index, StreamingIndex):
         print(f"stream searcher stats: {index.searcher_stats()}")
+    if args.ndev:
+        print(f"sharded searcher stats: {serving.searcher_stats()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,70 @@
+"""Regenerate the golden persistence fixtures (run from the repo root):
+
+    PYTHONPATH=src python tests/data/make_golden.py
+
+Writes ``golden_v1.npz`` (a frozen pre-streaming bundle, exactly "v2
+without the streaming section" with ``format_version: 1``) and
+``golden_v2.npz`` (a StreamingIndex bundle with a live delta segment
+and tombstones).  tests/test_io_compat.py asserts these keep loading
+unchanged — the back-compat contract of every later format bump (the
+v3 sharded manifest included).
+
+The fixtures are intentionally tiny (a 96x8 corpus, nlist=4) so they
+stay a few KB in git.  Do NOT regenerate them casually: the whole point
+is that bundles written by *old* builds keep loading; regeneration is
+only legitimate when a fixture itself was produced by a buggy writer.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import IndexConfig, StreamConfig, build_index, save_index
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def build_tiny_index():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(4, 8)).astype(np.float32) * 3.0
+    x = (centers[rng.integers(0, 4, 96)]
+         + rng.normal(size=(96, 8)).astype(np.float32) * 0.4)
+    cfg = IndexConfig(nlist=4, block=8, strategy="rair", seil=True,
+                      kmeans_iters=4, pq_iters=4, n_cands=3)
+    return build_index(jax.random.PRNGKey(0), x.astype(np.float32), cfg), x
+
+
+def rewrite_version(path: str, version: int) -> None:
+    """Rewrite the embedded meta's format_version (to forge a v1 bundle
+    exactly as the pre-streaming writer produced it)."""
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = json.loads(bytes(arrays["meta_json"].tobytes()).decode("utf-8"))
+    meta["format_version"] = version
+    arrays["meta_json"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), np.uint8)
+    with open(path, "wb") as fh:
+        np.savez_compressed(fh, **arrays)
+
+
+def main():
+    idx, x = build_tiny_index()
+    v1 = os.path.join(HERE, "golden_v1.npz")
+    save_index(idx, v1, extra={"fixture": "golden_v1"})
+    rewrite_version(v1, 1)
+
+    stream = idx.streaming(StreamConfig(delta_pad=16))
+    rng = np.random.default_rng(1)
+    ids = stream.insert(x[:12] + rng.normal(size=(12, 8)).astype(np.float32)
+                        * 0.05)
+    stream.delete(ids[:3])
+    stream.delete([2, 7, 11])
+    v2 = os.path.join(HERE, "golden_v2.npz")
+    save_index(stream, v2, extra={"fixture": "golden_v2"})
+    for p in (v1, v2):
+        print(f"{p}: {os.path.getsize(p)} bytes")
+
+
+if __name__ == "__main__":
+    main()

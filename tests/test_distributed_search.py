@@ -1,10 +1,9 @@
-"""Distributed RAIRS serve step == single-device searcher (host mesh)."""
+"""Legacy distributed entry points ride the unified ShardedIndex path."""
 import jax
 import numpy as np
-import pytest
 
+from repro.core import SearchParams, recall_at_k
 from repro.core.distributed import distributed_search
-from repro.core import recall_at_k
 
 
 def test_distributed_matches_local(rairs_index, unit_data):
@@ -13,7 +12,8 @@ def test_distributed_matches_local(rairs_index, unit_data):
     qs = q[:32]
     res_d = distributed_search(rairs_index, mesh, qs, nprobe=8, k=10,
                                max_scan_local=4096)
-    res_l = rairs_index.search(qs, k=10, nprobe=8, max_scan=4096)
+    res_l = rairs_index.searcher(
+        SearchParams(k=10, nprobe=8, max_scan=4096))(qs)
     gl, gd = np.asarray(res_l.ids), np.asarray(res_d.ids)
     same = 0
     for i in range(len(qs)):
@@ -21,7 +21,9 @@ def test_distributed_matches_local(rairs_index, unit_data):
         b = set(gd[i][gd[i] >= 0].tolist())
         same += len(a & b) / max(len(a | b), 1)
     assert same / len(qs) > 0.95, same / len(qs)
-    # DCO matches the local searcher exactly (same scan semantics)
-    np.testing.assert_array_equal(np.asarray(res_d.local_dco),
+    # DCO matches the local searcher exactly (same scan semantics; the
+    # wrapper now returns the unified SearchResult, so the counter is
+    # ``approx_dco`` — the legacy ``local_dco`` field is gone)
+    np.testing.assert_array_equal(np.asarray(res_d.approx_dco),
                                   np.asarray(res_l.approx_dco))
     assert recall_at_k(gd, gt[:32]) > 0.8

@@ -69,8 +69,9 @@ def test_distributed_exec_modes_match(rairs_index, unit_data):
                               max_scan_local=4096, exec_mode="grouped")
     _assert_results_identical(rd_p, rd_g)
     # and the shard_map path still matches the single-host engine's DCO
+    # (the unified SearchResult replaced DistSearchResult.local_dco)
     rl = rairs_index.search(qs, k=10, nprobe=8, max_scan=4096)
-    np.testing.assert_array_equal(np.asarray(rd_g.local_dco),
+    np.testing.assert_array_equal(np.asarray(rd_g.approx_dco),
                                   np.asarray(rl.approx_dco))
 
 

@@ -1,0 +1,127 @@
+"""Persistence back-compat: golden v1/v2 bundles + the v3 sharded format.
+
+The golden fixtures (tests/data/, written by tests/data/make_golden.py
+at the version that introduced them) pin the on-disk contract: every
+later format bump — the v3 sharded manifest included — must keep
+loading them unchanged, and a load->save->load round-trip must be
+byte-for-byte stable on every array.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (INDEX_FORMAT, SearchParams, RairsIndex,
+                        SHARDED_FORMAT_VERSION, StreamingIndex, load_index,
+                        read_index_meta, save_index)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN_V1 = os.path.join(DATA, "golden_v1.npz")
+GOLDEN_V2 = os.path.join(DATA, "golden_v2.npz")
+
+_ARRAY_FIELDS = ("centroids", "vectors", "assigns", "codes")
+_SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
+                "refs", "refs_other", "misc")
+
+
+def _base(index):
+    return index.base if isinstance(index, StreamingIndex) else index
+
+
+def assert_indexes_equal(a, b):
+    """Every persisted array bitwise identical, config/stats equal."""
+    ab, bb = _base(a), _base(b)
+    assert ab.config == bb.config
+    assert ab.stats == bb.stats
+    for f in _ARRAY_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(ab, f)),
+                                      np.asarray(getattr(bb, f)), err_msg=f)
+    np.testing.assert_array_equal(
+        np.asarray(ab.codebook.codebooks), np.asarray(bb.codebook.codebooks))
+    for f in _SEIL_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(ab.arrays, f)),
+                                      np.asarray(getattr(bb.arrays, f)),
+                                      err_msg=f)
+    assert isinstance(a, StreamingIndex) == isinstance(b, StreamingIndex)
+    if isinstance(a, StreamingIndex):
+        assert (a.epoch, a.version) == (b.epoch, b.version)
+        assert a.stream_config == b.stream_config
+        np.testing.assert_array_equal(a.live_mask(), b.live_mask())
+        da, db = a._delta, b._delta
+        assert da.count == db.count
+        for f in ("vectors", "codes", "assigns", "live"):
+            np.testing.assert_array_equal(
+                getattr(da, f)[:da.count], getattr(db, f)[:db.count],
+                err_msg=f"delta.{f}")
+
+
+def test_golden_v1_loads_unchanged():
+    meta = read_index_meta(GOLDEN_V1)
+    assert meta["format"] == INDEX_FORMAT
+    assert meta["format_version"] == 1
+    assert "streaming" not in meta
+    idx = load_index(GOLDEN_V1)
+    assert isinstance(idx, RairsIndex) and not isinstance(idx, StreamingIndex)
+    assert idx.vectors.shape == (96, 8)
+    # the frozen bundle still serves through sessions
+    res = idx.searcher(SearchParams(k=5, nprobe=2))(np.asarray(idx.vectors)[:4])
+    assert np.array_equal(np.asarray(res.ids)[:, 0], np.arange(4))
+
+
+def test_golden_v2_loads_unchanged():
+    meta = read_index_meta(GOLDEN_V2)
+    assert meta["format_version"] == 2
+    assert meta["streaming"]["delta_count"] == 12
+    stream = load_index(GOLDEN_V2)
+    assert isinstance(stream, StreamingIndex)
+    assert stream.n_base == 96 and stream.n_total == 108
+    assert stream.n_dead == 6          # 3 delta + 3 base tombstones
+    assert not stream.live_mask()[[2, 7, 11, 96, 97, 98]].any()
+    # mutations resume from the restored state
+    assert stream.delete([0]) == 1
+
+
+@pytest.mark.parametrize("golden", [GOLDEN_V1, GOLDEN_V2],
+                         ids=["v1", "v2"])
+def test_golden_round_trips_byte_for_byte(golden, tmp_path):
+    first = load_index(golden)
+    resaved = tmp_path / "resaved.npz"
+    save_index(first, resaved)
+    second = load_index(resaved)
+    assert_indexes_equal(first, second)
+
+
+@pytest.mark.parametrize("golden", [GOLDEN_V1, GOLDEN_V2],
+                         ids=["v1", "v2"])
+@pytest.mark.parametrize("shards", [1, 3])
+def test_golden_through_v3_sharded(golden, shards, tmp_path):
+    """Old bundles round-trip through the v3 sharded layout unchanged,
+    for any shard count (file sharding is independent of the mesh)."""
+    first = load_index(golden)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=shards)
+    meta = read_index_meta(out)
+    assert meta["format_version"] == SHARDED_FORMAT_VERSION
+    assert meta["shards"] == shards
+    second = load_index(out)
+    assert_indexes_equal(first, second)
+
+
+def test_v3_rejects_unknown_version(tmp_path):
+    import json
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    mpath = out / "MANIFEST.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format_version"] = 99
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="format_version"):
+        load_index(out)
+
+
+def test_fixtures_match_generator_shape():
+    """Guard against silently-regenerated fixtures drifting in shape."""
+    assert os.path.getsize(GOLDEN_V1) < 64 * 1024
+    assert os.path.getsize(GOLDEN_V2) < 64 * 1024

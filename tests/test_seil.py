@@ -108,7 +108,9 @@ def test_delete_ids(rairs_index):
     arrays = rairs_index.arrays
     id_map = build_id_map(arrays)
     victims = [0, 1, 2, 3, 4]
-    arrays2 = delete_ids(arrays, id_map, victims)
+    # layout-only helper: deprecated in favour of StreamingIndex.delete
+    with pytest.warns(DeprecationWarning, match="StreamingIndex.delete"):
+        arrays2 = delete_ids(arrays, id_map, victims)
     ids2 = np.asarray(arrays2.block_ids)
     for v in victims:
         assert not (ids2 == v).any()

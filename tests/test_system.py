@@ -60,7 +60,8 @@ def test_delete_then_search_excludes(unit_data, rairs_index):
     r = rairs_index.search(probe, k=1, nprobe=16)
     assert int(np.asarray(r.ids)[0, 0]) == 42
     id_map = build_id_map(rairs_index.arrays)
-    arrays2 = delete_ids(rairs_index.arrays, id_map, [42])
+    with pytest.warns(DeprecationWarning, match="StreamingIndex.delete"):
+        arrays2 = delete_ids(rairs_index.arrays, id_map, [42])
     idx2 = dataclasses.replace(rairs_index, arrays=arrays2)
     r2 = idx2.search(probe, k=1, nprobe=16)
     assert int(np.asarray(r2.ids)[0, 0]) != 42
