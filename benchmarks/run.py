@@ -33,9 +33,27 @@ STREAM_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_stream.json")
 DIST_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_dist.json")
+PLAN_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_plan.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
 DIST_JSON_SCHEMA_VERSION = 1
+PLAN_JSON_SCHEMA_VERSION = 1
+
+
+def _write_summary_json(label: str, schema_version: int, body: dict,
+                        dataset: str, path: str) -> None:
+    """Shared writer for every committed BENCH_*.json (one format:
+    schema_version + dataset + bench body, trailing newline)."""
+    payload = {
+        "schema_version": schema_version,
+        "dataset": dataset,
+        **body,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    sys.stderr.write(f"[{label} json -> {os.path.abspath(path)}]\n")
 
 
 def write_bench_json(engine_out: dict, dataset: str, path: str) -> None:
@@ -51,46 +69,34 @@ def write_bench_json(engine_out: dict, dataset: str, path: str) -> None:
                 "qps": row["qps"],
                 "dco": row["dco"],
             })
-    payload = {
-        "schema_version": BENCH_JSON_SCHEMA_VERSION,
-        "dataset": dataset,
+    _write_summary_json("bench", BENCH_JSON_SCHEMA_VERSION, {
         "id_mismatch_points": engine_out.get("id_mismatch_points"),
         "searcher": engine_out.get("searcher", {}),
         "configs": configs,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    sys.stderr.write(f"[bench json -> {os.path.abspath(path)}]\n")
+    }, dataset, path)
 
 
 def write_stream_json(stream_out: dict, dataset: str, path: str) -> None:
     """Persist the streaming bench (append/compact/churn) summary."""
-    payload = {
-        "schema_version": STREAM_JSON_SCHEMA_VERSION,
-        "dataset": dataset,
-        **stream_out,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    sys.stderr.write(f"[stream json -> {os.path.abspath(path)}]\n")
+    _write_summary_json("stream", STREAM_JSON_SCHEMA_VERSION, stream_out,
+                        dataset, path)
 
 
 def write_dist_json(dist_out: dict, dataset: str, path: str) -> None:
     """Persist the distributed scaling bench summary."""
     import jax
-    payload = {
-        "schema_version": DIST_JSON_SCHEMA_VERSION,
-        "dataset": dataset,
+    _write_summary_json("dist", DIST_JSON_SCHEMA_VERSION, {
         "devices_available": len(jax.devices()),
         "platform": jax.devices()[0].platform,
         **dist_out,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    sys.stderr.write(f"[dist json -> {os.path.abspath(path)}]\n")
+    }, dataset, path)
+
+
+def write_plan_json(plan_out: dict, dataset: str, path: str) -> None:
+    """Persist the locality-aware planning bench (union sizes, plan-cache
+    hit rates, clustered-vs-paged QPS, delta-routing cost)."""
+    _write_summary_json("plan", PLAN_JSON_SCHEMA_VERSION, plan_out,
+                        dataset, path)
 
 
 def main() -> None:
@@ -105,6 +111,9 @@ def main() -> None:
                          "summary ('' disables)")
     ap.add_argument("--dist-json", type=str, default=DIST_JSON_DEFAULT,
                     help="where the distributed bench writes its machine-"
+                         "readable summary ('' disables)")
+    ap.add_argument("--plan-json", type=str, default=PLAN_JSON_DEFAULT,
+                    help="where the planning bench writes its machine-"
                          "readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
@@ -126,6 +135,8 @@ def main() -> None:
                 write_stream_json(out, args.bench_dataset, args.stream_json)
             if name == "dist" and args.dist_json:
                 write_dist_json(out, args.bench_dataset, args.dist_json)
+            if name == "plan" and args.plan_json:
+                write_plan_json(out, args.bench_dataset, args.plan_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -162,6 +173,7 @@ def _bench_list(args):
         ("engine_modes",
          lambda: suite.bench_exec_modes(dataset=args.bench_dataset)),
         ("stream", lambda: suite.bench_stream(dataset=args.bench_dataset)),
+        ("plan", lambda: suite.bench_plan(dataset=args.bench_dataset)),
         ("dist", lambda: suite.bench_dist(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]

@@ -10,13 +10,15 @@ from .assign import (rair_assign, rair_assign_multi, single_assign,  # noqa
                      available_strategies)
 from .engine import (EXEC_MODES, BlockStore, ListSelection, ListTables,  # noqa
                      QueryPlan, ScanOut, plan_blocks, scan_blocks,
-                     select_lists, finalize_candidates)
+                     select_lists, finalize_candidates, cluster_order,
+                     tile_signatures, tile_unions, union_dims, union_live,
+                     merge_unions_host)
 from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
 from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION,  # noqa
                  SHARDED_FORMAT_VERSION, load_index, read_index_meta,
                  save_index)
 from .params import MAX_AUTO_BUCKET, SearchParams  # noqa
-from .searcher import Searcher, SearcherStats  # noqa
+from .searcher import PlanStats, Searcher, SearcherStats  # noqa
 from .sharded import ShardedIndex, ShardedSearcher, shard_index  # noqa
 from .distributed import build_serve_step, distributed_search  # noqa
 from .stream import (StaleSessionError, StreamConfig, StreamingIndex,  # noqa

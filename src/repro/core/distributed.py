@@ -88,8 +88,13 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
         lut = pq_lut(cb, queries) if metric == "l2" else pq_lut_ip(cb, queries)
         store = BlockStore(block_codes=block_codes, block_ids=block_ids,
                            block_other=block_other)
+        # sel feeds the clustered exec mode: the cluster order is derived
+        # from the replicated selection, so every device permutes its
+        # (locally windowed) plan identically — per-device plans ride the
+        # same clustering with their own per-tile local unions
         scan = scan_blocks(store, plan, lut, selection.rank_of,
-                           exec_mode=exec_mode, query_tile=query_tile)
+                           exec_mode=exec_mode, query_tile=query_tile,
+                           sel=selection.sel)
         flat_d, flat_i = scan.flat_d, scan.flat_i
         approx_dco = scan.approx_dco
 

@@ -12,10 +12,13 @@ shard_map serve step behind ``core/sharded.py``) are thin compositions
 of these stages; they differ only in which ``BlockStore`` they scan and
 in the plan's block-range window.
 """
+from .cluster import (cluster_order, fit_tile, merge_unions_host,  # noqa: F401
+                      plan_width, tile_signatures, tile_unions, union_dims,
+                      union_live)
 from .finalize import finalize_candidates, preselect_candidates  # noqa: F401
 from .plan import compact_plan, gather_candidates, plan_blocks  # noqa: F401
 from .scan import EXEC_MODES, batch_union, scan_blocks  # noqa: F401
 from .select import rank_table, select_lists  # noqa: F401
 from .types import (BIG, BlockStore, ListSelection, ListTables,  # noqa: F401
-                    QueryPlan, ScanOut, store_from_arrays,
+                    PlanProbe, QueryPlan, ScanOut, store_from_arrays,
                     tables_from_arrays)

@@ -1,0 +1,191 @@
+"""Query-tile clustering + tile unions — the locality-aware planner core.
+
+The paper's §5.3 throughput win comes from fetching each shared cell
+once and scoring it for many queries while resident.  The batch-union
+form (``exec_mode="grouped"``) realizes that over the *whole* batch:
+one stray query inflates every tile's union, and the B x U redundant
+compute eats the win (DESIGN.md §5 cost model).  This module shrinks
+the union toward each tile's own working set:
+
+* ``cluster_order`` buckets the batch by probed-list overlap — a greedy
+  prefix clustering of the ranked probe signature (queries sharing the
+  longest ranked-probe prefix are co-tiled), implemented as a stable
+  lexicographic sort over the first ``CLUSTER_DEPTH`` probe ranks so it
+  is jittable and deterministic: equal signatures keep their original
+  batch order, which makes the permutation reproducible across runs and
+  replicas (the shard_map serve step runs it replicated).
+* ``tile_unions`` builds one sorted, duplicate-free block union per
+  query tile (static width ``min(tile * S, TB)``), so the clustered
+  scan pays ``B x U_tile`` instead of ``B x U_batch``.
+* ``merge_unions_host`` / ``plan_width`` implement the *incremental*
+  side (host-side numpy, driven by ``Searcher``): adjacent serving
+  batches probing overlapping lists reuse the previous unions (hit),
+  extend them while they stay tight (extend), or replace them (miss) —
+  and the scan executable is dispatched at the smallest geometric width
+  bucket covering the live entries, so steady-state skewed traffic
+  scans tight unions instead of the worst-case static width.
+* ``tile_signatures`` names each tile by *what it probes* (its leading
+  probed list + run index) instead of its position in the batch, so the
+  plan cache survives tile-boundary shifts: when the popularity mix
+  moves a hot query group from tile 3 to tile 4 between batches, the
+  group still finds the union cached under its own hot list.
+
+Correctness invariant (asserted in tests/test_plan.py): every valid
+planned block of a query is contained in its tile's union, so the
+sorted-union ``searchsorted`` scatter recovers exactly the paged
+distances — clustering, reuse, and width bucketing never change
+results, only the access schedule.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .types import BIG
+
+# probe ranks participating in the cluster signature: deep enough to
+# separate working sets, shallow enough to keep the sort key tiny
+CLUSTER_DEPTH = 4
+
+# incremental-plan cache tightness: a cached union may outgrow the
+# batch's own working set by at most this factor (x own live entries)
+# before it is rebuilt — unbounded extension would creep the scanned
+# width toward the static worst case and forfeit the clustering win
+EXTEND_SLACK = 2.0
+_MIN_UNION = 32
+
+
+def fit_tile(b: int, query_tile: int) -> int:
+    """Largest tile size <= query_tile that divides the batch."""
+    qt = max(1, min(query_tile, b))
+    while b % qt:
+        qt -= 1
+    return qt
+
+
+def union_dims(b: int, s: int, total_blocks: int, exec_mode: str,
+               query_tile: int) -> Tuple[int, int]:
+    """Static (n_tiles, width) of the union tensor for one batch shape.
+
+    grouped:   one batch-wide union, width min(B*S, TB);
+    clustered: one union per query tile, width min(tile*S, TB).
+    """
+    if exec_mode == "grouped":
+        return 1, min(b * s, total_blocks)
+    qt = fit_tile(b, query_tile)
+    return b // qt, min(qt * s, total_blocks)
+
+
+def cluster_order(sel: jnp.ndarray) -> jnp.ndarray:
+    """Stable locality permutation of the batch from its probe signature.
+
+    sel (B, P) ranked probed lists -> perm (B,) such that queries with
+    equal probe-rank prefixes are adjacent (greedy prefix clustering).
+    Stable: ties keep original batch order.  Jittable (one lexsort).
+    """
+    depth = min(CLUSTER_DEPTH, sel.shape[1])
+    # jnp.lexsort is stable; last key is primary -> rank-0 list dominates
+    return jnp.lexsort(tuple(sel[:, d] for d in reversed(range(depth)))
+                       ).astype(jnp.int32)
+
+
+def tile_unions(blocks: jnp.ndarray, valid: jnp.ndarray, n_tiles: int,
+                width: int) -> jnp.ndarray:
+    """Per-tile sorted unions of valid planned blocks.
+
+    blocks/valid (B, S) (already in cluster order) -> (n_tiles, width)
+    ascending unique block ids, BIG-padded.  ``width`` must be
+    >= min(tile*S, TB) so no valid block can be dropped.
+    """
+    b, s = blocks.shape
+    allb = jnp.where(valid, blocks, BIG).reshape(n_tiles, (b // n_tiles) * s)
+    srt = jnp.sort(allb, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((n_tiles, 1), bool), srt[:, 1:] != srt[:, :-1]], axis=1)
+    uniq = jnp.where(first & (srt < BIG), srt, BIG)
+    return jnp.sort(uniq, axis=1)[:, :width]
+
+
+def union_live(unions: np.ndarray) -> np.ndarray:
+    """(T, W) BIG-padded unions -> (T,) live entry counts (host or jnp)."""
+    return (unions < int(BIG)).sum(axis=1)
+
+
+def plan_width(live_max: int, width_cap: int) -> int:
+    """Smallest width bucket covering ``live_max`` entries (the scan
+    executable's dispatch width), capped at the static worst case.
+    Buckets grow geometrically by 1.5x: fine enough that the scanned
+    width tracks the traffic's working set (a power-of-two ladder can
+    overshoot by 2x, which is the whole clustering margin), coarse
+    enough that the executable set stays small and bounded."""
+    w = _MIN_UNION
+    while w < live_max:
+        w = w * 3 // 2
+    return min(w, width_cap)
+
+
+def tile_signatures(lead_lists: np.ndarray) -> list:
+    """Stable identity keys for a batch's tiles, from the rank-0 probed
+    list of each tile's first query (in cluster order).
+
+    A tile is named ``(lead list, run index)`` — the run index separates
+    consecutive tiles anchored on the same hot list.  Position-keyed
+    caches die the moment popularity drift moves a tile boundary; these
+    keys follow the working set instead (``Searcher`` keys its plan
+    cache with them).
+    """
+    sig = []
+    run = 0
+    for i, lst in enumerate(np.asarray(lead_lists).tolist()):
+        run = run + 1 if i and lst == sig[-1][0] else 0
+        sig.append((lst, run))
+    return sig
+
+
+def merge_unions_host(cached: Optional[np.ndarray], own: np.ndarray,
+                      present: Optional[np.ndarray] = None
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Incremental-plan merge (host-side numpy, per dispatch bucket).
+
+    cached/own: (T, W) sorted BIG-padded unions.  Per tile:
+      * hit    — own ⊆ cached and the cache is still *tight* (within
+        ``EXTEND_SLACK`` x this batch's own working set): reuse it;
+      * extend — merged live entries fit both the width and the
+        tightness bound: the cache grows;
+      * miss   — cold cache, width overflow, or a cache that bloated
+        past the tightness bound: replace with this batch's own union.
+    ``present`` masks rows that actually had a cached union (signature-
+    keyed callers align a ragged cache into (T, W) with BIG-filled rows
+    for first-seen tiles; those must classify as misses, not extends).
+    The tightness bound is what keeps the scanned width tracking the
+    traffic instead of creeping toward the static worst case under
+    drift.  Returns ``(used, hit, extend)`` with used (T, W) the unions
+    to scan *and* cache; every path keeps own ⊆ used, the correctness
+    invariant.
+    """
+    t, w = own.shape
+    big = int(BIG)
+    if cached is None:
+        return own, np.zeros(t, bool), np.zeros(t, bool)
+    cat = np.concatenate([cached, own], axis=1)
+    srt = np.sort(cat, axis=1)
+    keep = srt < big
+    keep[:, 1:] &= srt[:, 1:] != srt[:, :-1]
+    live_merged = keep.sum(axis=1)
+    tight = live_merged <= np.maximum(
+        (union_live(own) * EXTEND_SLACK).astype(np.int64), _MIN_UNION)
+    hit = (live_merged == union_live(cached)) & tight  # own added nothing
+    fits = (live_merged <= w) & tight
+    if present is not None:
+        hit &= present
+        fits &= present
+    merged = np.full((t, w), big, srt.dtype)
+    rows = np.nonzero(keep)[0]
+    cols = (np.cumsum(keep, axis=1) - 1)[keep]
+    sel = cols < w                                    # overflow rows ignored
+    merged[rows[sel], cols[sel]] = srt[keep][sel]
+    used = np.where(hit[:, None], cached,
+                    np.where(fits[:, None], merged, own))
+    return used, hit, fits & ~hit

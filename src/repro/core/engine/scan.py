@@ -17,10 +17,25 @@
               sum_q |plan_q| block fetches to |union_batch| * ceil(B/QT);
               logical DCO accounting is unchanged by construction.
 
-The union budget is ``min(B*S, TB)`` — an upper bound on the number of
-distinct planned blocks — so grouped mode can never drop a block the
-paged plan would scan: results are bitwise identical (asserted in
-tests/test_engine.py).
+``clustered``: the locality-aware refinement of grouped (engine/
+              cluster.py).  Queries are permuted into probe-overlap
+              order (stable signature sort), the union is built *per
+              query tile* instead of per batch, each tile scans only
+              its own working set (kernel: ``pq_scan_tiled``), and the
+              per-query distances are scattered back through the same
+              sorted-union ``searchsorted`` and un-permuted.  The
+              redundant-compute term shrinks from B x U_batch to
+              B x U_tile; on skewed traffic U_tile -> |plan_q| and the
+              mode matches paged compute while keeping grouped's
+              amortized fetches.  Callers holding incremental plans
+              (core/searcher.py) pass ``perm``/``unions`` explicitly —
+              possibly width-bucketed and extended with a previous
+              batch's unions — otherwise both are derived here.
+
+The union budget is ``min(B*S, TB)`` (``min(tile*S, TB)`` per clustered
+tile) — an upper bound on the number of distinct planned blocks — so
+neither mode can drop a block the paged plan would scan: results are
+bitwise identical (asserted in tests/test_engine.py, tests/test_plan.py).
 
 Item-level masks (shared by both modes): invalid slots, and misc items
 whose co-assigned list was scanned at an earlier rank (their cell was
@@ -32,9 +47,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .cluster import cluster_order, fit_tile, tile_unions, union_dims
 from .types import BIG, BlockStore, QueryPlan, ScanOut
 
-EXEC_MODES = ("paged", "grouped")
+EXEC_MODES = ("paged", "grouped", "clustered")
 
 
 def _adc_gather(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
@@ -45,24 +61,17 @@ def _adc_gather(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(g[..., 0], axis=-1)
 
 
-def _fit_query_tile(b: int, query_tile: int) -> int:
-    qt = max(1, min(query_tile, b))
-    while b % qt:
-        qt -= 1
-    return qt
+_fit_query_tile = fit_tile    # back-compat alias (kernel tiling helper)
 
 
 def batch_union(plan: QueryPlan, total_blocks: int) -> jnp.ndarray:
     """Sorted union of all valid planned block ids across the batch,
-    padded with BIG.  Static width min(B*S, TB) >= |union| always."""
+    padded with BIG.  Static width min(B*S, TB) >= |union| always.
+    The one-tile case of ``tile_unions`` — shared so the monolithic
+    grouped scan and the plan_reuse probe half can never diverge."""
     b, s = plan.blocks.shape
     u = min(b * s, total_blocks)
-    allb = jnp.where(plan.valid, plan.blocks, BIG).reshape(-1)
-    srt = jnp.sort(allb)
-    first = jnp.concatenate(
-        [jnp.ones((1,), bool), srt[1:] != srt[:-1]])
-    uniq = jnp.where(first & (srt < BIG), srt, BIG)
-    return jnp.sort(uniq)[:u]                      # ascending unique + pad
+    return tile_unions(plan.blocks, plan.valid, 1, u)[0]
 
 
 def _scan_paged(store: BlockStore, plan: QueryPlan, lut, use_kernel: bool):
@@ -74,13 +83,14 @@ def _scan_paged(store: BlockStore, plan: QueryPlan, lut, use_kernel: bool):
 
 
 def _scan_grouped(store: BlockStore, plan: QueryPlan, lut,
-                  use_kernel: bool, query_tile: int):
+                  use_kernel: bool, query_tile: int, union=None):
     b, s = plan.blocks.shape
-    union = batch_union(plan, store.block_codes.shape[0])   # (U,)
+    if union is None:
+        union = batch_union(plan, store.block_codes.shape[0])   # (U,)
     safe_union = jnp.where(union < BIG, union, 0)
     if use_kernel:
         from ...kernels.ops import pq_scan_grouped
-        qt = _fit_query_tile(b, query_tile)
+        qt = fit_tile(b, query_tile)
         dists_u = pq_scan_grouped(lut, store.block_codes, safe_union,
                                   query_tile=qt)            # (B, U, BLK)
     else:
@@ -94,17 +104,61 @@ def _scan_grouped(store: BlockStore, plan: QueryPlan, lut,
     return jnp.take_along_axis(dists_u, pos[:, :, None], axis=1)
 
 
+def _scan_clustered(store: BlockStore, plan: QueryPlan, lut,
+                    use_kernel: bool, query_tile: int, sel=None,
+                    perm=None, unions=None):
+    """Per-tile-union scan in cluster order; returns (B, S, BLK) dists
+    in the *original* batch order — byte-for-byte the paged values."""
+    b, s = plan.blocks.shape
+    if perm is None:
+        perm = cluster_order(sel)
+    pb = plan.blocks[perm]                                  # (B, S)
+    if unions is None:
+        t, w = union_dims(b, s, store.block_codes.shape[0], "clustered",
+                          query_tile)
+        unions = tile_unions(pb, plan.valid[perm], t, w)    # (T, W)
+    t, w = unions.shape
+    qt = b // t
+    safe_u = jnp.where(unions < BIG, unions, 0)
+    lut_p = lut[perm]
+    if use_kernel:
+        from ...kernels.ops import pq_scan_tiled
+        d_u = pq_scan_tiled(lut_p, store.block_codes, safe_u,
+                            query_tile=qt)                  # (B, W, BLK)
+    else:
+        codes_u = store.block_codes[safe_u]                 # (T, W, BLK, M)
+        m, k = lut.shape[1], lut.shape[2]
+        g = jnp.take_along_axis(
+            lut_p.reshape(t, qt, 1, 1, m, k),
+            codes_u[:, None].astype(jnp.int32)[..., None], axis=-1)
+        d_u = jnp.sum(g[..., 0], axis=-1).reshape(b, w, -1)  # (B, W, BLK)
+    # per-tile sorted-union scatter: exact positions, then un-permute
+    pos = jax.vmap(jnp.searchsorted)(unions, pb.reshape(t, qt * s))
+    pos = jnp.minimum(pos.reshape(b, s), w - 1)
+    dists_p = jnp.take_along_axis(d_u, pos[:, :, None], axis=1)
+    return dists_p[jnp.argsort(perm)]
+
+
 def scan_blocks(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
                 rank_of: jnp.ndarray, *, exec_mode: str = "paged",
-                use_kernel: bool = False, query_tile: int = 8) -> ScanOut:
+                use_kernel: bool = False, query_tile: int = 8,
+                sel=None, perm=None, unions=None) -> ScanOut:
     """ADC distances + item masks + DCO for the planned blocks.
 
     lut: (B, M, K) per-query subspace tables; rank_of: (B, nlist).
+    ``sel`` (the stage-1 ranked probed lists) is required by
+    ``exec_mode="clustered"`` unless ``perm``/``unions`` are provided by
+    a caller holding incremental plans (core/searcher.py); ``unions``
+    alone also overrides the batch union of ``"grouped"`` ((1, U) row).
     """
     assert exec_mode in EXEC_MODES, exec_mode
     bq = plan.blocks.shape[0]
     if exec_mode == "grouped":
-        dists = _scan_grouped(store, plan, lut, use_kernel, query_tile)
+        dists = _scan_grouped(store, plan, lut, use_kernel, query_tile,
+                              union=None if unions is None else unions[0])
+    elif exec_mode == "clustered":
+        dists = _scan_clustered(store, plan, lut, use_kernel, query_tile,
+                                sel=sel, perm=perm, unions=unions)
     else:
         dists = _scan_paged(store, plan, lut, use_kernel)
 

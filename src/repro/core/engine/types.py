@@ -54,6 +54,18 @@ class QueryPlan(NamedTuple):
     dropped: jnp.ndarray   # (B,) int32 candidates lost to the budget
 
 
+class PlanProbe(NamedTuple):
+    """Probe-half output of the split pipeline (incremental plans,
+    core/searcher.py): everything the scan+finalize executable consumes,
+    plus this batch's own tile unions for the host-side plan cache."""
+    sel: jnp.ndarray       # (B, P) int32 ranked probed lists
+    rank_of: jnp.ndarray   # (B, nlist) int32 probe ranks
+    lut: jnp.ndarray       # (B, M, K) f32 per-query ADC tables
+    plan: "QueryPlan"
+    perm: jnp.ndarray      # (B,) int32 cluster order (identity for grouped)
+    unions: jnp.ndarray    # (T, W) int32 sorted tile unions, BIG pad
+
+
 class ScanOut(NamedTuple):
     """Stage-3 output: flat per-item candidate distances (inf = masked)."""
     flat_d: jnp.ndarray          # (B, S*BLK) f32

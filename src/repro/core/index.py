@@ -56,6 +56,14 @@ class IndexConfig:
     kmeans_iters: int = 15
     pq_iters: int = 12
     train_sample: int = 131072
+    # streaming: delta capacity above which the delta scan routes through
+    # the probed lists instead of scanning exhaustively (DESIGN.md §8).
+    # None -> auto: nlist * block (where exhaustive costs one block per
+    # list), plus a per-session cost guard (StreamingIndex.routes_at)
+    # that keeps the exhaustive path when a skewed delta makes routing
+    # dearer; an explicit value (0 forces routing from the first
+    # insert) is final.
+    delta_route_min: Optional[int] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGY_REGISTRY:
@@ -82,6 +90,10 @@ class IndexConfig:
             raise ValueError(f"m_pq must be >= 1 or None, got {self.m_pq}")
         if self.lam < 0:
             raise ValueError(f"lam must be >= 0, got {self.lam}")
+        if self.delta_route_min is not None and self.delta_route_min < 0:
+            raise ValueError(
+                f"delta_route_min must be >= 0 or None (auto), got "
+                f"{self.delta_route_min}")
 
 
 @dataclasses.dataclass

@@ -37,8 +37,19 @@ class SearchParams:
     k_factor     refinement oversampling: bigK = k * k_factor
     max_scan     static per-query block budget (None -> index default)
     exec_mode    "paged" (per-query) | "grouped" (§5.3 list-major batch)
+                 | "clustered" (grouped with query-tile clustering:
+                 per-tile block unions in probe-overlap order)
     use_kernel   route the ADC scan through the Pallas kernel
-    query_tile   grouped-mode query tile (VMEM residency per fetch)
+    query_tile   grouped/clustered query tile (VMEM residency per fetch;
+                 the clustered union granularity)
+    plan_reuse   incremental plans (grouped/clustered only): the session
+                 splits each dispatch into probe -> plan-cache merge ->
+                 scan, reusing/extending the previous batch's block
+                 unions when adjacent batches probe overlapping lists,
+                 and scanning at the smallest geometric width bucket
+                 covering the live entries.  Results stay bitwise
+                 identical; ``compile_stats()['plan']`` exposes
+                 hit/extend/miss counters and union sizes.
     batch_buckets  optional ascending pad-and-dispatch bucket sizes;
                  None -> powers of two up to MAX_AUTO_BUCKET
     """
@@ -49,6 +60,7 @@ class SearchParams:
     exec_mode: str = "paged"
     use_kernel: bool = False
     query_tile: int = 8
+    plan_reuse: bool = False
     batch_buckets: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
@@ -65,6 +77,10 @@ class SearchParams:
                 f"exec_mode must be one of {EXEC_MODES}, got {self.exec_mode!r}")
         if self.query_tile < 1:
             raise ValueError(f"query_tile must be >= 1, got {self.query_tile}")
+        if self.plan_reuse and self.exec_mode == "paged":
+            raise ValueError(
+                "plan_reuse needs a union-based exec_mode ('grouped' or "
+                "'clustered'); paged scans have no batch union to reuse")
         if self.batch_buckets is not None:
             bb = tuple(int(b) for b in self.batch_buckets)
             if not bb or any(b < 1 for b in bb) or list(bb) != sorted(set(bb)):

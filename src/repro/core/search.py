@@ -38,8 +38,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .engine import (finalize_candidates, plan_blocks, scan_blocks,
-                     select_lists, store_from_arrays, tables_from_arrays)
+from .engine import (PlanProbe, cluster_order, finalize_candidates,
+                     plan_blocks, scan_blocks, select_lists,
+                     store_from_arrays, tables_from_arrays, tile_unions,
+                     union_dims)
 from .pq import PQCodebook, pq_lut, pq_lut_ip
 from .seil import SeilArrays
 
@@ -83,7 +85,8 @@ def seil_search(
            else pq_lut_ip(codebook, queries))                # (B, M, 16)
     scan = scan_blocks(store_from_arrays(arrays), plan, lut,
                        selection.rank_of, exec_mode=exec_mode,
-                       use_kernel=use_kernel, query_tile=query_tile)
+                       use_kernel=use_kernel, query_tile=query_tile,
+                       sel=selection.sel)
     out_ids, out_d, refine_dco = finalize_candidates(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,
@@ -92,3 +95,85 @@ def seil_search(
         ids=out_ids, dists=out_d, approx_dco=scan.approx_dco,
         refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,
         dropped_blocks=plan.dropped)
+
+
+# ---------------------------------------------------------------------------
+# split pipeline — the incremental planner's two halves (DESIGN.md §5).
+#
+# With ``SearchParams(plan_reuse=True)`` a Searcher session dispatches
+# each batch as probe -> host plan-cache merge -> scan: ``probe_plan``
+# runs stages 1-2 plus union construction, the session merges this
+# batch's tile unions with its cached ones (engine/cluster.py) and picks
+# the smallest geometric width bucket covering the live entries, and
+# ``scan_finalize`` runs stages 3-4 against the provided unions.  Both
+# halves together perform exactly the stages of ``seil_search`` once, so
+# results stay bitwise identical (tests/test_plan.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nprobe", "max_scan", "metric", "exec_mode",
+                     "query_tile"))
+def probe_plan(
+    arrays: SeilArrays,
+    centroids: jnp.ndarray,
+    codebook: PQCodebook,
+    queries: jnp.ndarray,
+    *,
+    nprobe: int,
+    max_scan: int,
+    metric: str = "l2",
+    exec_mode: str = "grouped",
+    query_tile: int = 8,
+) -> PlanProbe:
+    """Stages 1-2 + cluster order + this batch's own tile unions."""
+    b = queries.shape[0]
+    selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
+    plan = plan_blocks(tables_from_arrays(arrays), selection,
+                       max_scan=max_scan)
+    lut = (pq_lut(codebook, queries) if metric == "l2"
+           else pq_lut_ip(codebook, queries))
+    if exec_mode == "clustered":
+        perm = cluster_order(selection.sel)
+    else:
+        perm = jnp.arange(b, dtype=jnp.int32)
+    t, w = union_dims(b, plan.blocks.shape[1],
+                      arrays.block_codes.shape[0], exec_mode, query_tile)
+    unions = tile_unions(plan.blocks[perm], plan.valid[perm], t, w)
+    return PlanProbe(sel=selection.sel, rank_of=selection.rank_of, lut=lut,
+                     plan=plan, perm=perm, unions=unions)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bigk", "k", "metric", "dedup_results", "use_kernel",
+                     "oversample", "exec_mode", "query_tile"))
+def scan_finalize(
+    arrays: SeilArrays,
+    vectors: jnp.ndarray,
+    queries: jnp.ndarray,
+    probe: PlanProbe,
+    unions: jnp.ndarray,          # (T, W') width-bucketed unions to scan
+    *,
+    bigk: int,
+    k: int,
+    metric: str = "l2",
+    dedup_results: bool = True,
+    use_kernel: bool = False,
+    oversample: int = 2,
+    exec_mode: str = "grouped",
+    query_tile: int = 8,
+) -> SearchResult:
+    """Stages 3-4 against caller-provided (possibly reused) unions."""
+    scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
+                       probe.rank_of, exec_mode=exec_mode,
+                       use_kernel=use_kernel, query_tile=query_tile,
+                       perm=probe.perm, unions=unions)
+    out_ids, out_d, refine_dco = finalize_candidates(
+        scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
+        queries=queries, metric=metric, dedup_results=dedup_results,
+        oversample=oversample)
+    return SearchResult(
+        ids=out_ids, dists=out_d, approx_dco=scan.approx_dco,
+        refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,
+        dropped_blocks=probe.plan.dropped)

@@ -24,14 +24,18 @@ once the owning ``StreamingIndex`` has mutated past the session.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from .engine import (BIG, merge_unions_host, plan_width, tile_signatures,
+                     union_live)
 from .params import SearchParams
-from .search import SearchResult, seil_search
+from .search import SearchResult, probe_plan, scan_finalize, seil_search
 
 
 @dataclasses.dataclass
@@ -40,11 +44,41 @@ class SearcherStats:
     compiles: int = 0        # executables built (one per bucket)
     calls: int = 0           # searcher invocations
     dispatches: int = 0      # chunk dispatches (>= calls)
-    cache_hits: int = 0      # dispatches served by an existing executable
+    cache_hits: int = 0      # executable fetches served from the cache
+                             # (plan_reuse chunks fetch two: probe + scan)
     padded_rows: int = 0     # total pad rows added across dispatches
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Incremental-plan accounting (``SearchParams.plan_reuse``) — the
+    plan-cache counterpart of the compile-cache stats above.
+
+    A *tile* is one block union (the whole batch for ``grouped``, one
+    query tile for ``clustered``); every dispatched batch classifies
+    each of its tiles as hit (own union covered by the cache), extend
+    (cache grew, still fits the width) or miss (first sight / overflow,
+    cache replaced)."""
+    batches: int = 0          # probe->scan dispatches
+    tiles: int = 0            # unions processed (batches x tiles/batch)
+    hits: int = 0             # reused unchanged
+    extends: int = 0          # merged into the cache
+    misses: int = 0           # replaced (cold cache or width overflow)
+    union_live_sum: int = 0   # live entries actually scanned (per tile)
+    own_live_sum: int = 0     # live entries this batch needed (per tile)
+    width_sum: int = 0        # dispatched union-width buckets (per tile)
+
+    def summary(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        t = max(self.tiles, 1)
+        d["hit_rate"] = self.hits / t
+        d["mean_union_live"] = self.union_live_sum / t
+        d["mean_own_live"] = self.own_live_sum / t
+        d["mean_width"] = self.width_sum / t
+        return d
 
 
 class Searcher:
@@ -64,16 +98,31 @@ class Searcher:
         self.params = params.resolve(index)
         self.epoch = getattr(index, "epoch", 0)
         self.stats = SearcherStats()
-        self._compiled: Dict[int, Any] = {}
+        self.plan_stats = PlanStats()
+        self._compiled: Dict[Any, Any] = {}
+        # incremental plans (params.plan_reuse): per dispatch bucket, a
+        # signature-keyed map of cached tile unions ((list, run) ->
+        # (W,) row; engine/cluster.py tile_signatures) — keyed by what a
+        # tile probes, not where it sits, so popularity drift shifting a
+        # tile boundary does not orphan the cache.  It lives on the
+        # session, so it invalidates with it — a mutation that stales
+        # the session drops the plans too.
+        self._plan_cache: Dict[int, "collections.OrderedDict"] = {}
 
     @property
     def buckets(self):
-        """Batch-size buckets with a compiled executable, ascending."""
-        return tuple(sorted(self._compiled))
+        """Batch-size buckets with a compiled executable, ascending.
+        (With plan_reuse a bucket holds probe/scan executable pairs; the
+        probe store may live outside ``_compiled`` — core/stream/.)"""
+        keys = set(self._compiled) | set(self._probe_exe_store())
+        return tuple(sorted({k if isinstance(k, int) else k[1]
+                             for k in keys}))
 
     def compile_stats(self) -> Dict[str, Any]:
         d = self.stats.as_dict()
         d["buckets"] = list(self.buckets)
+        if self.params.plan_reuse:
+            d["plan"] = self.plan_stats.summary()
         return d
 
     # -- overridable hooks (core/stream/ swaps in the streaming pipeline) --
@@ -101,20 +150,122 @@ class Searcher:
         idx = self.index
         return (idx.arrays, idx.centroids, idx.codebook, idx.vectors)
 
-    def _executable(self, bucket: int):
-        hit = bucket in self._compiled
+    # -- incremental-plan hooks (probe -> plan-cache merge -> scan) --------
+    def _lower_probe(self, bucket: int):
+        """Lower the probe half (stages 1-2 + own unions) for one bucket."""
+        p = self.params
+        idx = self.index
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, idx.vectors.shape[1]), jnp.float32)
+        return probe_plan.lower(
+            idx.arrays, idx.centroids, idx.codebook, q_spec,
+            nprobe=p.nprobe, max_scan=p.max_scan, metric=idx.config.metric,
+            exec_mode=p.exec_mode, query_tile=p.query_tile)
+
+    def _probe_inputs(self) -> tuple:
+        idx = self.index
+        return (idx.arrays, idx.centroids, idx.codebook)
+
+    def _lower_scan(self, bucket: int, probe_spec, unions_spec):
+        """Lower the scan half (stages 3-4) at one union width."""
+        p = self.params
+        idx = self.index
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, idx.vectors.shape[1]), jnp.float32)
+        return scan_finalize.lower(
+            idx.arrays, idx.vectors, q_spec, probe_spec, unions_spec,
+            bigk=p.bigk, k=p.k, metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            use_kernel=p.use_kernel, oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile)
+
+    def _scan_inputs(self) -> tuple:
+        idx = self.index
+        return (idx.arrays, idx.vectors)
+
+    def _get_exe(self, key, lower_fn, cache=None):
+        cache = self._compiled if cache is None else cache
+        hit = key in cache
         if not hit:
-            self._compiled[bucket] = self._lower(bucket).compile()
+            cache[key] = lower_fn().compile()
             self.stats.compiles += 1
         else:
             self.stats.cache_hits += 1
+        return cache[key]
+
+    def _probe_exe_store(self) -> dict:
+        """Where plan_reuse probe executables live.  The probe half never
+        consumes mutable-segment buffers, so subclasses whose _compiled
+        dict is keyed by delta shapes (core/stream/) point this at a
+        longer-lived store to survive capacity-bucket jumps."""
+        return self._compiled
+
+    def _executable(self, bucket: int):
+        return self._get_exe(bucket, lambda: self._lower(bucket))
+
+    def _dispatch(self, bucket: int, qc: jnp.ndarray) -> SearchResult:
+        """One padded chunk through either the monolithic executable or
+        the incremental probe -> merge -> scan pipeline."""
         self.stats.dispatches += 1
-        return self._compiled[bucket]
+        if not self.params.plan_reuse:
+            return self._executable(bucket)(*self._call_inputs(), qc)
+        probe = self._get_exe(("probe", bucket),
+                              lambda: self._lower_probe(bucket),
+                              cache=self._probe_exe_store())
+        pr = probe(*self._probe_inputs(), qc)
+        own = np.asarray(pr.unions)
+        t, w = own.shape
+        if t == 1:                 # grouped: one batch-wide union
+            sigs = [(0, 0)]
+        else:                      # clustered: name tiles by working set
+            lead = np.asarray(pr.sel[:, 0])[np.asarray(pr.perm)][::bucket // t]
+            sigs = tile_signatures(lead)
+        cache = self._plan_cache.setdefault(bucket, collections.OrderedDict())
+        rows = [cache.get(s) for s in sigs]
+        present = np.array([r is not None for r in rows])
+        if present.any():
+            pad = np.full(w, int(BIG), own.dtype)
+            cached = np.stack([pad if r is None else r for r in rows])
+            used, hit, ext = merge_unions_host(cached, own, present)
+        else:
+            used, hit, ext = merge_unions_host(None, own)
+        for s, row in zip(sigs, used):
+            cache[s] = row
+            cache.move_to_end(s)
+        while len(cache) > max(64, 4 * t):     # bound drifting signatures
+            cache.popitem(last=False)
+        live = union_live(used)
+        wp = plan_width(int(live.max(initial=1)), w)
+        ps = self.plan_stats
+        ps.batches += 1
+        ps.tiles += t
+        ps.hits += int(hit.sum())
+        ps.extends += int(ext.sum())
+        ps.misses += t - int(hit.sum()) - int(ext.sum())
+        ps.union_live_sum += int(live.sum())
+        ps.own_live_sum += int(union_live(own).sum())
+        ps.width_sum += wp * t
+        unions_w = jnp.asarray(used[:, :wp])
+        probe_spec = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), pr)
+        unions_spec = jax.ShapeDtypeStruct(unions_w.shape, unions_w.dtype)
+        scan = self._get_exe(
+            ("scan", bucket, wp),
+            lambda: self._lower_scan(bucket, probe_spec, unions_spec))
+        return scan(*self._scan_inputs(), qc, pr, unions_w)
 
     def warmup(self, *batch_sizes: int) -> "Searcher":
-        """Pre-compile the buckets covering `batch_sizes` (chainable)."""
+        """Pre-compile the buckets covering `batch_sizes` (chainable).
+        With plan_reuse only the probe half pre-compiles — the scan
+        half's union width is a property of the traffic."""
         for b in batch_sizes:
-            self._executable(self.params.bucket_for(min(b, self.params.max_chunk)))
+            bucket = self.params.bucket_for(min(b, self.params.max_chunk))
+            if self.params.plan_reuse:
+                self._get_exe(("probe", bucket),
+                              lambda: self._lower_probe(bucket),
+                              cache=self._probe_exe_store())
+            else:
+                self._executable(bucket)
         return self
 
     def __call__(self, queries: jnp.ndarray) -> SearchResult:
@@ -137,8 +288,7 @@ class Searcher:
                 qc = jnp.concatenate(
                     [qc, jnp.zeros((bucket - b, q.shape[1]), q.dtype)], axis=0)
                 self.stats.padded_rows += bucket - b
-            fn = self._executable(bucket)
-            r = fn(*self._call_inputs(), qc)
+            r = self._dispatch(bucket, qc)
             if b < bucket:
                 r = jax.tree.map(lambda a: a[:b], r)
             outs.append(r)

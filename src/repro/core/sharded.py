@@ -114,6 +114,7 @@ class _Placement:
         self.base: Optional[_BasePlacement] = None
         self.base_epoch = None
         self.exec_cache: Dict[tuple, dict] = {}
+        self.budget_cache: Dict[tuple, int] = {}   # derived max_scan_local
 
 
 def shard_index(index, mesh, axes=("data",),
@@ -326,6 +327,42 @@ class ShardedIndex:
             pl.version = v
         return pl.state
 
+    def derived_max_scan_local(self, nprobe: int) -> int:
+        """Per-device plan budget from per-shard list occupancy.
+
+        For each device, every list contributes only the table entries
+        (owned/refs/misc) whose block falls inside that device's
+        block-id range; the worst query can select at most the
+        ``nprobe`` fullest such lists, so the sum of their local counts
+        is a safe upper bound on any local plan size — by construction
+        the derived budget never truncates a plan, hence is
+        recall-neutral (tests/test_plan.py).  Sessions use
+        ``min(params.max_scan, derived)`` when ``max_scan_local`` is
+        unset: strictly tighter padded scan bounds than replicating the
+        full per-query budget on every shard, and on one device
+        bitwise-identical to the plain Searcher in both regimes (either
+        the old budget applies, or nothing truncates anywhere).
+        Cached per (epoch, nprobe, ndev) on the shared placement."""
+        pl = self._placement
+        key = (self.epoch, nprobe, self.ndev)
+        if key not in pl.budget_cache:
+            base = self.index.base if self.streaming else self.index
+            arrays = base.arrays
+            nd = self.ndev
+            tb = np.asarray(arrays.block_codes).shape[0]
+            tb_l = (tb + (-tb) % nd) // nd        # padded rows per device
+            nlist = base.config.nlist
+            counts = np.zeros((nlist, nd), np.int64)
+            for tbl in (arrays.owned, arrays.refs, arrays.misc):
+                t = np.asarray(tbl)
+                rows = np.repeat(np.arange(t.shape[0]), t.shape[1])
+                blocks = t.ravel()
+                ok = blocks >= 0
+                np.add.at(counts, (rows[ok], blocks[ok] // tb_l), 1)
+            top = np.sort(counts, axis=0)[::-1][:nprobe]
+            pl.budget_cache[key] = max(int(top.sum(axis=0).max()), 1)
+        return pl.budget_cache[key]
+
     # ------------------------------------------------------------------
     # sessions
     # ------------------------------------------------------------------
@@ -347,6 +384,12 @@ class ShardedIndex:
             raise ValueError(
                 "ShardedIndex sessions run the jnp scan path inside "
                 "shard_map; use_kernel=True is not supported")
+        if params.plan_reuse:
+            raise ValueError(
+                "plan_reuse is a single-host session feature (the plan "
+                "cache merges host-side between dispatches); mesh "
+                "sessions support exec_mode='clustered' for per-device "
+                "tile unions instead")
         sess = self._sessions.get(params)
         if sess is not None and sess.version == self.version:
             return sess
@@ -404,11 +447,19 @@ class ShardedSearcher(Searcher):
         super().__init__(sharded.index, params)
         self.epoch = sharded.epoch
         self._state = state
+        # per-device plan budget: explicit max_scan_local, or derived
+        # from per-shard list occupancy (never truncates, so tighter
+        # padded bounds stay recall-neutral) capped by the per-query one
+        self.max_scan_local = (
+            sharded.max_scan_local if sharded.max_scan_local is not None
+            else min(self.params.max_scan,
+                     sharded.derived_max_scan_local(self.params.nprobe)))
         # executables depend on (params, per-device budget, shapes) only
         # — arrays are runtime args — so sibling views and later epochs
-        # with equal shapes share them
+        # with equal shapes share them (the resolved budget keys the
+        # cache: a new epoch may derive a different bound)
         self._compiled = sharded._placement.exec_cache.setdefault(
-            (self.params, sharded.max_scan_local, state.signature), {})
+            (self.params, self.max_scan_local, state.signature), {})
 
     def _check_current(self) -> None:
         sh = self.sharded
@@ -426,8 +477,7 @@ class ShardedSearcher(Searcher):
         idx = sh.index
         serve = build_serve_step(
             nprobe=p.nprobe, bigk=p.bigk, k=p.k,
-            max_scan_local=(sh.max_scan_local
-                            if sh.max_scan_local is not None else p.max_scan),
+            max_scan_local=self.max_scan_local,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             oversample=idx.result_oversample,

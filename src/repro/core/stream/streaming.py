@@ -8,7 +8,11 @@ churn.  ``StreamingIndex`` makes insert/delete first-class (DESIGN.md
   * inserts go to an append-only **delta segment** (stream/delta.py):
     assigned through the strategy registry and PQ-encoded exactly like
     the base, then scanned through a padded flat buffer that merges into
-    the shared finalize stage (stream/search.py) — no layout rebuild;
+    the shared finalize stage (stream/search.py) — no layout rebuild.
+    Small deltas scan exhaustively; once capacity outgrows
+    ``IndexConfig.delta_route_min`` (default ``nlist * block``) the scan
+    is *routed* through the probed lists via the per-list posting map
+    maintained on append (stream/search.py docstring);
   * deletes flip bits in a **tombstone mask** over the whole id space;
     dead items are masked at query time, never rewritten out;
   * **compaction** folds survivors (base minus tombstones, plus live
@@ -45,7 +49,7 @@ from ..search import SearchResult
 from ..searcher import Searcher
 from ..seil import build_seil
 from .delta import DeltaSegment
-from .search import streaming_search
+from .search import scan_finalize_stream, streaming_search
 
 
 class StaleSessionError(RuntimeError):
@@ -94,10 +98,12 @@ class StreamStats:
 @dataclasses.dataclass
 class _DeviceState:
     """Device mirrors of the mutable state, patched in O(batch) between
-    capacity-bucket jumps (which rebuild them wholesale)."""
+    capacity-bucket / posting-width jumps (which rebuild them wholesale)."""
     vectors_full: jnp.ndarray   # (n_base + cap, D) id-aligned refine store
     delta_codes: jnp.ndarray    # (cap, M) uint8
     delta_ids: jnp.ndarray      # (cap,) int32 global ids, -1 dead/unused
+    delta_post: jnp.ndarray     # (nlist, L) int32 per-list slot postings
+    delta_assigns: jnp.ndarray  # (cap, m) int32 assigned lists per slot
     live_full: jnp.ndarray      # (n_base + cap,) bool
     capacity: int
 
@@ -130,12 +136,17 @@ class StreamingIndex:
         self._delta = DeltaSegment(
             dim=int(base.vectors.shape[1]), m_pq=int(base.codebook.m),
             m_assign=int(base.assigns.shape[1]),
-            pad=self.stream_config.delta_pad)
+            pad=self.stream_config.delta_pad,
+            nlist=int(base.config.nlist))
         self._base_live = np.ones(self.n_base, bool)
         self._dead_base = 0
         self._dev: Optional[_DeviceState] = None
         self._sessions: Dict[SearchParams, "StreamingSearcher"] = {}
         self._exec_cache: Dict[tuple, dict] = {}
+        # plan_reuse probe-half executables: they consume only the base
+        # arrays, so they survive delta capacity/posting bucket jumps
+        # (keyed per params; dropped with the epoch like everything here)
+        self._probe_cache: Dict[SearchParams, dict] = {}
 
     # ------------------------------------------------------------------
     # sizes / views
@@ -166,6 +177,38 @@ class StreamingIndex:
     def has_mutations(self) -> bool:
         """Any insert/delete since the current epoch's base was built."""
         return self._delta.count > 0 or self._dead_base > 0
+
+    @property
+    def delta_route_threshold(self) -> int:
+        """Delta capacity above which the scan routes through the probed
+        lists (``IndexConfig.delta_route_min``; default ``nlist *
+        block`` — the point where the exhaustive delta costs as much per
+        query as scanning every list's worth of one block)."""
+        cfg = self.base.config
+        if cfg.delta_route_min is not None:
+            return cfg.delta_route_min
+        return cfg.nlist * cfg.block
+
+    @property
+    def delta_routed(self) -> bool:
+        """Whether the current delta capacity bucket scans routed.
+        Keyed on *capacity* (not live count) so the choice is a static
+        property of the compiled shapes."""
+        return self._delta.capacity > self.delta_route_threshold
+
+    def routes_at(self, nprobe: int) -> bool:
+        """Session-level routing decision.  An explicit
+        ``delta_route_min`` is the caller's final word; under the auto
+        threshold the routed path must also be cheaper than the scan it
+        replaces: the padded routed gather costs ~``nprobe x
+        post_width`` ADC rows per query, and a hot-list-skewed delta
+        can grow the posting width until that exceeds the exhaustive
+        ``capacity`` — then the exhaustive fast path stays in force."""
+        if not self.delta_routed:
+            return False
+        if self.base.config.delta_route_min is not None:
+            return True
+        return nprobe * self._delta.post_width < self._delta.capacity
 
     # read-side duck typing with RairsIndex --------------------------------
     @property
@@ -267,6 +310,8 @@ class StreamingIndex:
                 vectors_full=jnp.asarray(vec),
                 delta_codes=jnp.asarray(d.codes),
                 delta_ids=jnp.asarray(ids),
+                delta_post=jnp.asarray(d.post),
+                delta_assigns=jnp.asarray(d.assigns),
                 live_full=jnp.asarray(live_full),
                 capacity=d.capacity)
         return self._dev
@@ -306,11 +351,19 @@ class StreamingIndex:
                 (jnp.int32(s0), jnp.int32(0)))
             dv.delta_ids = jax.lax.dynamic_update_slice(
                 dv.delta_ids, jnp.asarray(ids, jnp.int32), (jnp.int32(s0),))
+            dv.delta_assigns = jax.lax.dynamic_update_slice(
+                dv.delta_assigns, jnp.asarray(assigns),
+                (jnp.int32(s0), jnp.int32(0)))
+            pl, pc, ps = self._delta.last_post_update
+            if len(pl):
+                dv.delta_post = dv.delta_post.at[
+                    jnp.asarray(pl), jnp.asarray(pc)].set(
+                    jnp.asarray(ps, jnp.int32))
             dv.live_full = jax.lax.dynamic_update_slice(
                 dv.live_full, jnp.ones(len(slots), bool),
                 (jnp.int32(nb + s0),))
         else:
-            self._dev = None            # capacity bucket jump: rebuild lazily
+            self._dev = None   # capacity/posting bucket jump: rebuild lazily
         self.version += 1
         self.stats.inserts += x.shape[0]
         epoch_before = self.epoch
@@ -536,12 +589,27 @@ class StreamingSearcher(Searcher):
         self.version = stream.version
         super().__init__(stream.base, params)
         self.epoch = stream.epoch
+        # pinned at session creation: a mutation that changes the answer
+        # also bumps the version, which stales the session anyway
+        self._route_delta = stream.routes_at(self.params.nprobe)
         if stream.has_mutations:
             self._delegate = None
+            # executables depend on (params, delta shapes) only.  The
+            # posting width joins the key only once this session routes
+            # (the routed gather width is a compiled shape); on the
+            # exhaustive path the posting map is replaced by a
+            # zero-width placeholder, so steady-state appends growing
+            # the postings never recompile the exhaustive executables.
+            post_w = stream._delta.post_width if self._route_delta else 0
             self._compiled = stream._exec_cache.setdefault(
-                (self.params, stream._delta.capacity), {})
+                (self.params, stream._delta.capacity, post_w), {})
         else:
             self._delegate = stream.base.searcher(params)
+
+    def _probe_exe_store(self) -> dict:
+        """Probe-half executables consume only base arrays — share them
+        across delta capacity/posting bucket jumps (same epoch)."""
+        return self.stream._probe_cache.setdefault(self.params, {})
 
     def _check_current(self):
         st = self.stream
@@ -560,18 +628,55 @@ class StreamingSearcher(Searcher):
             (bucket, idx.vectors.shape[1]), jnp.float32)
         return streaming_search.lower(
             idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
-            dev.delta_codes, dev.delta_ids, dev.live_full, q_spec,
+            dev.delta_codes, dev.delta_ids, self._post_arg(dev),
+            dev.delta_assigns, dev.live_full, q_spec,
             nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
-            exec_mode=p.exec_mode, query_tile=p.query_tile)
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            route_delta=self._route_delta)
+
+    def _post_arg(self, dev) -> jnp.ndarray:
+        """The posting-map argument: real directory when routed, a
+        zero-width placeholder otherwise (keeps exhaustive-path
+        executable signatures independent of posting growth)."""
+        if self._route_delta:
+            return dev.delta_post
+        return jnp.zeros((self.stream.base.config.nlist, 0), jnp.int32)
 
     def _call_inputs(self) -> tuple:
         idx = self.stream.base
         dev = self.stream._device_state()
         return (idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
-                dev.delta_codes, dev.delta_ids, dev.live_full)
+                dev.delta_codes, dev.delta_ids, self._post_arg(dev),
+                dev.delta_assigns, dev.live_full)
+
+    # -- incremental-plan hooks: the probe half is the base index's own
+    # (inherited — self.index IS stream.base), only the scan half swaps
+    # in the streaming tail (delta merge + tombstones) ------------------
+    def _lower_scan(self, bucket: int, probe_spec, unions_spec):
+        p = self.params
+        idx = self.stream.base
+        dev = self.stream._device_state()
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, idx.vectors.shape[1]), jnp.float32)
+        return scan_finalize_stream.lower(
+            idx.arrays, dev.vectors_full, dev.delta_codes, dev.delta_ids,
+            self._post_arg(dev), dev.delta_assigns, dev.live_full, q_spec,
+            probe_spec, unions_spec,
+            bigk=p.bigk, k=p.k, metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            use_kernel=p.use_kernel, oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            route_delta=self._route_delta)
+
+    def _scan_inputs(self) -> tuple:
+        idx = self.stream.base
+        dev = self.stream._device_state()
+        return (idx.arrays, dev.vectors_full, dev.delta_codes,
+                dev.delta_ids, self._post_arg(dev), dev.delta_assigns,
+                dev.live_full)
 
     def __call__(self, queries: jnp.ndarray) -> SearchResult:
         if self._delegate is not None:

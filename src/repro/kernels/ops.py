@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .pq_scan import pq_scan_paged_kernel
+from .pq_scan import pq_scan_paged_kernel, pq_scan_tiled_kernel
 
 _LANE = 128
 
@@ -54,6 +54,24 @@ def pq_scan_grouped(lut: jnp.ndarray, block_codes: jnp.ndarray,
     on_tpu = _on_tpu()
     if on_tpu:
         lut, block_codes = _pad_m(lut, block_codes, _LANE)
-    idx = jnp.broadcast_to(shared_idx[None, :], (b, shared_idx.shape[0]))
-    return pq_scan_paged_kernel(lut, block_codes, idx.astype(jnp.int32),
+    idx = jnp.broadcast_to(shared_idx[None, :],
+                           (b // query_tile, shared_idx.shape[0]))
+    return pq_scan_tiled_kernel(lut, block_codes, idx.astype(jnp.int32),
+                                query_tile=query_tile, interpret=not on_tpu)
+
+
+def pq_scan_tiled(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                  tile_idx: jnp.ndarray, query_tile: int = 8
+                  ) -> jnp.ndarray:
+    """Clustered mode (locality-aware §5.3): each query *tile* scores its
+    own scan list — the tile's block union, padded per tile rather than
+    to the batch-wide maximum.  lut (B, M, K) in cluster order, tile_idx
+    (B // query_tile, W) -> (B, W, BLK).  The scalar-prefetched tile
+    lists feed the kernel index_map directly (no (B, W) re-broadcast);
+    the code tile for each union position stays resident in VMEM across
+    its tile's grid steps."""
+    on_tpu = _on_tpu()
+    if on_tpu:
+        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    return pq_scan_tiled_kernel(lut, block_codes, tile_idx.astype(jnp.int32),
                                 query_tile=query_tile, interpret=not on_tpu)

@@ -58,18 +58,23 @@ def _kernel(idx_ref, lut_ref, codes_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("query_tile", "interpret"))
-def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
-                         block_idx: jnp.ndarray, *, query_tile: int = 8,
+def pq_scan_tiled_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                         tile_idx: jnp.ndarray, *, query_tile: int = 8,
                          interpret: bool = False) -> jnp.ndarray:
-    """lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, block_idx (B, S)
-    -> (B, S, BLK) f32.  B % query_tile == 0; block_idx entries must be
-    valid (callers clamp padding to 0 and mask downstream)."""
+    """Per-tile paged scan: every query tile pages its *own* scan list.
+
+    lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, tile_idx
+    (B // query_tile, S) -> (B, S, BLK) f32.  The scalar-prefetched
+    ``tile_idx`` drives the BlockSpec index_map directly at tile
+    granularity — the clustered exec mode hands each tile its own
+    (tile-padded) block union with no re-broadcast to a batch-wide
+    list.  B % query_tile == 0; entries must be valid (callers clamp
+    padding to 0 and mask downstream)."""
     b, m, k = lut.shape
-    s = block_idx.shape[1]
+    qb, s = tile_idx.shape
     tb, blk, m2 = block_codes.shape
     assert m2 == m, (m2, m)
-    assert b % query_tile == 0, (b, query_tile)
-    qb = b // query_tile
+    assert b == qb * query_tile, (b, qb, query_tile)
 
     grid = (qb, s)
     kernel = pl.pallas_call(
@@ -88,10 +93,25 @@ def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, s, blk), jnp.float32),
         interpret=interpret,
     )
+    return kernel(tile_idx, lut, block_codes)
 
-    # Paging is per (query-tile, position): with query_tile == 1 every query
-    # pages its own scan list; with query_tile > 1 the caller guarantees the
-    # tile shares one list (the paper's §5.3 list-major batch mode — see
-    # ops.pq_scan_grouped).
+
+@functools.partial(jax.jit, static_argnames=("query_tile", "interpret"))
+def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                         block_idx: jnp.ndarray, *, query_tile: int = 8,
+                         interpret: bool = False) -> jnp.ndarray:
+    """lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, block_idx (B, S)
+    -> (B, S, BLK) f32.  B % query_tile == 0; block_idx entries must be
+    valid (callers clamp padding to 0 and mask downstream).
+
+    Paging is per (query-tile, position): with query_tile == 1 every query
+    pages its own scan list; with query_tile > 1 the caller guarantees the
+    tile shares one list (the paper's §5.3 list-major batch mode — see
+    ops.pq_scan_grouped / ops.pq_scan_tiled)."""
+    b = lut.shape[0]
+    assert b % query_tile == 0, (b, query_tile)
+    qb = b // query_tile
+    s = block_idx.shape[1]
     idx_tiled = block_idx.reshape(qb, query_tile, s)[:, 0, :]
-    return kernel(idx_tiled, lut, block_codes)
+    return pq_scan_tiled_kernel(lut, block_codes, idx_tiled,
+                                query_tile=query_tile, interpret=interpret)

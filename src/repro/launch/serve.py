@@ -108,9 +108,14 @@ def main():
     ap.add_argument("--batches", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--exec-mode", default="paged",
-                    choices=("paged", "grouped"),
-                    help="engine scan mode: per-query paging or list-major "
-                         "batched execution (paper §5.3)")
+                    choices=("paged", "grouped", "clustered"),
+                    help="engine scan mode: per-query paging, list-major "
+                         "batched execution (paper §5.3), or locality-"
+                         "clustered per-tile unions")
+    ap.add_argument("--plan-reuse", action="store_true",
+                    help="incremental plans: reuse block unions across "
+                         "adjacent batches (grouped/clustered only) and "
+                         "report plan-cache stats")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the ADC scan through the Pallas kernel")
     ap.add_argument("--save", metavar="PATH", default=None,
@@ -142,8 +147,14 @@ def main():
         if args.use_kernel:
             ap.error("--use-kernel is single-host only (the shard_map "
                      "step runs the jnp scan path)")
+        if args.plan_reuse:
+            ap.error("--plan-reuse is single-host only (the plan cache "
+                     "merges host-side between dispatches)")
     if args.shards and not args.save:
         ap.error("--shards only applies to --save")
+    if args.plan_reuse and args.exec_mode == "paged":
+        ap.error("--plan-reuse needs --exec-mode grouped or clustered "
+                 "(paged scans have no block union to reuse)")
     stream_ops = bool(args.insert or args.delete or args.compact)
     if args.load and args.save and not stream_ops:
         ap.error("--save with --load needs stream ops (an unmutated "
@@ -216,7 +227,8 @@ def main():
               f"same session API)")
     searcher = serving.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
-        exec_mode=args.exec_mode, use_kernel=args.use_kernel))
+        exec_mode=args.exec_mode, use_kernel=args.use_kernel,
+        plan_reuse=args.plan_reuse))
 
     # score against the index's own live corpus (== x when freshly built;
     # under churn the oracle runs over survivors with ids mapped back)
@@ -243,6 +255,8 @@ def main():
               f"qps={qb.shape[0] / dt:.0f} "
               f"compile[new={st.compiles} hit={st.cache_hits} "
               f"buckets={list(searcher.buckets)}]")
+    if args.plan_reuse:
+        print(f"plan-cache stats: {searcher.compile_stats()['plan']}")
     if isinstance(index, StreamingIndex):
         print(f"stream searcher stats: {index.searcher_stats()}")
     if args.ndev:

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis_stub import given, settings, st
 
-from repro.kernels.ops import pq_scan_grouped, pq_scan_paged
+from repro.kernels.ops import pq_scan_grouped, pq_scan_paged, pq_scan_tiled
 from repro.kernels.ref import onehot_lut_ref, pq_scan_paged_ref
 
 
@@ -55,6 +55,26 @@ def test_grouped_mode_query_tiles():
         out = pq_scan_grouped(lut, codes, sidx, query_tile=qt)
         ref = pq_scan_paged_ref(lut, codes,
                                 jnp.broadcast_to(sidx[None], (b, s)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_tiled_mode_per_tile_lists():
+    """pq_scan_tiled: each query tile pages its own (tile-padded) scan
+    list through the scalar-prefetched index_map — the clustered exec
+    mode's kernel path, validated in interpret mode on CPU against the
+    per-query oracle fed the tile-broadcast lists."""
+    key = jax.random.PRNGKey(13)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, m, kk, tb, blk, w = 16, 8, 16, 20, 32, 5
+    lut = jax.random.normal(k1, (b, m, kk), jnp.float32)
+    codes = jax.random.randint(k2, (tb, blk, m), 0, kk).astype(jnp.uint8)
+    for qt in (1, 2, 4, 8, 16):
+        tiles = b // qt
+        tile_idx = jax.random.randint(k3, (tiles, w), 0, tb, jnp.int32)
+        out = pq_scan_tiled(lut, codes, tile_idx, query_tile=qt)
+        full = jnp.repeat(tile_idx, qt, axis=0)          # (B, W) broadcast
+        ref = pq_scan_paged_ref(lut, codes, full)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-5, atol=1e-5)
 
