@@ -14,7 +14,9 @@ throughput delta-path vs legacy rebuild, layout-build count — must be
 distributed bench with ``BENCH_dist.json`` (recall / QPS / DCO of
 ``ShardedIndex`` sessions vs device count for both exec modes; sweep
 wider by setting ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-before the run).
+before the run), and the fused scan->top-k bench with
+``BENCH_fused.json`` (modeled scan-stage HBM traffic fused vs unfused
+plus QPS per exec mode — the CI ``kernel-smoke`` guard).
 """
 from __future__ import annotations
 
@@ -35,10 +37,13 @@ DIST_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_dist.json")
 PLAN_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_plan.json")
+FUSED_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_fused.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
 DIST_JSON_SCHEMA_VERSION = 1
 PLAN_JSON_SCHEMA_VERSION = 1
+FUSED_JSON_SCHEMA_VERSION = 1
 
 
 def _write_summary_json(label: str, schema_version: int, body: dict,
@@ -99,6 +104,13 @@ def write_plan_json(plan_out: dict, dataset: str, path: str) -> None:
                         dataset, path)
 
 
+def write_fused_json(fused_out: dict, dataset: str, path: str) -> None:
+    """Persist the fused scan->top-k bench (modeled scan-stage HBM
+    traffic fused vs unfused + QPS per exec mode)."""
+    _write_summary_json("fused", FUSED_JSON_SCHEMA_VERSION, fused_out,
+                        dataset, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -115,6 +127,9 @@ def main() -> None:
     ap.add_argument("--plan-json", type=str, default=PLAN_JSON_DEFAULT,
                     help="where the planning bench writes its machine-"
                          "readable summary ('' disables)")
+    ap.add_argument("--fused-json", type=str, default=FUSED_JSON_DEFAULT,
+                    help="where the fused scan->top-k bench writes its "
+                         "machine-readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
                          "BENCH_*.json files")
@@ -137,6 +152,8 @@ def main() -> None:
                 write_dist_json(out, args.bench_dataset, args.dist_json)
             if name == "plan" and args.plan_json:
                 write_plan_json(out, args.bench_dataset, args.plan_json)
+            if name == "fused" and args.fused_json:
+                write_fused_json(out, args.bench_dataset, args.fused_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -175,6 +192,7 @@ def _bench_list(args):
         ("stream", lambda: suite.bench_stream(dataset=args.bench_dataset)),
         ("plan", lambda: suite.bench_plan(dataset=args.bench_dataset)),
         ("dist", lambda: suite.bench_dist(dataset=args.bench_dataset)),
+        ("fused", lambda: suite.bench_fused(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

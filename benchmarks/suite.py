@@ -755,3 +755,99 @@ def bench_kernels():
              f"items={b * s * blk} us_per_item={us / (b * s * blk):.3f}")
     save_json("kernel_pq_scan", out)
     return out
+
+
+def bench_fused(dataset="sift1m", k=10, nprobe=16, chunk=64,
+                exec_modes=("paged", "grouped", "clustered")):
+    """Fused scan->top-k bench (-> BENCH_fused.json): modeled scan-stage
+    HBM traffic and wall-clock QPS, fused vs unfused, per exec mode.
+
+    Traffic model (roofline.py accounting style — analytic minimum
+    bytes the scan stage exchanges with HBM around the scan/finalize
+    boundary, per query):
+
+      unfused: the scan materializes the full (S, BLK) candidate stream
+        for finalize to re-read — ``S*BLK`` candidates x 8 B
+        (f32 distance + i32 id), written once and read once;
+      fused:   only the top-``fetch`` accumulator leaves the scan —
+        ``fetch`` candidates x 12 B written (f32 distance + i32 flat
+        position + i32 id), 8 B of which finalize reads back.
+
+    On-TPU the fused kernel additionally keeps the accumulator VMEM-
+    resident across the whole scan grid; this model counts only the
+    boundary traffic, which is what shrinks.  Asserts the modeled write
+    reduction >= 4x (the CI ``kernel-smoke`` guard) and fused==unfused
+    result ids at every operating point.
+    """
+    from repro.core import SearchParams
+    from repro.core.search import finalize_fetch
+
+    ctx = get_context(dataset, n_queries=256)
+    idx = ctx.index("rair", True)
+    gt = ctx.gt(k)
+    max_scan = idx.default_max_scan(nprobe)
+    blk = idx.arrays.block_codes.shape[1]
+    fetch = finalize_fetch(k * 10, idx.result_oversample,
+                           idx.needs_result_dedup)
+    fetch = min(fetch, max_scan * blk)
+    scan_width = max_scan * blk
+
+    unfused_write = scan_width * 8.0
+    fused_write = fetch * 12.0
+    out = {
+        "k": k, "nprobe": nprobe, "max_scan": max_scan, "block": blk,
+        "fetch": fetch, "scan_width": scan_width,
+        "modeled_bytes_per_query": {
+            "unfused_scan_write": unfused_write,
+            "fused_scan_write": fused_write,
+            "write_reduction_x": unfused_write / fused_write,
+            "unfused_roundtrip": 2 * unfused_write,
+            "fused_roundtrip": fused_write + fetch * 8.0,
+            "roundtrip_reduction_x":
+                2 * unfused_write / (fused_write + fetch * 8.0),
+        },
+        "modes": [],
+    }
+
+    def run(exec_mode, fused):
+        p = SearchParams(k=k, nprobe=nprobe, exec_mode=exec_mode,
+                         fused_topk=fused,
+                         batch_buckets=(min(chunk, ctx.q.shape[0]),))
+        searcher = idx.searcher(p)
+        nq = ctx.q.shape[0]
+        searcher(ctx.q[:chunk]).ids.block_until_ready()  # warmup/compile
+        t0 = time.perf_counter()
+        outs = [jax.tree.map(np.asarray, searcher(ctx.q[s:s + chunk]))
+                for s in range(0, nq, chunk)]
+        us = (time.perf_counter() - t0) / nq * 1e6
+        return jax.tree.map(lambda *a: np.concatenate(a, 0), *outs), us
+
+    mismatches = 0
+    for mode in exec_modes:
+        base, us_b = run(mode, False)
+        fused, us_f = run(mode, True)
+        equal = bool(np.array_equal(base.ids, fused.ids))
+        mismatches += not equal
+        row = {
+            "exec_mode": mode,
+            "unfused_qps": 1e6 / us_b,
+            "fused_qps": 1e6 / us_f,
+            "fused_over_unfused_qps": us_b / us_f,
+            "recall": recall_at_k(fused.ids, gt),
+            "ids_equal": equal,
+        }
+        out["modes"].append(row)
+        emit(f"fused_topk/{dataset}/{mode}", us_f,
+             f"fused_qps={row['fused_qps']:.0f} "
+             f"unfused_qps={row['unfused_qps']:.0f} "
+             f"ratio={row['fused_over_unfused_qps']:.3f} "
+             f"recall={row['recall']:.4f} ids_equal={equal}")
+    red = out["modeled_bytes_per_query"]["write_reduction_x"]
+    emit(f"fused_topk/{dataset}/hbm_model", 0.0,
+         f"scan_width={scan_width} fetch={fetch} write_reduction={red:.1f}x")
+    save_json("fused_topk", out)
+    assert mismatches == 0, "fused path must return identical ids"
+    assert red >= 4.0, (
+        f"modeled scan-stage HBM write reduction {red:.1f}x < 4x — "
+        f"fetch={fetch} grew relative to the scan width {scan_width}")
+    return out

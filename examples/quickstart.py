@@ -64,7 +64,17 @@ res_j = index.searcher(params)(queries[:8])
 assert np.array_equal(np.asarray(res_k.ids), np.asarray(res_j.ids))
 print("pallas pq_scan kernel path == jnp path (8 queries checked)")
 
-# 7. a mesh is a deployment detail: shard the index and serve through the
+# 7. fused scan->top-k: the scan stage emits only the bigK*oversample
+#    candidates finalize actually selects, instead of round-tripping the
+#    full (S, BLK) score tensor through HBM; with use_kernel=True the
+#    selection runs inside the Pallas kernel as a VMEM-resident bitonic
+#    accumulator.  Results are bitwise identical either way (DESIGN.md §9)
+fp = SearchParams(k=10, nprobe=6, use_kernel=True, fused_topk=True)
+res_f = index.searcher(fp)(queries[:8])
+assert np.array_equal(np.asarray(res_f.ids), np.asarray(res_k.ids))
+print("fused scan->top-k path == unfused path (8 queries checked)")
+
+# 8. a mesh is a deployment detail: shard the index and serve through the
 #    *same* session API (1-device mesh here; bitwise-identical results —
 #    on a real pod only the mesh constructor changes)
 mesh = jax.make_mesh((len(jax.devices()),), ("data",))
@@ -74,7 +84,7 @@ assert np.array_equal(np.asarray(res_m.ids), np.asarray(res.ids[:64]))
 print(f"sharded ({sharded.ndev}-device) session == single-host session; "
       f"stats: {sharded.searcher_stats()}")
 
-# 8. steady-state serving with the locality-aware planner: clustered
+# 9. steady-state serving with the locality-aware planner: clustered
 #    execution buckets each batch by probed-list overlap (per-tile block
 #    unions) and plan_reuse carries those unions across adjacent batches
 #    — watch the plan-cache hit rate climb while results stay bitwise

@@ -43,7 +43,7 @@ from jax.sharding import Mesh  # noqa: F401  (re-export for callers)
 
 from .engine import (BlockStore, ListTables, finalize_candidates,
                      plan_blocks, preselect_candidates, scan_blocks,
-                     select_lists)
+                     scan_blocks_topk, select_lists)
 from .params import SearchParams
 from .pq import PQCodebook, pq_lut, pq_lut_ip
 from .search import SearchResult
@@ -54,7 +54,8 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
                      metric: str = "l2", dedup_results: bool = False,
                      oversample: int = 2, exec_mode: str = "paged",
                      query_tile: int = 8, axes=("data",), ndev: int = 1,
-                     streaming: bool = False):
+                     streaming: bool = False, use_kernel: bool = False,
+                     fused_topk: bool = False):
     """Build the per-device serve step for shard_map.
 
     Returns ``serve(block_codes, block_ids, block_other, owned,
@@ -92,9 +93,18 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
         # from the replicated selection, so every device permutes its
         # (locally windowed) plan identically — per-device plans ride the
         # same clustering with their own per-tile local unions
-        scan = scan_blocks(store, plan, lut, selection.rank_of,
-                           exec_mode=exec_mode, query_tile=query_tile,
-                           sel=selection.sel)
+        if fused_topk:
+            # the fused scan's width-fetch output IS the per-device
+            # preselect — tombstones applied pre-selection via ``live``
+            scan = scan_blocks_topk(
+                store, plan, lut, selection.rank_of, fetch=fetch,
+                exec_mode=exec_mode, use_kernel=use_kernel,
+                query_tile=query_tile, sel=selection.sel,
+                live=live if streaming else None)
+        else:
+            scan = scan_blocks(store, plan, lut, selection.rank_of,
+                               exec_mode=exec_mode, use_kernel=use_kernel,
+                               query_tile=query_tile, sel=selection.sel)
         flat_d, flat_i = scan.flat_d, scan.flat_i
         approx_dco = scan.approx_dco
 
@@ -112,12 +122,17 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
             di = jnp.broadcast_to(delta_ids[None, :], dd.shape)
             flat_d = jnp.concatenate([flat_d, dd], axis=1)
             flat_i = jnp.concatenate([flat_i, di], axis=1)
-            # tombstone mask over the whole id space, replicated
+            # tombstone mask over the whole id space, replicated (the
+            # fused base stream is already live-masked; re-masking it
+            # here is idempotent, and the delta needs it either way)
             dead = (flat_i >= 0) & ~live[jnp.maximum(flat_i, 0)]
             flat_d = jnp.where(dead, jnp.inf, flat_d)
             approx_dco = approx_dco + jnp.sum(mine).astype(jnp.int32)
 
         # -- collective 1: local stable top-fetch, all_gather the streams
+        # (with fused_topk + no streaming merge the stream is already the
+        # stable top-fetch; the preselect is then a width-preserving
+        # stable sort, harmless and shape-identical)
         l_d, l_ids = preselect_candidates(flat_d, flat_i, fetch=fetch)
         g_d = jax.lax.all_gather(l_d, axes, axis=1, tiled=True)
         g_ids = jax.lax.all_gather(l_ids, axes, axis=1, tiled=True)

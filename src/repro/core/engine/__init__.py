@@ -16,6 +16,7 @@ from .cluster import (cluster_order, fit_tile, merge_unions_host,  # noqa: F401
                       plan_width, tile_signatures, tile_unions, union_dims,
                       union_live)
 from .finalize import finalize_candidates, preselect_candidates  # noqa: F401
+from .fused import plan_slot_maps, scan_blocks_topk  # noqa: F401
 from .plan import compact_plan, gather_candidates, plan_blocks  # noqa: F401
 from .scan import EXEC_MODES, batch_union, scan_blocks  # noqa: F401
 from .select import rank_table, select_lists  # noqa: F401

@@ -47,21 +47,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...kernels.ref import adc_gather as _adc_gather
 from .cluster import cluster_order, fit_tile, tile_unions, union_dims
 from .types import BIG, BlockStore, QueryPlan, ScanOut
 
 EXEC_MODES = ("paged", "grouped", "clustered")
-
-
-def _adc_gather(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
-    """lut (B, M, K), codes (B, S, BLK, M) -> (B, S, BLK) ADC distances."""
-    g = jnp.take_along_axis(
-        lut[:, None, None, :, :], codes.astype(jnp.int32)[..., None],
-        axis=-1)
-    return jnp.sum(g[..., 0], axis=-1)
-
-
-_fit_query_tile = fit_tile    # back-compat alias (kernel tiling helper)
 
 
 def batch_union(plan: QueryPlan, total_blocks: int) -> jnp.ndarray:

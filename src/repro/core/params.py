@@ -40,6 +40,16 @@ class SearchParams:
                  | "clustered" (grouped with query-tile clustering:
                  per-tile block unions in probe-overlap order)
     use_kernel   route the ADC scan through the Pallas kernel
+    fused_topk   fuse the scan with the stable top-fetch selection: the
+                 scan stage emits only ``bigk * oversample`` candidates
+                 per query instead of the full (S, BLK) score tensor.
+                 With use_kernel=True the selection runs inside the
+                 Pallas kernel (a VMEM-resident bitonic top-k
+                 accumulator — candidates never round-trip HBM); with
+                 use_kernel=False it is a stage-level jnp fusion.
+                 Results are bitwise identical either way (the fused
+                 selection reproduces ``preselect_candidates``' stable
+                 tie order; tests/test_fused.py).
     query_tile   grouped/clustered query tile (VMEM residency per fetch;
                  the clustered union granularity)
     plan_reuse   incremental plans (grouped/clustered only): the session
@@ -59,6 +69,7 @@ class SearchParams:
     max_scan: Optional[int] = None
     exec_mode: str = "paged"
     use_kernel: bool = False
+    fused_topk: bool = False
     query_tile: int = 8
     plan_reuse: bool = False
     batch_buckets: Optional[Tuple[int, ...]] = None

@@ -39,11 +39,18 @@ import jax
 import jax.numpy as jnp
 
 from .engine import (PlanProbe, cluster_order, finalize_candidates,
-                     plan_blocks, scan_blocks, select_lists,
-                     store_from_arrays, tables_from_arrays, tile_unions,
-                     union_dims)
+                     plan_blocks, scan_blocks, scan_blocks_topk,
+                     select_lists, store_from_arrays, tables_from_arrays,
+                     tile_unions, union_dims)
 from .pq import PQCodebook, pq_lut, pq_lut_ip
 from .seil import SeilArrays
+
+
+def finalize_fetch(bigk: int, oversample: int, dedup_results: bool) -> int:
+    """The candidate width ``finalize_candidates`` selects before exact
+    refinement — the budget a fused scan must deliver for bitwise parity
+    (``preselect_candidates``' covering-width invariant)."""
+    return bigk * (oversample if dedup_results else 1)
 
 
 class SearchResult(NamedTuple):
@@ -59,7 +66,7 @@ class SearchResult(NamedTuple):
     jax.jit,
     static_argnames=("nprobe", "bigk", "k", "max_scan", "metric",
                      "dedup_results", "use_kernel", "oversample",
-                     "exec_mode", "query_tile"))
+                     "exec_mode", "query_tile", "fused_topk"))
 def seil_search(
     arrays: SeilArrays,
     centroids: jnp.ndarray,       # (nlist, D)
@@ -77,16 +84,24 @@ def seil_search(
     oversample: int = 2,
     exec_mode: str = "paged",
     query_tile: int = 8,
+    fused_topk: bool = False,
 ) -> SearchResult:
     selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
     plan = plan_blocks(tables_from_arrays(arrays), selection,
                        max_scan=max_scan)
     lut = (pq_lut(codebook, queries) if metric == "l2"
            else pq_lut_ip(codebook, queries))                # (B, M, 16)
-    scan = scan_blocks(store_from_arrays(arrays), plan, lut,
-                       selection.rank_of, exec_mode=exec_mode,
-                       use_kernel=use_kernel, query_tile=query_tile,
-                       sel=selection.sel)
+    if fused_topk:
+        scan = scan_blocks_topk(
+            store_from_arrays(arrays), plan, lut, selection.rank_of,
+            fetch=finalize_fetch(bigk, oversample, dedup_results),
+            exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, sel=selection.sel)
+    else:
+        scan = scan_blocks(store_from_arrays(arrays), plan, lut,
+                           selection.rank_of, exec_mode=exec_mode,
+                           use_kernel=use_kernel, query_tile=query_tile,
+                           sel=selection.sel)
     out_ids, out_d, refine_dco = finalize_candidates(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,
@@ -147,7 +162,7 @@ def probe_plan(
 @functools.partial(
     jax.jit,
     static_argnames=("bigk", "k", "metric", "dedup_results", "use_kernel",
-                     "oversample", "exec_mode", "query_tile"))
+                     "oversample", "exec_mode", "query_tile", "fused_topk"))
 def scan_finalize(
     arrays: SeilArrays,
     vectors: jnp.ndarray,
@@ -163,12 +178,20 @@ def scan_finalize(
     oversample: int = 2,
     exec_mode: str = "grouped",
     query_tile: int = 8,
+    fused_topk: bool = False,
 ) -> SearchResult:
     """Stages 3-4 against caller-provided (possibly reused) unions."""
-    scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
-                       probe.rank_of, exec_mode=exec_mode,
-                       use_kernel=use_kernel, query_tile=query_tile,
-                       perm=probe.perm, unions=unions)
+    if fused_topk:
+        scan = scan_blocks_topk(
+            store_from_arrays(arrays), probe.plan, probe.lut, probe.rank_of,
+            fetch=finalize_fetch(bigk, oversample, dedup_results),
+            exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, perm=probe.perm, unions=unions)
+    else:
+        scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
+                           probe.rank_of, exec_mode=exec_mode,
+                           use_kernel=use_kernel, query_tile=query_tile,
+                           perm=probe.perm, unions=unions)
     out_ids, out_d, refine_dco = finalize_candidates(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,

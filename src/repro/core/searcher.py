@@ -143,7 +143,8 @@ class Searcher:
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
-            exec_mode=p.exec_mode, query_tile=p.query_tile)
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            fused_topk=p.fused_topk)
 
     def _call_inputs(self) -> tuple:
         """Runtime arguments preceding the query batch at dispatch."""
@@ -177,7 +178,8 @@ class Searcher:
             bigk=p.bigk, k=p.k, metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
-            exec_mode=p.exec_mode, query_tile=p.query_tile)
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            fused_topk=p.fused_topk)
 
     def _scan_inputs(self) -> tuple:
         idx = self.index

@@ -380,10 +380,6 @@ class ShardedIndex:
             params = SearchParams(**kwargs)
         elif kwargs:
             params = dataclasses.replace(params, **kwargs)
-        if params.use_kernel:
-            raise ValueError(
-                "ShardedIndex sessions run the jnp scan path inside "
-                "shard_map; use_kernel=True is not supported")
         if params.plan_reuse:
             raise ValueError(
                 "plan_reuse is a single-host session feature (the plan "
@@ -482,7 +478,8 @@ class ShardedSearcher(Searcher):
             dedup_results=idx.needs_result_dedup,
             oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            axes=sh.axes, ndev=sh.ndev, streaming=sh.streaming)
+            axes=sh.axes, ndev=sh.ndev, streaming=sh.streaming,
+            use_kernel=p.use_kernel, fused_topk=p.fused_topk)
         s, r = P(sh.axes), P()
         fn = jax.jit(shard_map(
             serve, mesh=sh.mesh,

@@ -50,10 +50,10 @@ import jax
 import jax.numpy as jnp
 
 from ..engine import (PlanProbe, finalize_candidates, plan_blocks,
-                      scan_blocks, select_lists, store_from_arrays,
-                      tables_from_arrays)
+                      scan_blocks, scan_blocks_topk, select_lists,
+                      store_from_arrays, tables_from_arrays)
 from ..pq import PQCodebook, pq_lut, pq_lut_ip
-from ..search import SearchResult
+from ..search import SearchResult, finalize_fetch
 from ..seil import SeilArrays
 
 
@@ -115,7 +115,8 @@ def _delta_candidates(lut, delta_codes, delta_ids, delta_post,
     jax.jit,
     static_argnames=("nprobe", "bigk", "k", "max_scan", "metric",
                      "dedup_results", "use_kernel", "oversample",
-                     "exec_mode", "query_tile", "route_delta"))
+                     "exec_mode", "query_tile", "route_delta",
+                     "fused_topk"))
 def streaming_search(
     arrays: SeilArrays,
     centroids: jnp.ndarray,       # (nlist, D)
@@ -139,16 +140,26 @@ def streaming_search(
     exec_mode: str = "paged",
     query_tile: int = 8,
     route_delta: bool = False,
+    fused_topk: bool = False,
 ) -> SearchResult:
     selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
     plan = plan_blocks(tables_from_arrays(arrays), selection,
                        max_scan=max_scan)
     lut = (pq_lut(codebook, queries) if metric == "l2"
            else pq_lut_ip(codebook, queries))                # (B, M, 16)
-    scan = scan_blocks(store_from_arrays(arrays), plan, lut,
-                       selection.rank_of, exec_mode=exec_mode,
-                       use_kernel=use_kernel, query_tile=query_tile,
-                       sel=selection.sel)
+    if fused_topk:
+        # live is applied pre-selection so tombstoned base candidates
+        # cannot occupy top-fetch slots; finalize's re-mask is idempotent
+        scan = scan_blocks_topk(
+            store_from_arrays(arrays), plan, lut, selection.rank_of,
+            fetch=finalize_fetch(bigk, oversample, dedup_results),
+            exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, sel=selection.sel, live=live)
+    else:
+        scan = scan_blocks(store_from_arrays(arrays), plan, lut,
+                           selection.rank_of, exec_mode=exec_mode,
+                           use_kernel=use_kernel, query_tile=query_tile,
+                           sel=selection.sel)
     dd, di, delta_dco = _delta_candidates(
         lut, delta_codes, delta_ids, delta_post, delta_assigns,
         selection.sel, selection.rank_of, route_delta)
@@ -165,7 +176,8 @@ def streaming_search(
 @functools.partial(
     jax.jit,
     static_argnames=("bigk", "k", "metric", "dedup_results", "use_kernel",
-                     "oversample", "exec_mode", "query_tile", "route_delta"))
+                     "oversample", "exec_mode", "query_tile", "route_delta",
+                     "fused_topk"))
 def scan_finalize_stream(
     arrays: SeilArrays,
     vectors: jnp.ndarray,
@@ -187,14 +199,23 @@ def scan_finalize_stream(
     exec_mode: str = "grouped",
     query_tile: int = 8,
     route_delta: bool = False,
+    fused_topk: bool = False,
 ) -> SearchResult:
     """Streaming stages 3-4 against caller-provided (reused) unions —
     the probe half is the base ``probe_plan`` (the delta needs no block
     planning), so incremental plans compose with churn unchanged."""
-    scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
-                       probe.rank_of, exec_mode=exec_mode,
-                       use_kernel=use_kernel, query_tile=query_tile,
-                       perm=probe.perm, unions=unions)
+    if fused_topk:
+        scan = scan_blocks_topk(
+            store_from_arrays(arrays), probe.plan, probe.lut, probe.rank_of,
+            fetch=finalize_fetch(bigk, oversample, dedup_results),
+            exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, perm=probe.perm, unions=unions,
+            live=live)
+    else:
+        scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
+                           probe.rank_of, exec_mode=exec_mode,
+                           use_kernel=use_kernel, query_tile=query_tile,
+                           perm=probe.perm, unions=unions)
     dd, di, delta_dco = _delta_candidates(
         probe.lut, delta_codes, delta_ids, delta_post, delta_assigns,
         probe.sel, probe.rank_of, route_delta)

@@ -635,7 +635,7 @@ class StreamingSearcher(Searcher):
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            route_delta=self._route_delta)
+            route_delta=self._route_delta, fused_topk=p.fused_topk)
 
     def _post_arg(self, dev) -> jnp.ndarray:
         """The posting-map argument: real directory when routed, a
@@ -669,7 +669,7 @@ class StreamingSearcher(Searcher):
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            route_delta=self._route_delta)
+            route_delta=self._route_delta, fused_topk=p.fused_topk)
 
     def _scan_inputs(self) -> tuple:
         idx = self.stream.base

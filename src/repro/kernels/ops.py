@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .pq_scan import pq_scan_paged_kernel, pq_scan_tiled_kernel
+from .pq_scan import (pq_scan_paged_kernel, pq_scan_tiled_kernel,
+                      pq_scan_topk_kernel)
 
 _LANE = 128
 
@@ -75,3 +76,26 @@ def pq_scan_tiled(lut: jnp.ndarray, block_codes: jnp.ndarray,
         lut, block_codes = _pad_m(lut, block_codes, _LANE)
     return pq_scan_tiled_kernel(lut, block_codes, tile_idx.astype(jnp.int32),
                                 query_tile=query_tile, interpret=not on_tpu)
+
+
+def pq_scan_topk(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                 block_ids: jnp.ndarray, block_other: jnp.ndarray,
+                 tile_idx: jnp.ndarray, rank_of: jnp.ndarray,
+                 slot_of: jnp.ndarray, rank_u: jnp.ndarray, dead=None,
+                 *, fetch: int, query_tile: int = 8):
+    """Fused scan -> top-``fetch``: the paged ADC scan with the keep mask
+    and the stable partial top-k folded into the kernel, so only
+    ``fetch`` candidates per query cross the HBM boundary instead of
+    (S, BLK) scores.  tile_idx (B // query_tile, S) pages per-tile scan
+    lists exactly like ``pq_scan_tiled``; ``slot_of``/``rank_u`` (B, S)
+    map each scan position back to the query's plan slot (see
+    ``core/engine/fused.py`` for the per-exec-mode construction).
+    Returns (acc_d, acc_pos, acc_id, dco) — (B, fetch) sorted candidate
+    triple + (B,) logical DCO."""
+    on_tpu = _on_tpu()
+    if on_tpu:
+        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    return pq_scan_topk_kernel(
+        lut, block_codes, block_ids, block_other,
+        tile_idx.astype(jnp.int32), rank_of, slot_of, rank_u, dead,
+        query_tile=query_tile, fetch=fetch, interpret=not on_tpu)

@@ -33,8 +33,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .topk import PAD_POS, bitonic_sort, merge_topf, pow2_ceil
 
 
 def _kernel(idx_ref, lut_ref, codes_ref, out_ref):
@@ -96,22 +99,204 @@ def pq_scan_tiled_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
     return kernel(tile_idx, lut, block_codes)
 
 
-@functools.partial(jax.jit, static_argnames=("query_tile", "interpret"))
 def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
                          block_idx: jnp.ndarray, *, query_tile: int = 8,
-                         interpret: bool = False) -> jnp.ndarray:
+                         interpret: bool = False,
+                         debug: bool = False) -> jnp.ndarray:
     """lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, block_idx (B, S)
     -> (B, S, BLK) f32.  B % query_tile == 0; block_idx entries must be
     valid (callers clamp padding to 0 and mask downstream).
 
     Paging is per (query-tile, position): with query_tile == 1 every query
-    pages its own scan list; with query_tile > 1 the caller guarantees the
-    tile shares one list (the paper's §5.3 list-major batch mode — see
-    ops.pq_scan_grouped / ops.pq_scan_tiled)."""
+    pages its own scan list; with query_tile > 1 every query of a tile
+    MUST carry the same scan list (the paper's §5.3 list-major batch mode
+    — see ops.pq_scan_grouped / ops.pq_scan_tiled), because only row 0 of
+    each tile drives the paging index_map.  The invariant is enforced:
+    eager calls raise ``ValueError`` on mismatched tile rows, and traced
+    calls with ``debug=True`` emit a ``checkify.check`` (run the caller
+    under ``checkify.checkify`` and ``err.throw()``) — misuse fails
+    loudly instead of silently scoring the wrong blocks."""
     b = lut.shape[0]
     assert b % query_tile == 0, (b, query_tile)
     qb = b // query_tile
     s = block_idx.shape[1]
-    idx_tiled = block_idx.reshape(qb, query_tile, s)[:, 0, :]
-    return pq_scan_tiled_kernel(lut, block_codes, idx_tiled,
+    rows = block_idx.reshape(qb, query_tile, s)
+    if query_tile > 1:
+        shared = jnp.all(rows == rows[:, :1, :])
+        if not isinstance(block_idx, jax.core.Tracer):
+            if not bool(shared):
+                raise ValueError(
+                    f"pq_scan_paged_kernel: query_tile={query_tile} but the "
+                    "tile rows of block_idx disagree — per-tile paging "
+                    "scores row 0's list for the whole tile.  Use "
+                    "query_tile=1 (per-query paging) or a tile-shared scan "
+                    "list (ops.pq_scan_grouped / ops.pq_scan_tiled).")
+        elif debug:
+            checkify.check(
+                shared, "pq_scan_paged_kernel: tile rows of block_idx "
+                "disagree under query_tile > 1 (tile-shared-list invariant)")
+    return pq_scan_tiled_kernel(lut, block_codes, rows[:, 0, :],
                                 query_tile=query_tile, interpret=interpret)
+
+
+def _make_topk_kernel(query_tile: int, blk: int, f: int, with_dead: bool):
+    """Kernel body factory for the fused scan->top-k (shapes are static)."""
+
+    def kernel(idx_ref, lut_ref, codes_ref, bids_ref, bother_ref, rank_ref,
+               slot_ref, ranku_ref, *rest):
+        if with_dead:
+            (dead_ref, acc_d_ref, acc_pos_ref, acc_id_ref, dco_ref) = rest
+        else:
+            (acc_d_ref, acc_pos_ref, acc_id_ref, dco_ref) = rest
+        qt, m, k = lut_ref.shape
+        si = pl.program_id(1)
+
+        # the accumulator blocks map to (qi, 0) for every scan position,
+        # so they stay resident in VMEM across the inner grid dimension;
+        # first visit initializes them to the empty top-F
+        @pl.when(si == 0)
+        def _init():
+            acc_d_ref[...] = jnp.full((qt, f), jnp.inf, jnp.float32)
+            acc_pos_ref[...] = jnp.full((qt, f), PAD_POS, jnp.int32)
+            acc_id_ref[...] = jnp.full((qt, f), -1, jnp.int32)
+            dco_ref[...] = jnp.zeros((qt, 1), jnp.int32)
+
+        # -- score the paged block: same one-hot MXU contraction as the
+        # unfused kernel (_kernel), so distances are bitwise identical
+        codes = codes_ref[0].astype(jnp.int32)                 # (BLK, M)
+        onehot = (codes[:, :, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2))
+        oh = onehot.astype(jnp.float32).reshape(blk, m * k)
+        lut = lut_ref[...].reshape(qt, m * k)
+        d = jax.lax.dot_general(lut, oh, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        # -- in-kernel keep mask (Alg. 5 L15-16, scan_blocks' post-hoc
+        # logic moved here): invalid slots/absent union positions
+        # (slot < 0), invalid items (id < 0), and misc duplicates whose
+        # co-assigned list was scanned at an earlier probe rank
+        ids = bids_ref[0]                                      # (BLK,)
+        other = bother_ref[0]                                  # (BLK,)
+        slot = slot_ref[...][:, 0]                             # (QT,)
+        ranku = ranku_ref[...][:, 0]                           # (QT,)
+        o = jnp.maximum(other, 0)
+        orank = jnp.take_along_axis(
+            rank_ref[...], jnp.broadcast_to(o[None, :], (qt, blk)), axis=1)
+        dup = (other[None, :] >= 0) & (orank < ranku[:, None])
+        item_ok = (ids[None, :] >= 0) & (slot[:, None] >= 0)
+        keep = item_ok & ~dup
+        if with_dead:
+            # tombstoned candidates must not consume accumulator slots
+            # (they are ADC-computed — DCO counts them — then discarded)
+            keep &= dead_ref[0][None, :] == 0
+        dco_ref[...] += jnp.sum(item_ok.astype(jnp.int32), axis=1,
+                                keepdims=True)
+
+        # -- candidate triple in plan layout: pos = slot*BLK + lane is the
+        # flat position of the unfused stream, the lax.top_k tie-break
+        lane = jax.lax.broadcasted_iota(jnp.int32, (qt, blk), 1)
+        pos = slot[:, None] * blk + lane
+        new = bitonic_sort([jnp.where(keep, d, jnp.inf),
+                            jnp.where(keep, pos, PAD_POS),
+                            jnp.where(keep, ids[None, :], -1)])
+        if blk >= f:
+            # candidates beyond a block's own top-F can never survive
+            new = [x[:, :f] for x in new]
+        else:
+            pad = ((0, 0), (0, f - blk))
+            new = [jnp.pad(new[0], pad, constant_values=jnp.inf),
+                   jnp.pad(new[1], pad, constant_values=PAD_POS),
+                   jnp.pad(new[2], pad, constant_values=-1)]
+        acc = merge_topf([acc_d_ref[...], acc_pos_ref[...], acc_id_ref[...]],
+                         new)
+        acc_d_ref[...], acc_pos_ref[...], acc_id_ref[...] = acc
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("query_tile", "fetch", "interpret"))
+def pq_scan_topk_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
+                        block_ids: jnp.ndarray, block_other: jnp.ndarray,
+                        tile_idx: jnp.ndarray, rank_of: jnp.ndarray,
+                        slot_of: jnp.ndarray, rank_u: jnp.ndarray,
+                        dead=None, *, query_tile: int = 8, fetch: int = 64,
+                        interpret: bool = False):
+    """Fused paged scan -> partial top-``fetch``: only ``fetch`` candidates
+    per query ever leave the kernel, instead of (S, BLK) scores.
+
+    lut        (B, M, K) f32     per-query ADC tables
+    block_codes(TB, BLK, M) u8   physical code blocks
+    block_ids  (TB, BLK) i32     item ids (-1 invalid)
+    block_other(TB, BLK) i32     co-assigned list of shared items (-1 none)
+    tile_idx   (B//QT, S) i32    scalar-prefetched per-tile scan lists
+    rank_of    (B, nlist) i32    probe rank table (BIG if unprobed)
+    slot_of    (B, S) i32        plan slot of scan position s for query b
+                                 (-1: not in this query's plan -> masked)
+    rank_u     (B, S) i32        probe rank of that slot's scan
+    dead       (TB, BLK) u8?     optional tombstone tile (1 = dead)
+
+    Returns ``(acc_d, acc_pos, acc_id, dco)``: (B, fetch) ascending
+    distances / plan-layout flat positions / ids, plus the (B,) logical
+    DCO counter (one per valid item of a planned block, duplicates
+    included — exactly ``scan_blocks``' accounting).  The accumulator
+    triple lives in VMEM for the whole inner grid pass (out BlockSpecs
+    constant in the scan dimension); each step is one bitonic sort of
+    the block + one bitonic merge against the accumulator (kernels/
+    topk.py), keyed lexicographically by (d, pos) so the result is
+    bitwise the stable ``preselect_candidates`` selection over the
+    unfused stream with masked entries at ``(+inf, PAD_POS, -1)``.
+    """
+    b, m, k = lut.shape
+    qb, s = tile_idx.shape
+    tb, blk, m2 = block_codes.shape
+    assert m2 == m, (m2, m)
+    assert b == qb * query_tile, (b, qb, query_tile)
+    assert blk == pow2_ceil(blk), f"block size must be a power of 2: {blk}"
+    assert slot_of.shape == (b, s), (slot_of.shape, (b, s))
+    assert rank_u.shape == (b, s), (rank_u.shape, (b, s))
+    f = pow2_ceil(max(fetch, 1))
+    nlist = rank_of.shape[1]
+    with_dead = dead is not None
+
+    in_specs = [
+        pl.BlockSpec((query_tile, m, k), lambda qi, si, idx: (qi, 0, 0)),
+        pl.BlockSpec((1, blk, m), lambda qi, si, idx: (idx[qi, si], 0, 0)),
+        pl.BlockSpec((1, blk), lambda qi, si, idx: (idx[qi, si], 0)),
+        pl.BlockSpec((1, blk), lambda qi, si, idx: (idx[qi, si], 0)),
+        pl.BlockSpec((query_tile, nlist), lambda qi, si, idx: (qi, 0)),
+        pl.BlockSpec((query_tile, 1), lambda qi, si, idx: (qi, si)),
+        pl.BlockSpec((query_tile, 1), lambda qi, si, idx: (qi, si)),
+    ]
+    operands = [lut, block_codes, block_ids.astype(jnp.int32),
+                block_other.astype(jnp.int32), rank_of.astype(jnp.int32),
+                slot_of.astype(jnp.int32), rank_u.astype(jnp.int32)]
+    if with_dead:
+        in_specs.append(
+            pl.BlockSpec((1, blk), lambda qi, si, idx: (idx[qi, si], 0)))
+        operands.append(dead.astype(jnp.uint8))
+
+    kernel = pl.pallas_call(
+        _make_topk_kernel(query_tile, blk, f, with_dead),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(qb, s),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((query_tile, f), lambda qi, si, idx: (qi, 0)),
+                pl.BlockSpec((query_tile, f), lambda qi, si, idx: (qi, 0)),
+                pl.BlockSpec((query_tile, f), lambda qi, si, idx: (qi, 0)),
+                pl.BlockSpec((query_tile, 1), lambda qi, si, idx: (qi, 0)),
+            ]),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, f), jnp.float32),
+            jax.ShapeDtypeStruct((b, f), jnp.int32),
+            jax.ShapeDtypeStruct((b, f), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    acc_d, acc_pos, acc_id, dco = kernel(tile_idx.astype(jnp.int32),
+                                         *operands)
+    return (acc_d[:, :fetch], acc_pos[:, :fetch], acc_id[:, :fetch],
+            dco[:, 0])

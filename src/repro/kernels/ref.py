@@ -4,6 +4,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def adc_gather(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """The reference ADC gather shared by oracle and engine fallback.
+
+    lut (B, M, K) f32, codes (B, S, BLK, M) -> (B, S, BLK) distances:
+    out[b,s,i] = sum_m lut[b, m, codes[b,s,i,m]].  The single source of
+    truth — ``core/engine/scan.py`` imports this same function for its
+    jnp scan path, so oracle and engine can never diverge."""
+    g = jnp.take_along_axis(
+        lut[:, None, None, :, :],                        # (B,1,1,M,K)
+        codes.astype(jnp.int32)[..., None], axis=-1)     # (B,S,BLK,M,1)
+    return jnp.sum(g[..., 0], axis=-1)
+
+
 def pq_scan_paged_ref(lut: jnp.ndarray, block_codes: jnp.ndarray,
                       block_idx: jnp.ndarray) -> jnp.ndarray:
     """ADC distances over paged code blocks.
@@ -13,11 +26,7 @@ def pq_scan_paged_ref(lut: jnp.ndarray, block_codes: jnp.ndarray,
     block_idx:   (B, S) int32 physical block ids (callers pre-clamp to >=0)
     returns      (B, S, BLK) f32:  out[b,s,i] = sum_m lut[b, m, codes[i,m]]
     """
-    codes = block_codes[block_idx]                       # (B, S, BLK, M)
-    g = jnp.take_along_axis(
-        lut[:, None, None, :, :],                        # (B,1,1,M,K)
-        codes.astype(jnp.int32)[..., None], axis=-1)     # (B,S,BLK,M,1)
-    return jnp.sum(g[..., 0], axis=-1)
+    return adc_gather(lut, block_codes[block_idx])
 
 
 def onehot_lut_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,114 @@
+"""Bitonic partial-sort primitives for the fused scan->top-k kernel.
+
+The fused kernel (pq_scan.py::pq_scan_topk_kernel) keeps a per-query
+top-``F`` candidate accumulator resident in VMEM across grid steps, so
+it needs a selection network built from vector ops only — no gathers,
+no data-dependent control flow, nothing Mosaic cannot lower.  Every
+routine here is a reshape-based compare-exchange network over the
+*trailing* axis of a (distance, position, id) triple:
+
+  * keys are lexicographic ``(d, pos)`` ascending — ``pos`` is the flat
+    plan-layout position ``slot * BLK + lane`` of a candidate, which is
+    exactly the tie-break order of ``jax.lax.top_k`` over the unfused
+    candidate stream (``preselect_candidates``' stability contract), so
+    a merge network over these keys reproduces the unfused selection
+    *bitwise*, ties included;
+  * masked/padding entries carry ``(+inf, BIG, -1)``; with pos unique
+    among real candidates the key is a total order, so the network
+    needs no stability of its own;
+  * a compare-exchange at distance ``g`` is one reshape to
+    ``(..., n // 2g, 2, g)`` plus ``jnp.where`` selects — the standard
+    TPU idiom for sorting networks (lane-aligned, MXU-free).
+
+The same functions run inside the Pallas kernel body (interpret mode on
+CPU, Mosaic on TPU) and in the pure-jnp oracle, so kernel and reference
+can never diverge on the network itself.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# padding position for masked candidates — matches engine BIG
+# (core/engine/types.py) without importing across the package boundary.
+PAD_POS = 2 ** 30
+
+
+def pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (network widths must be powers of 2)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _lex_le(ad, ap, bd, bp):
+    """a precedes-or-equals b under the ascending (d, pos) lex key."""
+    return (ad < bd) | ((ad == bd) & (ap <= bp))
+
+
+def _compare_exchange(arrs: Sequence[jnp.ndarray], kk: int, j: int
+                      ) -> List[jnp.ndarray]:
+    """One bitonic substage: exchange at distance 2^j inside 2^kk blocks.
+
+    arrs: [d, pos, ...] arrays of shape (..., n); the first two are the
+    sort key, the rest ride along.  Block direction alternates with the
+    block index (the standard bitonic schedule): ascending iff bit
+    (kk-1-j) of the outer block index is 0.
+    """
+    n = arrs[0].shape[-1]
+    g = 1 << j
+    lead = arrs[0].shape[:-1]
+    r = [x.reshape(lead + (n // (2 * g), 2, g)) for x in arrs]
+    a = [x[..., 0, :] for x in r]
+    b = [x[..., 1, :] for x in r]
+    o = jax.lax.broadcasted_iota(jnp.int32, a[0].shape, len(lead))
+    asc = ((o >> (kk - 1 - j)) & 1) == 0
+    a_first = _lex_le(a[0], a[1], b[0], b[1])
+    take_a_lo = jnp.where(asc, a_first, ~a_first)
+    out = []
+    for xa, xb in zip(a, b):
+        lo = jnp.where(take_a_lo, xa, xb)
+        hi = jnp.where(take_a_lo, xb, xa)
+        out.append(jnp.stack([lo, hi], axis=-2).reshape(lead + (n,)))
+    return out
+
+
+def bitonic_sort(arrs: Sequence[jnp.ndarray]) -> List[jnp.ndarray]:
+    """Full ascending sort of (..., n) triples by the (d, pos) lex key.
+    n must be a power of two; log2(n)*(log2(n)+1)/2 substages."""
+    n = arrs[0].shape[-1]
+    logn = n.bit_length() - 1
+    assert 1 << logn == n, f"bitonic_sort needs a power-of-two width, got {n}"
+    arrs = list(arrs)
+    for kk in range(1, logn + 1):
+        for j in range(kk - 1, -1, -1):
+            arrs = _compare_exchange(arrs, kk, j)
+    return arrs
+
+
+def bitonic_merge(arrs: Sequence[jnp.ndarray]) -> List[jnp.ndarray]:
+    """Sort a *bitonic* (..., n) sequence ascending — log2(n) substages."""
+    n = arrs[0].shape[-1]
+    logn = n.bit_length() - 1
+    assert 1 << logn == n, f"bitonic_merge needs a power-of-two width, got {n}"
+    arrs = list(arrs)
+    for j in range(logn - 1, -1, -1):
+        arrs = _compare_exchange(arrs, logn, j)
+    return arrs
+
+
+def merge_topf(acc: Sequence[jnp.ndarray], new: Sequence[jnp.ndarray]
+               ) -> List[jnp.ndarray]:
+    """Merge two ascending-sorted (..., F) triples into the top-F of
+    their union (ascending).  ``concat(acc, reverse(new))`` is bitonic,
+    so one log2(2F)-stage merge sorts the 2F candidates; the first F
+    are the survivors.  This is the per-grid-step accumulator update of
+    the fused kernel: O(F log F) compares, no HBM round-trip."""
+    f = acc[0].shape[-1]
+    cat = [jnp.concatenate([a, x[..., ::-1]], axis=-1)
+           for a, x in zip(acc, new)]
+    merged = bitonic_merge(cat)
+    return [x[..., :f] for x in merged]

@@ -118,6 +118,10 @@ def main():
                          "report plan-cache stats")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the ADC scan through the Pallas kernel")
+    ap.add_argument("--fused-topk", action="store_true",
+                    help="fuse candidate selection into the scan stage "
+                         "(with --use-kernel: VMEM-resident top-k inside "
+                         "the Pallas kernel, DESIGN.md §9)")
     ap.add_argument("--save", metavar="PATH", default=None,
                     help="persist the index bundle (after any stream ops)")
     ap.add_argument("--load", metavar="PATH", default=None,
@@ -144,9 +148,6 @@ def main():
             ap.error(f"--ndev {args.ndev} exceeds the {avail} available "
                      f"device(s); on CPU set XLA_FLAGS="
                      f"--xla_force_host_platform_device_count={args.ndev}")
-        if args.use_kernel:
-            ap.error("--use-kernel is single-host only (the shard_map "
-                     "step runs the jnp scan path)")
         if args.plan_reuse:
             ap.error("--plan-reuse is single-host only (the plan cache "
                      "merges host-side between dispatches)")
@@ -228,7 +229,7 @@ def main():
     searcher = serving.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel,
-        plan_reuse=args.plan_reuse))
+        fused_topk=args.fused_topk, plan_reuse=args.plan_reuse))
 
     # score against the index's own live corpus (== x when freshly built;
     # under churn the oracle runs over survivors with ids mapped back)

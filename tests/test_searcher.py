@@ -265,14 +265,19 @@ def test_save_index_extra_meta_roundtrips(rairs_index, tmp_path):
 
 def test_distributed_rejects_unsupported_params(rairs_index, unit_data):
     """The shard_map path must refuse SearchParams fields it would
-    otherwise silently drop, and still require nprobe/k without params."""
+    otherwise silently drop, and still require nprobe/k without params.
+    use_kernel is no longer one of them: the serve step routes the scan
+    through the (interpret-mode on CPU) Pallas kernels since the fused
+    top-k work, so it must serve rather than raise."""
     from repro.core.distributed import distributed_search
     _, q, _ = unit_data
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    with pytest.raises(ValueError, match="use_kernel"):
-        distributed_search(rairs_index, mesh, q[:4],
-                           params=SearchParams(k=10, nprobe=4,
-                                               use_kernel=True))
+    base = distributed_search(rairs_index, mesh, q[:4],
+                              params=SearchParams(k=10, nprobe=4))
+    rk = distributed_search(rairs_index, mesh, q[:4],
+                            params=SearchParams(k=10, nprobe=4,
+                                                use_kernel=True))
+    assert np.array_equal(np.asarray(rk.ids), np.asarray(base.ids))
     with pytest.raises(ValueError, match="max_scan"):
         distributed_search(rairs_index, mesh, q[:4],
                            params=SearchParams(k=10, nprobe=4, max_scan=64))

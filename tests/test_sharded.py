@@ -102,9 +102,15 @@ def test_sharded_session_protocol(rairs_index, unit_data, mesh):
     assert r2.ids.shape == (8, 5)
 
 
-def test_sharded_rejects_kernel_sessions(rairs_index, mesh):
-    with pytest.raises(ValueError, match="use_kernel"):
-        rairs_index.shard(mesh).searcher(SearchParams(use_kernel=True))
+def test_sharded_kernel_sessions_serve(rairs_index, unit_data, mesh):
+    """The mesh ``use_kernel`` rejection is lifted: kernel sessions lower
+    through ``build_serve_step`` and return the same ids as the jnp path
+    (refine recomputes exact distances, absorbing scan-stage rounding)."""
+    _, q, _ = unit_data
+    sharded = rairs_index.shard(mesh)
+    base = sharded.searcher(SearchParams(k=5, nprobe=4))(q[:16])
+    rk = sharded.searcher(SearchParams(k=5, nprobe=4, use_kernel=True))(q[:16])
+    assert np.array_equal(np.asarray(rk.ids), np.asarray(base.ids))
 
 
 def test_sharded_shard_cache(rairs_index, mesh):
