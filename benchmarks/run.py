@@ -16,7 +16,10 @@ distributed bench with ``BENCH_dist.json`` (recall / QPS / DCO of
 wider by setting ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 before the run), and the fused scan->top-k bench with
 ``BENCH_fused.json`` (modeled scan-stage HBM traffic fused vs unfused
-plus QPS per exec mode — the CI ``kernel-smoke`` guard).
+plus QPS per exec mode — the CI ``kernel-smoke`` guard), and the
+gateway serving bench with ``BENCH_serve.json`` (deadline-batched vs
+per-request throughput and p50/p99 latency per open-loop offered load
+point — the CI ``gateway-smoke`` guard).
 """
 from __future__ import annotations
 
@@ -39,11 +42,14 @@ PLAN_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_plan.json")
 FUSED_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_fused.json")
+SERVE_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_serve.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
 DIST_JSON_SCHEMA_VERSION = 1
 PLAN_JSON_SCHEMA_VERSION = 1
 FUSED_JSON_SCHEMA_VERSION = 1
+SERVE_JSON_SCHEMA_VERSION = 1
 
 
 def _write_summary_json(label: str, schema_version: int, body: dict,
@@ -111,6 +117,13 @@ def write_fused_json(fused_out: dict, dataset: str, path: str) -> None:
                         dataset, path)
 
 
+def write_serve_json(serve_out: dict, dataset: str, path: str) -> None:
+    """Persist the gateway serving bench (deadline-batched vs
+    per-request throughput + p50/p99 per offered load point)."""
+    _write_summary_json("serve", SERVE_JSON_SCHEMA_VERSION, serve_out,
+                        dataset, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -129,6 +142,9 @@ def main() -> None:
                          "readable summary ('' disables)")
     ap.add_argument("--fused-json", type=str, default=FUSED_JSON_DEFAULT,
                     help="where the fused scan->top-k bench writes its "
+                         "machine-readable summary ('' disables)")
+    ap.add_argument("--serve-json", type=str, default=SERVE_JSON_DEFAULT,
+                    help="where the gateway serving bench writes its "
                          "machine-readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
@@ -154,6 +170,8 @@ def main() -> None:
                 write_plan_json(out, args.bench_dataset, args.plan_json)
             if name == "fused" and args.fused_json:
                 write_fused_json(out, args.bench_dataset, args.fused_json)
+            if name == "serve" and args.serve_json:
+                write_serve_json(out, args.bench_dataset, args.serve_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -193,6 +211,7 @@ def _bench_list(args):
         ("plan", lambda: suite.bench_plan(dataset=args.bench_dataset)),
         ("dist", lambda: suite.bench_dist(dataset=args.bench_dataset)),
         ("fused", lambda: suite.bench_fused(dataset=args.bench_dataset)),
+        ("serve", lambda: suite.bench_serve(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

@@ -851,3 +851,94 @@ def bench_fused(dataset="sift1m", k=10, nprobe=16, chunk=64,
         f"modeled scan-stage HBM write reduction {red:.1f}x < 4x — "
         f"fetch={fetch} grew relative to the scan width {scan_width}")
     return out
+
+
+def bench_serve(dataset="sift1m", k=10, nprobe=4, max_scan=16,
+                load_factors=(1.5, 20.0), n_requests=384,
+                max_batch=32, max_delay_ms=2.0):
+    """Async gateway serving bench (-> BENCH_serve.json): the same
+    open-loop Poisson arrival stream served two ways — through the
+    deadline-batched gateway (requests coalesced into compiled batch
+    buckets) and per-request (``max_batch=1``: identical queue and
+    sessions, every dispatch carries one query) — with p50/p99 latency
+    at each offered load point.
+
+    The serving config is latency-budgeted (small nprobe, capped
+    ``max_scan`` block budget) — the operating point a front-end
+    actually serves, and the regime where per-dispatch overhead is
+    worth amortizing.  Offered loads are calibrated to the machine: a
+    back-to-back warmup
+    run measures the per-request sustainable throughput, and each load
+    point offers ``load_factor`` times that rate.  Below 1.0 both paths
+    keep up and coalescing (by design) buys nothing; above it the
+    per-request path saturates while the batched gateway keeps
+    absorbing the stream — the regime a serving front-end exists for.
+
+    Asserts the gateway's core claim so CI's ``gateway-smoke`` step
+    fails loudly if coalescing regresses: at the highest offered load
+    the batched gateway sustains >= 2x the per-request throughput."""
+    from repro.gateway import Gateway, GatewayConfig, run_open_loop
+
+    ctx = get_context(dataset, n_queries=256)
+    idx = ctx.index("rair", True)
+    q = np.asarray(ctx.q)
+    modes = {
+        "batched": GatewayConfig(max_delay_ms=max_delay_ms,
+                                 max_batch=max_batch),
+        "per_request": GatewayConfig(max_delay_ms=0.0, max_batch=1,
+                                     admission="fifo"),
+    }
+    # calibrate: per-request capacity under back-to-back arrivals
+    with Gateway(idx, k=k, nprobe=nprobe, max_scan=max_scan,
+                 config=modes["per_request"]) as gw:
+        cal = run_open_loop(gw, q, 1e6, max(n_requests // 3, 32), seed=99)
+    per_req_cap = cal["achieved_qps"]
+    offered = tuple(f * per_req_cap for f in load_factors)
+    emit(f"serve_gateway/{dataset}/calibration", 0.0,
+         f"per_request_capacity={per_req_cap:.0f}qps "
+         f"offered={[f'{o:.0f}' for o in offered]}")
+
+    runs = {}
+    for mode, cfg in modes.items():
+        with Gateway(idx, k=k, nprobe=nprobe, max_scan=max_scan,
+                     config=cfg) as gw:
+            rows = [run_open_loop(gw, q, qps, n_requests, seed=i)
+                    for i, qps in enumerate(offered)]
+            tel = gw.stats()["telemetry"]
+        runs[mode] = {"points": rows,
+                      "batch_fill": tel["batch_fill"],
+                      "bucket_fill": tel["bucket_fill"],
+                      "counters": tel["counters"]}
+
+    points = []
+    for i, qps in enumerate(offered):
+        b = runs["batched"]["points"][i]
+        p = runs["per_request"]["points"][i]
+        speedup = b["achieved_qps"] / max(p["achieved_qps"], 1e-9)
+        points.append({"offered_qps": qps, "speedup": speedup,
+                       "batched": b, "per_request": p})
+        emit(f"serve_gateway/{dataset}/qps{qps:g}", 0.0,
+             f"batched={b['achieved_qps']:.0f} "
+             f"per_request={p['achieved_qps']:.0f} "
+             f"speedup={speedup:.2f}x "
+             f"p50={b['p50_ms']:.1f}ms p99={b['p99_ms']:.1f}ms "
+             f"mean_batch={b['mean_batch']:.1f}")
+    out = {"k": k, "nprobe": nprobe, "max_scan": max_scan,
+           "max_batch": max_batch,
+           "max_delay_ms": max_delay_ms, "n_requests": n_requests,
+           "per_request_capacity_qps": per_req_cap,
+           "load_factors": list(load_factors),
+           "points": points,
+           "batched": {m: runs["batched"][m] for m in
+                       ("batch_fill", "bucket_fill", "counters")},
+           "per_request": {m: runs["per_request"][m] for m in
+                           ("batch_fill", "bucket_fill", "counters")}}
+    save_json("serve_gateway", out)
+    errs = sum(pt["batched"]["errors"] + pt["per_request"]["errors"]
+               for pt in points)
+    assert errs == 0, f"{errs} gateway requests failed or timed out"
+    top = max(pt["speedup"] for pt in points)
+    assert top >= 2.0, (
+        f"deadline-batched gateway only {top:.2f}x per-request dispatch "
+        f"at its best offered load point — coalescing regressed")
+    return out

@@ -21,8 +21,9 @@ from .params import MAX_AUTO_BUCKET, SearchParams  # noqa
 from .searcher import PlanStats, Searcher, SearcherStats  # noqa
 from .sharded import ShardedIndex, ShardedSearcher, shard_index  # noqa
 from .distributed import build_serve_step, distributed_search  # noqa
-from .stream import (StaleSessionError, StreamConfig, StreamingIndex,  # noqa
-                     StreamingSearcher, StreamStats, streaming_search)
+from .stream import (PendingCompaction, StaleSessionError,  # noqa
+                     StreamConfig, StreamingIndex, StreamingSearcher,
+                     StreamStats, streaming_search)
 from .kmeans import kmeans_fit, kmeans_step_sharded, pairwise_sq_l2  # noqa
 from .metrics import ground_truth, recall_at_k, per_query_recall, dco_summary  # noqa
 from .pq import PQCodebook, pq_train, pq_encode, pq_lut, pq_adc, pq_decode  # noqa

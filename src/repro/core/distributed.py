@@ -34,6 +34,7 @@ deprecated shims over the unified API.
 """
 from __future__ import annotations
 
+import sys
 import warnings
 from typing import NamedTuple
 
@@ -163,6 +164,9 @@ class DistSearchResult(NamedTuple):
     local_dco: jnp.ndarray     # (B,) per-device approx DCO (psum'd)
 
 
+_DEPRECATION_NOTED = False
+
+
 def make_distributed_serve_step(nlist: int, nprobe: int, bigk: int, k: int,
                                 max_scan_local: int, axes=("data",),
                                 exec_mode: str = "paged",
@@ -178,6 +182,13 @@ def make_distributed_serve_step(nlist: int, nprobe: int, bigk: int, k: int,
         "index.shard(mesh).searcher(params) (core/sharded.py) — it serves "
         "the same shard_map step through the unified Searcher API",
         DeprecationWarning, stacklevel=2)
+    # DeprecationWarning is filtered out of non-__main__ code by default,
+    # so also say it once where the operator can actually see it
+    global _DEPRECATION_NOTED
+    if not _DEPRECATION_NOTED:
+        _DEPRECATION_NOTED = True
+        print("note: make_distributed_serve_step is deprecated — use "
+              "index.shard(mesh).searcher(params)", file=sys.stderr)
     step = build_serve_step(
         nprobe=nprobe, bigk=bigk, k=k, max_scan_local=max_scan_local,
         metric="l2", dedup_results=False, oversample=1, exec_mode=exec_mode,

@@ -14,7 +14,7 @@ in the plan's block-range window.
 """
 from .cluster import (cluster_order, fit_tile, merge_unions_host,  # noqa: F401
                       plan_width, tile_signatures, tile_unions, union_dims,
-                      union_live)
+                      union_live, width_buckets)
 from .finalize import finalize_candidates, preselect_candidates  # noqa: F401
 from .fused import plan_slot_maps, scan_blocks_topk  # noqa: F401
 from .plan import compact_plan, gather_candidates, plan_blocks  # noqa: F401

@@ -126,6 +126,21 @@ def plan_width(live_max: int, width_cap: int) -> int:
     return min(w, width_cap)
 
 
+def width_buckets(width_cap: int) -> list:
+    """Every dispatch width ``plan_width`` can produce for one static
+    ``width_cap`` — the 1.5x geometric ladder clipped to the cap.  The
+    gateway pre-compiles a scan executable per bucket at startup
+    (``Searcher.warmup_widths``) so a cold start or epoch swap never
+    pays compile latency on the serving path."""
+    out = set()
+    w = _MIN_UNION
+    while w < width_cap:
+        out.add(w)
+        w = w * 3 // 2
+    out.add(width_cap)
+    return sorted(out)
+
+
 def tile_signatures(lead_lists: np.ndarray) -> list:
     """Stable identity keys for a batch's tiles, from the rank-0 probed
     list of each tile's first query (in cluster order).

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import (BIG, merge_unions_host, plan_width, tile_signatures,
-                     union_live)
+                     union_live, width_buckets)
 from .params import SearchParams
 from .search import SearchResult, probe_plan, scan_finalize, seil_search
 
@@ -42,6 +42,8 @@ from .search import SearchResult, probe_plan, scan_finalize, seil_search
 class SearcherStats:
     """Compile/dispatch accounting for one session."""
     compiles: int = 0        # executables built (one per bucket)
+    warmup_compiles: int = 0  # subset of compiles paid up-front by
+                              # warmup/warmup_widths, not by live traffic
     calls: int = 0           # searcher invocations
     dispatches: int = 0      # chunk dispatches (>= calls)
     cache_hits: int = 0      # executable fetches served from the cache
@@ -259,7 +261,10 @@ class Searcher:
     def warmup(self, *batch_sizes: int) -> "Searcher":
         """Pre-compile the buckets covering `batch_sizes` (chainable).
         With plan_reuse only the probe half pre-compiles — the scan
-        half's union width is a property of the traffic."""
+        half's union width is a property of the traffic (use
+        ``warmup_widths`` to pre-pay the whole width ladder).  Compiles
+        triggered here count as ``warmup_compiles``."""
+        before = self.stats.compiles
         for b in batch_sizes:
             bucket = self.params.bucket_for(min(b, self.params.max_chunk))
             if self.params.plan_reuse:
@@ -268,6 +273,44 @@ class Searcher:
                               cache=self._probe_exe_store())
             else:
                 self._executable(bucket)
+        self.stats.warmup_compiles += self.stats.compiles - before
+        return self
+
+    def warmup_widths(self, *batch_sizes: int) -> "Searcher":
+        """Pre-compile the plan_reuse scan executables at every
+        geometric union-width bucket for `batch_sizes` (chainable).
+
+        A plan_reuse session dispatches its scan half at the smallest
+        ``plan_width`` bucket covering the live union, so the set of
+        executables traffic can demand is the ``width_buckets`` ladder —
+        finite and known up-front.  Compiling it at gateway startup (or
+        right after an epoch swap) means the first requests never eat
+        compile latency.  Without plan_reuse this is plain ``warmup``.
+        Compiles triggered here count as ``warmup_compiles`` in
+        ``compile_stats()``, separate from traffic-driven compiles."""
+        if not self.params.plan_reuse:
+            return self.warmup(*batch_sizes)
+        before = self.stats.compiles
+        dim = int(self.index.vectors.shape[1])
+        for b in batch_sizes:
+            bucket = self.params.bucket_for(min(b, self.params.max_chunk))
+            probe = self._get_exe(("probe", bucket),
+                                  lambda: self._lower_probe(bucket),
+                                  cache=self._probe_exe_store())
+            # one throwaway probe dispatch yields the exact output spec
+            # (tile count and full union width) for this bucket
+            pr = probe(*self._probe_inputs(),
+                       jnp.zeros((bucket, dim), jnp.float32))
+            probe_spec = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), pr)
+            t, w = pr.unions.shape
+            udt = pr.unions.dtype
+            for wp in width_buckets(w):
+                spec = jax.ShapeDtypeStruct((t, wp), udt)
+                self._get_exe(
+                    ("scan", bucket, wp),
+                    lambda s=spec: self._lower_scan(bucket, probe_spec, s))
+        self.stats.warmup_compiles += self.stats.compiles - before
         return self
 
     def __call__(self, queries: jnp.ndarray) -> SearchResult:

@@ -6,5 +6,6 @@ compaction, and (epoch, version)-pinned searcher sessions.
 """
 from .delta import DeltaSegment  # noqa: F401
 from .search import delta_adc, streaming_search  # noqa: F401
-from .streaming import (StaleSessionError, StreamConfig,  # noqa: F401
-                        StreamingIndex, StreamingSearcher, StreamStats)
+from .streaming import (PendingCompaction, StaleSessionError,  # noqa: F401
+                        StreamConfig, StreamingIndex, StreamingSearcher,
+                        StreamStats)

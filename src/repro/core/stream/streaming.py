@@ -17,7 +17,17 @@ churn.  ``StreamingIndex`` makes insert/delete first-class (DESIGN.md
     dead items are masked at query time, never rewritten out;
   * **compaction** folds survivors (base minus tombstones, plus live
     delta) into a fresh ``build_seil`` base, renumbers ids densely
-    (``last_remap`` maps old -> new, -1 = deleted) and bumps ``epoch``;
+    (``last_remap`` maps old -> new, -1 = deleted) and bumps ``epoch``.
+    ``begin_compact`` is the zero-downtime variant (DESIGN.md §10): it
+    snapshots the epoch so the O(n) fold can run on a worker thread
+    while the stream keeps serving and mutating, and ``install`` swaps
+    the new epoch in atomically, replaying whatever mutations arrived
+    after the snapshot;
+  * **external ids** are stable handles: the id first issued for an
+    item never changes even though compaction renumbers the internal
+    id space — ``resolve_ids`` / ``external_ids`` translate through a
+    composed map that chains every ``last_remap``, so gateway clients
+    holding result ids survive epoch handovers;
   * **sessions** (``StreamingSearcher``) pin the (epoch, version) they
     compiled against: any mutation bumps ``version``, and a stale
     session raises ``StaleSessionError`` instead of silently serving
@@ -108,6 +118,159 @@ class _DeviceState:
     capacity: int
 
 
+def _fold_epoch(base, base_live: np.ndarray, d_vectors: np.ndarray,
+                d_codes: np.ndarray, d_assigns: np.ndarray,
+                d_live: np.ndarray):
+    """Pure epoch fold: survivors of (base, delta) -> a fresh
+    ``RairsIndex`` plus the dense old->new remap over the snapshot id
+    space (-1 = deleted).  Touches only its arguments and the immutable
+    base, so it is safe to run off-thread against snapshot copies while
+    the owning ``StreamingIndex`` keeps serving (``begin_compact``)."""
+    cfg = base.config
+    codes_base = base.codes
+    if codes_base is None:     # pre-cache bundle: encode once
+        codes_base = np.asarray(
+            index_mod.pq_encode(base.codebook, base.vectors))
+    vec = np.concatenate(
+        [np.asarray(base.vectors)[base_live], d_vectors[d_live]], axis=0)
+    codes = np.concatenate(
+        [np.asarray(codes_base)[base_live], d_codes[d_live]], axis=0)
+    assigns = np.concatenate(
+        [np.asarray(base.assigns)[base_live], d_assigns[d_live]], axis=0)
+    n = vec.shape[0]
+    shared = cfg.seil and cfg.multi_m == 2
+    t1 = time.perf_counter()
+    arrays, seil_stats = build_seil(
+        assigns, codes, np.arange(n, dtype=np.int32), cfg.nlist,
+        block=cfg.block, shared=shared, code_bits=cfg.nbits)
+    t_layout = time.perf_counter() - t1
+    alive_full = np.concatenate([base_live, d_live])
+    remap = np.full(alive_full.shape[0], -1, np.int64)
+    remap[np.nonzero(alive_full)[0]] = np.arange(n)
+    new_base = index_mod.RairsIndex(
+        config=cfg, centroids=base.centroids, codebook=base.codebook,
+        arrays=arrays, vectors=jnp.asarray(vec), stats=seil_stats,
+        assigns=assigns, codes=codes,
+        build_seconds={"layout": t_layout})
+    return new_base, remap, t_layout
+
+
+class PendingCompaction:
+    """A two-phase zero-downtime compaction (``begin_compact``).
+
+    ``fold()`` builds the next epoch from a snapshot taken at
+    ``begin_compact`` time; it reads only the snapshot copies and the
+    immutable base, so a worker thread can run it while the stream keeps
+    answering queries and absorbing mutations.  ``install()`` then swaps
+    the folded epoch in atomically and *replays* everything that arrived
+    after the snapshot: tail inserts re-append with their already-
+    computed codes/assignments (no re-encoding), post-snapshot deletes
+    re-tombstone through the remap.  The combined remap over the full
+    pre-install id space lands in ``stream.last_remap`` and chains into
+    the external-id map exactly like a synchronous ``compact()``.
+
+    Thread contract: ``fold()`` may run on any thread; ``install()``
+    mutates the stream and must be serialized against every other use of
+    the index — the gateway's dispatcher thread calls it between
+    dispatched batches (DESIGN.md §10 handover state machine).
+    """
+
+    def __init__(self, stream: "StreamingIndex", reason: str):
+        self.stream = stream
+        self.reason = reason
+        self.state = "folding"
+        d = stream._delta
+        self._epoch0 = stream.epoch
+        self._n_base0 = stream.n_base
+        self._count0 = d.count
+        self._base_live0 = stream._base_live.copy()
+        self._d_vectors0 = d.vectors[:d.count].copy()
+        self._d_codes0 = d.codes[:d.count].copy()
+        self._d_assigns0 = d.assigns[:d.count].copy()
+        self._d_live0 = d.live[:d.count].copy()
+        self._folded = None
+        self._fold_seconds = 0.0
+
+    def fold(self) -> "PendingCompaction":
+        """The O(n) rebuild — run this off-thread; chainable."""
+        if self.state != "folding":
+            raise RuntimeError(f"fold() on a {self.state} compaction")
+        t0 = time.perf_counter()
+        self._folded = _fold_epoch(
+            self.stream.base, self._base_live0, self._d_vectors0,
+            self._d_codes0, self._d_assigns0, self._d_live0)
+        self._fold_seconds = time.perf_counter() - t0
+        self.state = "ready"
+        return self
+
+    def abort(self) -> None:
+        """Drop the pending fold; the stream stays on its current epoch."""
+        self.state = "aborted"
+        if self.stream._pending_compact is self:
+            self.stream._pending_compact = None
+
+    def install(self) -> dict:
+        """Atomically swap the folded epoch in and replay the mutation
+        tail.  Must not race any other use of the stream (see class
+        docstring); sessions become stale exactly as under ``compact``."""
+        st = self.stream
+        if self.state != "ready":
+            raise RuntimeError(
+                f"install() on a {self.state} compaction (fold() first)")
+        if st.epoch != self._epoch0:
+            self.abort()
+            raise RuntimeError(
+                "a competing compaction landed while this one folded; "
+                "the snapshot is stale")
+        t0 = time.perf_counter()
+        new_base, remap0, t_layout = self._folded
+        d = st._delta
+        # mutations that arrived after the snapshot
+        tail_vec = d.vectors[self._count0:d.count].copy()
+        tail_codes = d.codes[self._count0:d.count].copy()
+        tail_assigns = d.assigns[self._count0:d.count].copy()
+        tail_live = d.live[self._count0:d.count].copy()
+        dead_base = self._base_live0 & ~st._base_live
+        dead_delta = self._d_live0 & ~d.live[:self._count0]
+        n_total_old = self._n_base0 + d.count
+        # swap epochs (sessions stale from here on)
+        st.base = new_base
+        st.epoch += 1
+        st.version += 1
+        st.stats.compactions += 1
+        st._retire_sessions()
+        st._reset_epoch_state()
+        # remap over the full pre-install id space: snapshot ids fold
+        # through remap0, live tail inserts re-append under fresh ids
+        remap = np.full(n_total_old, -1, np.int64)
+        remap[:remap0.size] = remap0
+        if tail_live.any():
+            lv = np.nonzero(tail_live)[0]
+            slots, _ = st._delta.append(
+                tail_vec[lv], tail_codes[lv], tail_assigns[lv])
+            remap[self._n_base0 + self._count0 + lv] = st.n_base + slots
+        # post-snapshot deletes: their victims folded in as live (the
+        # snapshot predates them) — re-tombstone through the remap.
+        # Stats/version stay put: these mutations were already counted
+        # when the caller issued them.
+        dead_old = np.concatenate(
+            [np.nonzero(dead_base)[0],
+             self._n_base0 + np.nonzero(dead_delta)[0]])
+        if dead_old.size:
+            st._apply_tombstones(remap[dead_old])
+        st._apply_remap(remap)
+        st._pending_compact = None
+        self.state = "installed"
+        return {"epoch": st.epoch, "reason": self.reason,
+                "n_live": st.n_live,
+                "dropped": int((remap < 0).sum()),
+                "seconds": self._fold_seconds + time.perf_counter() - t0,
+                "layout_seconds": t_layout,
+                "replayed_inserts": int(tail_live.sum()),
+                "replayed_deletes": int(dead_old.size),
+                "id_remap": remap}
+
+
 class StreamingIndex:
     """Mutable index: an immutable ``RairsIndex`` base epoch plus delta
     segment, tombstone mask, and versioned searcher sessions.
@@ -129,6 +292,12 @@ class StreamingIndex:
         self.stats = StreamStats()
         self.last_remap = None      # old id -> new id after last compact
         self._retired: Dict[str, int] = {}   # folded stats of dead sessions
+        self._pending_compact: Optional[PendingCompaction] = None
+        # stable external ids: the handle first issued for an item never
+        # changes; _ext_to_int chains every compaction remap (-1 = dead)
+        # and _int_to_ext is its inverse over the current id space
+        self._ext_to_int = np.arange(self.n_base, dtype=np.int64)
+        self._int_to_ext = np.arange(self.n_base, dtype=np.int64)
         self._reset_epoch_state()
 
     def _reset_epoch_state(self):
@@ -341,6 +510,12 @@ class StreamingIndex:
         nb = self.n_base
         slots, grew = self._delta.append(x, codes, assigns)
         ids = nb + slots
+        # issue permanent external handles (identical to the internal id
+        # at insert time; compaction remaps chain through _apply_remap)
+        ext = np.arange(self._ext_to_int.size,
+                        self._ext_to_int.size + ids.size, dtype=np.int64)
+        self._ext_to_int = np.concatenate([self._ext_to_int, ids])
+        self._int_to_ext = np.concatenate([self._int_to_ext, ext])
         if self._dev is not None and not grew:
             dv = self._dev
             s0 = int(slots[0])
@@ -414,49 +589,102 @@ class StreamingIndex:
         ``last_remap[old_id] -> new_id`` (-1 = deleted) records the
         renumbering; every open session becomes stale.
         """
+        if self._pending_compact is not None:
+            raise RuntimeError(
+                "a background compaction is pending (begin_compact); "
+                "install() or abort() it before compacting synchronously")
         t0 = time.perf_counter()
-        base, d = self.base, self._delta
-        cfg = base.config
-        alive_b = self._base_live
-        alive_d = d.live[:d.count]
-        codes_base = base.codes
-        if codes_base is None:     # pre-cache bundle: encode once
-            codes_base = np.asarray(
-                index_mod.pq_encode(base.codebook, base.vectors))
-        vec = np.concatenate(
-            [np.asarray(base.vectors)[alive_b], d.vectors[:d.count][alive_d]],
-            axis=0)
-        codes = np.concatenate(
-            [np.asarray(codes_base)[alive_b], d.codes[:d.count][alive_d]],
-            axis=0)
-        assigns = np.concatenate(
-            [np.asarray(base.assigns)[alive_b], d.assigns[:d.count][alive_d]],
-            axis=0)
-        n = vec.shape[0]
-        shared = cfg.seil and cfg.multi_m == 2
-        t1 = time.perf_counter()
-        arrays, seil_stats = build_seil(
-            assigns, codes, np.arange(n, dtype=np.int32), cfg.nlist,
-            block=cfg.block, shared=shared, code_bits=cfg.nbits)
-        t_layout = time.perf_counter() - t1
-        alive_full = np.concatenate([alive_b, alive_d])
-        remap = np.full(alive_full.shape[0], -1, np.int64)
-        remap[np.nonzero(alive_full)[0]] = np.arange(n)
-        self.base = index_mod.RairsIndex(
-            config=cfg, centroids=base.centroids, codebook=base.codebook,
-            arrays=arrays, vectors=jnp.asarray(vec), stats=seil_stats,
-            assigns=assigns, codes=codes,
-            build_seconds={"layout": t_layout})
-        self.last_remap = remap
+        d = self._delta
+        new_base, remap, t_layout = _fold_epoch(
+            self.base, self._base_live, d.vectors[:d.count],
+            d.codes[:d.count], d.assigns[:d.count], d.live[:d.count])
+        n = int((remap >= 0).sum())
+        self.base = new_base
         self.epoch += 1
         self.version += 1
         self.stats.compactions += 1
         self._retire_sessions()
         self._reset_epoch_state()
+        self._apply_remap(remap)
         return {"epoch": self.epoch, "reason": reason, "n_live": n,
-                "dropped": int(alive_full.size - n),
+                "dropped": int(remap.size - n),
                 "seconds": time.perf_counter() - t0,
                 "layout_seconds": t_layout, "id_remap": remap}
+
+    def begin_compact(self, reason: str = "background") -> PendingCompaction:
+        """Start a zero-downtime compaction: snapshot this epoch and
+        return a ``PendingCompaction`` whose ``fold()`` can run on a
+        worker thread while searches and mutations keep flowing, and
+        whose ``install()`` swaps the new epoch in atomically (replaying
+        the post-snapshot mutation tail).  Only one may be pending;
+        threshold auto-compaction stands down while it is."""
+        if self._pending_compact is not None:
+            raise RuntimeError("a background compaction is already pending")
+        p = PendingCompaction(self, reason)
+        self._pending_compact = p
+        return p
+
+    # ------------------------------------------------------------------
+    # stable external ids (survive compaction renumbering)
+    # ------------------------------------------------------------------
+    def _apply_remap(self, remap: np.ndarray) -> None:
+        """Record a compaction renumbering and chain it into the
+        composed external-id map (external handles never change)."""
+        self.last_remap = remap
+        e2i = self._ext_to_int
+        valid = e2i >= 0
+        nxt = np.full(e2i.shape, -1, np.int64)
+        nxt[valid] = remap[e2i[valid]]
+        self._ext_to_int = nxt
+        i2e = np.full(self.n_total, -1, np.int64)
+        ext = np.nonzero(nxt >= 0)[0]
+        i2e[nxt[ext]] = ext
+        self._int_to_ext = i2e
+
+    def resolve_ids(self, external_ids) -> np.ndarray:
+        """Map stable external handles (gateway responses,
+        ``external_ids``) to current internal ids; -1 for handles that
+        were deleted or never issued.  Handles survive any number of
+        compactions — the map chains every ``last_remap``."""
+        e = np.asarray(external_ids, np.int64)
+        flat = e.ravel()
+        out = np.full(flat.shape, -1, np.int64)
+        ok = (flat >= 0) & (flat < self._ext_to_int.size)
+        ints = self._ext_to_int[flat[ok]]
+        live = self.live_mask()
+        out[ok] = np.where(
+            (ints >= 0) & live[np.clip(ints, 0, live.size - 1)], ints, -1)
+        return out.reshape(e.shape)
+
+    def external_ids(self, internal_ids) -> np.ndarray:
+        """Map current internal ids (e.g. ``SearchResult.ids``) to their
+        stable external handles; -1 pads pass through."""
+        i = np.asarray(internal_ids, np.int64)
+        flat = i.ravel()
+        out = np.full(flat.shape, -1, np.int64)
+        ok = (flat >= 0) & (flat < self._int_to_ext.size)
+        out[ok] = self._int_to_ext[flat[ok]]
+        return out.reshape(i.shape)
+
+    def _apply_tombstones(self, ids: np.ndarray) -> None:
+        """Install-time tombstone scatter: no version bump, stats, or
+        auto-compaction — the replayed deletes were already counted when
+        the caller issued them (``PendingCompaction.install``)."""
+        ids = np.asarray(ids, np.int64).ravel()
+        ids = np.unique(ids[ids >= 0])
+        if ids.size == 0:
+            return
+        nb = self.n_base
+        bids = ids[ids < nb]
+        dslots = ids[ids >= nb] - nb
+        self._dead_base += int(self._base_live[bids].sum())
+        self._base_live[bids] = False
+        self._delta.mark_dead(dslots)
+        if self._dev is not None:
+            dv = self._dev
+            dv.live_full = dv.live_full.at[jnp.asarray(ids)].set(False)
+            if dslots.size:
+                dv.delta_ids = dv.delta_ids.at[jnp.asarray(dslots)].set(-1)
 
     def restore_state(self, *, epoch: int, version: int,
                       base_live: np.ndarray, delta_vectors: np.ndarray,
@@ -481,8 +709,14 @@ class StreamingIndex:
         self._dev = None
         self.epoch = int(epoch)
         self.version = int(version)
+        # external-id state is not persisted (v2 bundles predate it): a
+        # restored stream re-issues identity handles over its id space
+        self._ext_to_int = np.arange(self.n_total, dtype=np.int64)
+        self._int_to_ext = np.arange(self.n_total, dtype=np.int64)
 
     def _maybe_auto_compact(self):
+        if self._pending_compact is not None:
+            return      # the background fold owns this epoch's compaction
         sc = self.stream_config
         if (sc.compact_delta_frac is not None
                 and self._delta.count > sc.compact_delta_frac

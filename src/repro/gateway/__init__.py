@@ -1,0 +1,19 @@
+"""Async serving gateway (DESIGN.md §10).
+
+Deadline-batched request queue + probe-signature admission over the
+compiled ``Searcher`` session layer, zero-downtime epoch handover for
+streaming indexes, and first-class pluggable telemetry::
+
+    from repro.gateway import Gateway, GatewayConfig, LogSink
+
+    with Gateway(index, k=10, nprobe=8,
+                 config=GatewayConfig(max_delay_ms=2.0, max_batch=64),
+                 sinks=(LogSink(),)) as gw:
+        ids = gw.search(q).ids          # blocking, or gw.submit(q) async
+        print(gw.stats()["telemetry"]["batch_fill"])
+"""
+from .gateway import Gateway, GatewayConfig, Handover  # noqa: F401
+from .loadgen import run_open_loop  # noqa: F401
+from .queue import PendingRequest, RequestQueue, RequestResult  # noqa: F401
+from .telemetry import (LatencyHistogram, LogSink, MemorySink,  # noqa: F401
+                        Telemetry, TelemetrySink)

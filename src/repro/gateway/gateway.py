@@ -1,0 +1,458 @@
+"""The async serving gateway (DESIGN.md §10).
+
+``Gateway`` turns the session layer into a service: single-query
+requests arrive continuously (``submit`` / ``search`` from any thread),
+wait in a deadline-batched queue (queue.py), and a dispatcher thread
+coalesces them into the pad-and-dispatch batch buckets the ``Searcher``
+sessions already AOT-compile — flushing on the oldest request's
+deadline or on a full bucket, whichever comes first.  Admission groups
+requests by probe signature so clustered tiles and the ``plan_reuse``
+cache stay hot across consecutive dispatches.
+
+Zero-downtime epoch handover (streaming indexes): ``compact_async``
+snapshots the epoch (``StreamingIndex.begin_compact``), folds it on a
+worker thread while the dispatcher keeps serving the pinned old-epoch
+session, and the dispatcher installs the new epoch atomically *between*
+batches — no in-flight request is dropped or stale-errored, and
+because responses carry stable external ids, results clients are
+holding remain valid across the swap (``resolve_ids``).
+
+Handover state machine::
+
+    IDLE --compact_async--> FOLDING --fold done--> READY
+    READY --dispatcher, between batches--> INSTALLING --> IDLE
+                (install + session refresh + width-ladder warmup)
+
+Telemetry is first-class and pluggable (telemetry.py): QPS, DCO,
+queue depth, batch-fill ratio, recall proxies, and p50/p95/p99 latency
+histograms via ``stats()`` plus a periodic structured JSON log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.params import SearchParams
+from ..core.stream.streaming import StaleSessionError, StreamingIndex
+from .queue import PendingRequest, RequestQueue, RequestResult
+from .telemetry import Telemetry, TelemetrySink
+
+_ADMISSION_MODES = ("signature", "fifo")
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayConfig:
+    """Gateway-side knobs (query knobs stay in ``SearchParams``).
+
+    max_delay_ms        micro-batch deadline: the longest a request may
+                        wait for co-batching before it flushes anyway
+    max_batch           coalescing target (clamped to the session's
+                        ``max_chunk``); a full bucket flushes early
+    admission           "signature" groups requests by their rank-0
+                        probed list (plan/tile locality), "fifo" is
+                        arrival order only
+    warmup              pre-compile the dispatch bucket (and, with
+                        plan_reuse, the whole union-width ladder) at
+                        startup and after each epoch swap
+    telemetry_interval_s  period of the structured telemetry log through
+                        the configured sinks (0 = no periodic log)
+    compact_delta_frac  background-handover trigger: delta slots exceed
+                        this fraction of the base (None = explicit only)
+    compact_dead_frac   background-handover trigger: tombstones exceed
+                        this fraction of the id space (None = explicit)
+    """
+    max_delay_ms: float = 2.0
+    max_batch: int = 256
+    admission: str = "signature"
+    warmup: bool = True
+    telemetry_interval_s: float = 0.0
+    compact_delta_frac: Optional[float] = None
+    compact_dead_frac: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_delay_ms < 0:
+            raise ValueError(
+                f"max_delay_ms must be >= 0, got {self.max_delay_ms}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.admission not in _ADMISSION_MODES:
+            raise ValueError(f"admission must be one of {_ADMISSION_MODES}, "
+                             f"got {self.admission!r}")
+        for name in ("compact_delta_frac", "compact_dead_frac"):
+            v = getattr(self, name)
+            if v is not None and not v > 0:
+                raise ValueError(f"{name} must be > 0 or None, got {v!r}")
+
+
+class Handover:
+    """Handle for one zero-downtime epoch swap (``compact_async``)."""
+
+    def __init__(self, pending):
+        self.pending = pending
+        self.state = "folding"     # folding -> ready -> installed | failed
+        self.info: Optional[dict] = None
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    def wait(self, timeout: Optional[float] = None) -> dict:
+        """Block until installed; returns the install info dict."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"handover still {self.state}")
+        if self.error is not None:
+            raise self.error
+        return self.info
+
+
+class Gateway:
+    """Deadline-batched serving front-end over any index exposing the
+    session protocol (``RairsIndex`` / ``StreamingIndex`` /
+    ``ShardedIndex``).  Create, submit from any thread, ``close()`` (or
+    use as a context manager) to drain and stop."""
+
+    def __init__(self, index, params: Optional[SearchParams] = None,
+                 config: Optional[GatewayConfig] = None,
+                 sinks: Tuple[TelemetrySink, ...] = (), **param_kwargs):
+        if params is None:
+            params = SearchParams(**param_kwargs)
+        elif param_kwargs:
+            params = dataclasses.replace(params, **param_kwargs)
+        self.index = index
+        self.params = params.resolve(index)
+        cfg = config or GatewayConfig()
+        if cfg.max_batch > self.params.max_chunk:
+            cfg = dataclasses.replace(cfg, max_batch=self.params.max_chunk)
+        self.config = cfg
+        self.telemetry = Telemetry()
+        self._sinks = tuple(sinks)
+        self._is_stream = isinstance(index, StreamingIndex)
+        if not self._is_stream and (cfg.compact_delta_frac is not None
+                                    or cfg.compact_dead_frac is not None):
+            raise ValueError("compact_*_frac thresholds need a "
+                             "StreamingIndex (nothing to compact otherwise)")
+        self.queue = RequestQueue(grouped=cfg.admission == "signature")
+        # host-side probe-signature scorer: centroids are frozen across
+        # compaction, so one copy serves every epoch
+        self._centroids = np.asarray(index.centroids, np.float32)
+        self._c2 = (self._centroids ** 2).sum(axis=1)
+        self._metric = index.config.metric
+        self._dim = int(self._centroids.shape[1])
+        self._lock = threading.RLock()   # session use + mutations + install
+        self._last_session = None
+        self._handover: Optional[Handover] = None
+        self._last_handover: Optional[dict] = None
+        self._last_emit = time.perf_counter()
+        self._closed = threading.Event()
+        with self._lock:
+            self._session_locked()       # build + warm the serving session
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="gateway-dispatch", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    # client API (any thread)
+    # ------------------------------------------------------------------
+    def submit(self, query, deadline_s: Optional[float] = None
+               ) -> PendingRequest:
+        """Enqueue one query vector; returns a future-like handle.
+        ``deadline_s`` tightens this request's flush deadline below the
+        gateway-wide ``max_delay_ms`` (it never loosens it)."""
+        if self._closed.is_set():
+            raise RuntimeError("gateway is closed")
+        q = np.asarray(query, np.float32)
+        if q.ndim == 2 and q.shape[0] == 1:
+            q = q[0]
+        if q.ndim != 1 or q.shape[0] != self._dim:
+            raise ValueError(
+                f"query must be ({self._dim},), got shape {q.shape}")
+        sig = self._signature(q) if self.queue.grouped else 0
+        deadline = (time.perf_counter() + deadline_s
+                    if deadline_s is not None else None)
+        req = PendingRequest(q, sig, deadline=deadline)
+        self.telemetry.inc("requests")
+        self.queue.put(req)
+        return req
+
+    def search(self, query, timeout: Optional[float] = None) -> RequestResult:
+        """Blocking single-query convenience over ``submit``."""
+        return self.submit(query).result(timeout)
+
+    # -- mutations (streaming indexes; serialized with dispatch) --------
+    def insert(self, x) -> np.ndarray:
+        """Insert vectors; returns their *stable external* ids (valid
+        across any number of epoch handovers)."""
+        self._require_stream("insert")
+        with self._lock:
+            ids = self.index.insert(x)
+            ext = self.index.external_ids(ids)
+        self.telemetry.inc("inserts", int(ext.size))
+        self._maybe_auto_handover()
+        return ext
+
+    def delete(self, external_ids) -> int:
+        """Tombstone items by their external ids; returns how many were
+        live.  Unknown / already-dead handles are a no-op."""
+        self._require_stream("delete")
+        with self._lock:
+            internal = self.index.resolve_ids(external_ids)
+            n = self.index.delete(internal[internal >= 0])
+        self.telemetry.inc("deletes", n)
+        self._maybe_auto_handover()
+        return n
+
+    def resolve_ids(self, external_ids) -> np.ndarray:
+        """Current internal ids for previously returned external ids."""
+        self._require_stream("resolve_ids")
+        with self._lock:
+            return self.index.resolve_ids(external_ids)
+
+    # -- zero-downtime handover -----------------------------------------
+    def compact_async(self, reason: str = "gateway") -> Handover:
+        """Start a background epoch handover; serving continues on the
+        old epoch until the dispatcher installs the folded one between
+        batches.  Returns a ``Handover`` to ``wait()`` on; idempotent
+        while one is in flight."""
+        self._require_stream("compact_async")
+        with self._lock:
+            if self._handover is not None:
+                return self._handover
+            pending = self.index.begin_compact(reason)
+            h = Handover(pending)
+            self._handover = h
+        threading.Thread(target=self._fold_worker, args=(h,),
+                         name="gateway-fold", daemon=True).start()
+        return h
+
+    def _fold_worker(self, h: Handover) -> None:
+        try:
+            h.pending.fold()
+            h.state = "ready"
+        except BaseException as e:   # surface through the handle
+            h.error = e
+            h.state = "failed"
+            h.pending.abort()
+            with self._lock:
+                self._handover = None
+            h._done.set()
+        self.queue.kick()            # wake the dispatcher to install
+
+    def _maybe_auto_handover(self) -> None:
+        c = self.config
+        st = self.index
+        if self._handover is not None:
+            return
+        n_delta_slots = st.n_total - st.n_base
+        if (c.compact_delta_frac is not None
+                and n_delta_slots > c.compact_delta_frac
+                * max(1, st.n_base)):
+            self.compact_async("delta_threshold")
+        elif (c.compact_dead_frac is not None
+                and st.n_dead > c.compact_dead_frac * max(1, st.n_total)):
+            self.compact_async("dead_threshold")
+
+    # ------------------------------------------------------------------
+    # observability / lifecycle
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """One coherent dict: telemetry snapshot, queue depth, handover
+        state, session compile stats, and (streaming) epoch state."""
+        h = self._handover
+        out = {
+            "telemetry": self.telemetry.snapshot(),
+            "queue_depth": self.queue.depth,
+            "closed": self._closed.is_set(),
+            "handover": {"state": h.state if h is not None else "idle",
+                         "last": self._last_handover},
+        }
+        sess = self._last_session
+        if sess is not None:
+            out["session"] = sess.compile_stats()
+        if self._is_stream:
+            st = self.index
+            out["stream"] = {"epoch": st.epoch, "version": st.version,
+                             "n_live": st.n_live, "n_delta": st.n_delta,
+                             "n_dead": st.n_dead}
+        return out
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain the queue, stop the dispatcher, emit a final record."""
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        self.queue.kick()
+        self._thread.join(timeout)
+        if self._sinks:
+            self.telemetry.emit(self._sinks, kind="gateway_final",
+                                extra={"queue_depth": self.queue.depth})
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # dispatcher internals
+    # ------------------------------------------------------------------
+    def _require_stream(self, what: str) -> None:
+        if not self._is_stream:
+            raise TypeError(f"{what} needs a StreamingIndex-backed gateway "
+                            f"(got {type(self.index).__name__})")
+
+    def _bucket_ladder(self) -> list:
+        """Every dispatch bucket a flush can land in: deadline flushes
+        carry anywhere from 1 to ``max_batch`` requests."""
+        p = self.params
+        top = p.bucket_for(min(self.config.max_batch, p.max_chunk))
+        if p.batch_buckets is not None:
+            return [b for b in p.batch_buckets if b <= top]
+        sizes, b = [], 1
+        while b <= top:
+            sizes.append(b)
+            b *= 2
+        return sizes
+
+    def _signature(self, q: np.ndarray) -> int:
+        """Rank-0 probed list, host-side (admission locality hint)."""
+        if self._metric == "ip":
+            return int(np.argmax(self._centroids @ q))
+        return int(np.argmin(self._c2 - 2.0 * (self._centroids @ q)))
+
+    def _session_locked(self):
+        """The current serving session; refreshed (and, on an epoch
+        change, width-warmed) when the index has moved past it."""
+        if self._is_stream:
+            sess = self.index.searcher(self.params)
+        elif self._last_session is None:
+            sess = self.index.searcher(self.params)
+        else:
+            sess = self._last_session
+        if sess is not self._last_session:
+            prev_epoch = getattr(self._last_session, "epoch", None)
+            if self.config.warmup and sess.epoch != prev_epoch:
+                # a new epoch starts with cold executable caches: pre-pay
+                # the compiles now, not on the first request — every
+                # batch bucket a partial flush can dispatch at (and with
+                # plan_reuse, each bucket's union-width ladder).  A
+                # pristine streaming session delegates to its base
+                # session — warm the delegate.
+                target = getattr(sess, "_delegate", None) or sess
+                before = target.stats.warmup_compiles
+                target.warmup_widths(*self._bucket_ladder())
+                self.telemetry.inc(
+                    "warmup_compiles",
+                    target.stats.warmup_compiles - before)
+            self._last_session = sess
+        return sess
+
+    def _serve_loop(self) -> None:
+        try:
+            while True:
+                self._install_if_ready()
+                self._maybe_emit()
+                if self._closed.is_set() and self.queue.depth == 0:
+                    break
+                due = self.queue.oldest_flush_at(
+                    self.config.max_delay_ms / 1e3)
+                if due is None:
+                    self.queue.wait_for_work(0.05)   # idle tick
+                    continue
+                if not self._closed.is_set():        # draining flushes now
+                    self.queue.wait_for_flush(self.config.max_batch, due)
+                batch = self.queue.take_batch(self.config.max_batch)
+                if batch:
+                    self._dispatch(batch)
+        finally:
+            for req in self.queue.take_batch(1 << 30):   # never strand
+                req._fail(RuntimeError("gateway closed"))
+
+    def _install_if_ready(self) -> None:
+        h = self._handover
+        if h is None or h.state != "ready":
+            return
+        try:
+            with self._lock:
+                info = h.pending.install()
+                self._session_locked()   # refresh + warm the new epoch
+        except BaseException as e:
+            h.error = e
+            h.state = "failed"
+        else:
+            h.info = info
+            h.state = "installed"
+            self._last_handover = {k: v for k, v in info.items()
+                                   if k != "id_remap"}
+            self.telemetry.inc("handovers")
+        with self._lock:
+            self._handover = None
+        h._done.set()
+
+    def _dispatch(self, batch) -> None:
+        tm = self.telemetry
+        t_take = time.perf_counter()
+        for r in batch:
+            tm.record_latency(tm.queue_wait, t_take - r.t_enqueue)
+        tm.gauge("queue_depth", self.queue.depth)
+        q = np.stack([r.query for r in batch])
+        try:
+            with self._lock:
+                res, epoch = self._search_locked(q)
+                ids = np.asarray(res.ids)
+                if self._is_stream:
+                    # responses carry stable external ids so clients
+                    # survive epoch handovers (resolve_ids maps back)
+                    ids = self.index.external_ids(ids)
+                else:
+                    ids = ids.astype(np.int64)
+                dists = np.asarray(res.dists)
+                approx = float(np.sum(np.asarray(res.approx_dco)))
+                refine = float(np.sum(np.asarray(res.refine_dco)))
+        except BaseException as e:
+            tm.inc("errors", len(batch))
+            for r in batch:
+                r._fail(e)
+            return
+        t_done = time.perf_counter()
+        tm.record_latency(tm.dispatch, t_done - t_take)
+        tm.inc("batches")
+        tm.inc("responses", len(batch))
+        tm.inc("bucket_rows", self.params.bucket_for(
+            min(len(batch), self.params.max_chunk)))
+        tm.add("approx_dco", approx)
+        tm.add("refine_dco", refine)
+        tm.add("result_slots", float(ids.size))
+        tm.add("result_filled", float((ids >= 0).sum()))
+        tm.add("top1_dist", float(dists[:, 0].sum()))
+        for i, r in enumerate(batch):
+            tm.record_latency(tm.latency, t_done - r.t_enqueue)
+            r._fulfill(RequestResult(
+                ids=ids[i], dists=dists[i], latency_s=t_done - r.t_enqueue,
+                queued_s=t_take - r.t_enqueue, batch=len(batch),
+                epoch=epoch))
+
+    def _search_locked(self, q: np.ndarray):
+        """Dispatch through the current session; a session staled by an
+        out-of-band mutation (the caller bypassing the gateway) is
+        refreshed and retried rather than surfacing to clients."""
+        last_err = None
+        for _ in range(3):
+            sess = self._session_locked()
+            try:
+                return sess(q), getattr(sess, "epoch", 0)
+            except StaleSessionError as e:
+                self.telemetry.inc("stale_retries")
+                last_err = e
+        raise last_err
+
+    def _maybe_emit(self) -> None:
+        iv = self.config.telemetry_interval_s
+        if not self._sinks or iv <= 0:
+            return
+        now = time.perf_counter()
+        if now - self._last_emit >= iv:
+            self._last_emit = now
+            self.telemetry.emit(self._sinks,
+                                extra={"queue_depth": self.queue.depth})

@@ -1,0 +1,106 @@
+"""Open-loop synthetic load generation for the gateway.
+
+Open-loop means arrivals follow their own clock (a Poisson process at
+``offered_qps``), not the server's: a slow server does not slow the
+generator down, so queueing delay shows up in the measured latency
+instead of being hidden by closed-loop back-pressure.  This is the
+load model the bench (``bench_serve``) and the CI gateway-smoke job
+drive.
+
+The per-request baseline the bench compares against is the same
+generator pointed at a gateway configured with ``max_batch=1`` /
+``max_delay_ms=0`` — identical queue, identical sessions, but every
+dispatch carries exactly one query — so the measured gap is purely the
+value of deadline coalescing.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def _pct(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = int(math.ceil(q / 100.0 * len(sorted_vals))) - 1
+    return sorted_vals[min(max(i, 0), len(sorted_vals) - 1)]
+
+
+def run_open_loop(gateway, queries: np.ndarray, offered_qps: float,
+                  n_requests: int, seed: int = 0,
+                  timeout_s: float = 60.0,
+                  exponential: bool = True,
+                  tick_ms: float = 2.0,
+                  on_request: Optional[Callable[[int], None]] = None
+                  ) -> dict:
+    """Drive ``n_requests`` single-query submissions at ``offered_qps``
+    and block for every response.
+
+    queries       (N, D) pool cycled through round-robin
+    exponential   Poisson arrivals (True) or a fixed inter-arrival gap
+    tick_ms       generator clock quantum: the generator wakes once per
+                  tick and submits every arrival whose scheduled time
+                  has passed, instead of one sleep per request — at high
+                  offered rates per-request sleeps turn the generator
+                  into a scheduler-churn benchmark (thousands of wakeups
+                  a second competing with the dispatch compute),
+                  drowning the system under test.  0 restores
+                  per-request pacing.
+    on_request    optional hook called after every submit with the
+                  request index — the churn/handover tests use it to
+                  interleave mutations with live traffic
+
+    Returns one load-point summary: achieved qps, error count, latency
+    percentiles (ms), and the mean coalesced batch size.
+    """
+    if offered_qps <= 0:
+        raise ValueError(f"offered_qps must be > 0, got {offered_qps}")
+    rng = np.random.default_rng(seed)
+    if exponential:
+        gaps = rng.exponential(1.0 / offered_qps, size=n_requests)
+    else:
+        gaps = np.full(n_requests, 1.0 / offered_qps)
+    arrivals = np.cumsum(gaps)
+
+    pending = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < n_requests:
+        now = time.perf_counter() - t0
+        while i < n_requests and arrivals[i] <= now:
+            pending.append(gateway.submit(queries[i % len(queries)]))
+            if on_request is not None:
+                on_request(i)
+            i += 1
+        if i < n_requests:
+            wait = arrivals[i] - (time.perf_counter() - t0)
+            time.sleep(max(wait, tick_ms / 1e3) if tick_ms > 0
+                       else max(wait, 0.0))
+
+    results, errors = [], 0
+    for req in pending:
+        try:
+            results.append(req.result(timeout_s))
+        except Exception:
+            errors += 1
+    t1 = time.perf_counter()
+
+    lat = sorted(r.latency_s for r in results)
+    wall = max(t1 - t0, 1e-9)
+    return {
+        "offered_qps": float(offered_qps),
+        "achieved_qps": len(results) / wall,
+        "n_requests": n_requests,
+        "n_ok": len(results),
+        "errors": errors,
+        "wall_s": wall,
+        "p50_ms": _pct(lat, 50) * 1e3,
+        "p95_ms": _pct(lat, 95) * 1e3,
+        "p99_ms": _pct(lat, 99) * 1e3,
+        "mean_latency_ms": (sum(lat) / len(lat) * 1e3) if lat else 0.0,
+        "mean_batch": (float(np.mean([r.batch for r in results]))
+                       if results else 0.0),
+    }

@@ -1,0 +1,160 @@
+"""Deadline-batched request queue with probe-signature admission.
+
+The queue is the gateway's coalescing buffer: single-query arrivals
+wait here until either the oldest request's flush deadline expires or a
+full dispatch bucket has accumulated — whichever comes first — and are
+then taken as one batch (``Gateway`` dispatches it through a compiled
+``Searcher`` bucket).
+
+Admission is *probe-signature-aware*: each request carries the id of
+its nearest centroid (its rank-0 probed list, computed host-side at
+submit time), and the queue keeps one FIFO lane per signature.
+``take_batch`` drains whole lanes oldest-first, so requests probing the
+same lists land in the same dispatch — exactly the traffic shape the
+clustered exec mode and the session ``plan_reuse`` cache are built for
+(queries sharing probed lists co-tile, and adjacent batches re-probe
+the same hot lists).  FIFO order is preserved *within* a lane, and
+lanes are served by the age of their oldest request, so signature
+grouping can reorder requests only within one flush window — bounded
+by the deadline, never starvation.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import List, NamedTuple, Optional
+
+
+class RequestResult(NamedTuple):
+    """What a completed request resolves to."""
+    ids: "object"          # (k,) int64 result ids (external ids under churn)
+    dists: "object"        # (k,) float32 exact distances
+    latency_s: float       # enqueue -> fulfilled
+    queued_s: float        # enqueue -> taken into a batch
+    batch: int             # coalesced batch size this request rode in
+    epoch: int             # index epoch that served it
+
+
+class PendingRequest:
+    """A submitted query: future-like handle the client blocks on."""
+
+    __slots__ = ("query", "t_enqueue", "deadline", "signature",
+                 "_event", "_result", "_error")
+
+    def __init__(self, query, signature: int,
+                 deadline: Optional[float] = None):
+        self.query = query
+        self.t_enqueue = time.perf_counter()
+        self.deadline = deadline      # absolute perf_counter time or None
+        self.signature = signature
+        self._event = threading.Event()
+        self._result: Optional[RequestResult] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RequestResult:
+        """Block until fulfilled; raises the dispatch error if it failed."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("gateway request not fulfilled in time")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    # -- fulfilled by the dispatcher ------------------------------------
+    def _fulfill(self, result: RequestResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+
+class RequestQueue:
+    """Signature-laned FIFO with a condition variable the dispatcher
+    sleeps on.  All methods are thread-safe."""
+
+    def __init__(self, grouped: bool = True):
+        self.grouped = grouped
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        # one FIFO lane per probe signature (signature 0 lane only when
+        # grouping is off); OrderedDict keeps lane creation order cheap
+        self._lanes: "collections.OrderedDict[int, collections.deque]" = \
+            collections.OrderedDict()
+        self._depth = 0
+
+    @property
+    def depth(self) -> int:
+        return self._depth
+
+    def put(self, req: PendingRequest) -> None:
+        key = req.signature if self.grouped else 0
+        with self._cond:
+            lane = self._lanes.get(key)
+            if lane is None:
+                lane = self._lanes[key] = collections.deque()
+            lane.append(req)
+            self._depth += 1
+            self._cond.notify()
+
+    def kick(self) -> None:
+        """Wake the dispatcher without enqueuing (close, handover-ready)."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def oldest_flush_at(self, max_delay: float) -> Optional[float]:
+        """Earliest moment any queued request must flush (perf_counter
+        time), honoring per-request deadlines; None when empty."""
+        with self._lock:
+            t = None
+            for lane in self._lanes.values():
+                if not lane:
+                    continue
+                r = lane[0]
+                due = r.t_enqueue + max_delay
+                if r.deadline is not None:
+                    due = min(due, r.deadline)
+                t = due if t is None else min(t, due)
+            return t
+
+    def wait_for_work(self, timeout: Optional[float]) -> None:
+        """Sleep until a request arrives, a kick, or the timeout."""
+        with self._cond:
+            if self._depth == 0:
+                self._cond.wait(timeout)
+
+    def wait_for_flush(self, max_batch: int, due: float) -> None:
+        """Sleep out the coalescing window: returns once ``max_batch``
+        requests have accumulated or the flush deadline ``due``
+        (perf_counter time) passes."""
+        with self._cond:
+            while self._depth < max_batch:
+                remaining = due - time.perf_counter()
+                if remaining <= 0:
+                    return
+                self._cond.wait(remaining)
+
+    def take_batch(self, max_batch: int) -> List[PendingRequest]:
+        """Drain up to ``max_batch`` requests, whole signature lanes at a
+        time, lanes ordered by their oldest member (never starves)."""
+        with self._lock:
+            if self._depth == 0:
+                return []
+            order = sorted(
+                (k for k, lane in self._lanes.items() if lane),
+                key=lambda k: self._lanes[k][0].t_enqueue)
+            out: List[PendingRequest] = []
+            for key in order:
+                lane = self._lanes[key]
+                while lane and len(out) < max_batch:
+                    out.append(lane.popleft())
+                if not lane:
+                    del self._lanes[key]
+                if len(out) >= max_batch:
+                    break
+            self._depth -= len(out)
+            return out

@@ -36,6 +36,21 @@ N-device mesh and serves through the identical session API
 
 On CPU hosts, virtual devices for smoke runs come from
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Gateway serving (DESIGN.md §10): ``--gateway`` swaps the closed-loop
+batch loop for the async serving gateway — an open-loop synthetic
+arrival generator submits single-query requests at ``--offered-qps``,
+the gateway coalesces them into compiled batch buckets on a
+``--max-delay-ms`` deadline (probe-signature admission keeps the
+plan cache hot), and the run prints per-load-point p50/p95/p99
+latency plus the gateway telemetry snapshot:
+
+``... --gateway --offered-qps 200,400,800 --gateway-requests 512``
+
+Combined with churn ops, ``--gateway --compact`` exercises the
+zero-downtime epoch handover: the compaction folds on a background
+thread while requests keep flowing, and the new epoch installs
+between batches.
 """
 from __future__ import annotations
 
@@ -94,8 +109,64 @@ def apply_stream_ops(index, args, x, rows_used: int):
     return stream, rows_used
 
 
+def run_gateway(serving, args, q, compact_async: bool = False):
+    """Serve an open-loop synthetic arrival stream through the async
+    gateway at each offered load point; with ``compact_async``, kick a
+    zero-downtime epoch handover mid-stream (streaming indexes)."""
+    from repro.gateway import Gateway, GatewayConfig, LogSink, run_open_loop
+
+    cfg = GatewayConfig(max_delay_ms=args.max_delay_ms,
+                        max_batch=args.max_batch,
+                        admission=args.admission,
+                        telemetry_interval_s=args.telemetry_interval)
+    sinks = (LogSink(),) if args.telemetry_interval > 0 else ()
+    params = SearchParams(
+        k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
+        exec_mode=args.exec_mode, use_kernel=args.use_kernel,
+        fused_topk=args.fused_topk, plan_reuse=args.plan_reuse)
+    with Gateway(serving, params, config=cfg, sinks=sinks) as gw:
+        for point, qps in enumerate(args.offered_qps):
+            handover = None
+            if compact_async and point == 0:
+                # fire the handover after ~1/4 of the stream so it folds
+                # under live traffic and installs between batches
+                trigger = max(1, args.gateway_requests // 4)
+
+                def on_request(i, gw=gw, trigger=trigger):
+                    nonlocal handover
+                    if i == trigger and handover is None:
+                        handover = gw.compact_async("serve_cli")
+            else:
+                on_request = None
+            out = run_open_loop(gw, np.asarray(q), qps,
+                                args.gateway_requests, seed=point,
+                                on_request=on_request)
+            print(f"load {qps:g} qps: achieved={out['achieved_qps']:.0f} "
+                  f"p50={out['p50_ms']:.2f}ms p95={out['p95_ms']:.2f}ms "
+                  f"p99={out['p99_ms']:.2f}ms "
+                  f"mean_batch={out['mean_batch']:.1f} "
+                  f"errors={out['errors']}")
+            if handover is not None:
+                info = handover.wait(300)
+                print(f"  handover installed: epoch={info['epoch']} "
+                      f"replayed_inserts={info['replayed_inserts']} "
+                      f"replayed_deletes={info['replayed_deletes']}")
+        tel = gw.stats()["telemetry"]
+        print(f"gateway: qps={tel['qps']:.0f} "
+              f"batch_fill={tel['batch_fill']:.1f} "
+              f"bucket_fill={tel['bucket_fill']:.2f} "
+              f"p50={tel['latency']['p50_ms']:.2f}ms "
+              f"p99={tel['latency']['p99_ms']:.2f}ms "
+              f"counters={tel['counters']}")
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="Async serving: --gateway runs the deadline-batched "
+               "gateway (repro.gateway) behind an open-loop arrival "
+               "generator instead of the closed-loop batch loop; see "
+               "DESIGN.md §10 and `python -m repro.launch.serve "
+               "--gateway --offered-qps 200,400 --gateway-requests 256`.")
     ap.add_argument("--dataset", default="sift1m")
     ap.add_argument("--strategy", default="rair",
                     choices=available_strategies())
@@ -141,7 +212,34 @@ def main():
     ap.add_argument("--shards", type=int, default=0, metavar="N",
                     help="with --save: write a v3 sharded bundle "
                          "(manifest + N per-shard npz files)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve an open-loop arrival stream through the "
+                         "async deadline-batched gateway (DESIGN.md §10) "
+                         "instead of the closed-loop batch loop")
+    ap.add_argument("--offered-qps", default="200",
+                    help="comma-separated open-loop load points "
+                         "(requests/s) for --gateway")
+    ap.add_argument("--gateway-requests", type=int, default=256,
+                    metavar="N", help="requests per load point")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="gateway micro-batch flush deadline")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="gateway coalescing target (flushes early when "
+                         "a full bucket accumulates)")
+    ap.add_argument("--admission", default="signature",
+                    choices=("signature", "fifo"),
+                    help="gateway admission: group requests by rank-0 "
+                         "probed list, or plain arrival order")
+    ap.add_argument("--telemetry-interval", type=float, default=0.0,
+                    metavar="S", help="emit a structured gateway "
+                         "telemetry line every S seconds (0 = off)")
     args = ap.parse_args()
+    try:
+        args.offered_qps = [float(v) for v in
+                            str(args.offered_qps).split(",") if v]
+    except ValueError:
+        ap.error(f"--offered-qps must be comma-separated numbers, "
+                 f"got {args.offered_qps!r}")
     if args.ndev:
         avail = len(jax.devices())
         if args.ndev > avail:
@@ -157,6 +255,14 @@ def main():
         ap.error("--plan-reuse needs --exec-mode grouped or clustered "
                  "(paged scans have no block union to reuse)")
     stream_ops = bool(args.insert or args.delete or args.compact)
+    gateway_handover = bool(args.gateway and args.compact)
+    if gateway_handover:
+        if args.ndev:
+            ap.error("--gateway --compact needs the un-sharded streaming "
+                     "index (the handover folds a StreamingIndex epoch)")
+        # the gateway runs the compaction as a zero-downtime handover
+        # mid-stream instead of a blocking fold before serving starts
+        args.compact = False
     if args.load and args.save and not stream_ops:
         ap.error("--save with --load needs stream ops (an unmutated "
                  "loaded bundle is never re-written); add "
@@ -226,6 +332,9 @@ def main():
         print(f"serving over a {args.ndev}-device mesh (block/vector "
               f"shards of ~{base.stats.n_blocks // args.ndev} blocks; "
               f"same session API)")
+    if args.gateway:
+        run_gateway(serving, args, q, compact_async=gateway_handover)
+        return
     searcher = serving.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel,
