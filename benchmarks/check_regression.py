@@ -1,0 +1,232 @@
+"""Perf-regression gate over the committed BENCH_*.json summaries.
+
+``PYTHONPATH=src python -m benchmarks.check_regression``            # all
+``... check_regression plan=/tmp/BENCH_plan_unit.json trace=...``   # some
+
+Each committed benchmark summary carries machine-checkable invariants
+— per-stage DCO splits, union-cut ratios, plan reuse rates, modeled
+HBM traffic reductions, id-parity counts, stage-time attribution —
+that hold at ANY scale and on ANY machine.  This gate asserts those,
+and deliberately never a wall-clock number: CI runners are noisy, but
+"the fused scan writes >= 4x fewer bytes", "the traced dispatch
+returned identical ids", and "the clustered tile union is a strict cut
+of the batch union" are exact at unit scale and at sift1m alike.
+
+CI smoke jobs run a unit-scale bench into a temp file and gate it with
+``kind=/path.json``; with no arguments the gate re-validates every
+committed repo-root baseline, so a PR that regenerates a BENCH_*.json
+with a regressed invariant fails even if no smoke re-runs that bench.
+
+Pure stdlib on purpose (no jax, no repro import): the gate must be
+runnable before, after, and regardless of the accelerator stack.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, Dict
+
+_REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+_SCHEMA_EXPECTED = {"engine": 1, "stream": 1, "dist": 1, "plan": 1,
+                    "fused": 1, "serve": 1, "trace": 1}
+
+
+class Gate:
+    """Collects named invariant checks; remembers every failure."""
+
+    def __init__(self):
+        self.checks = 0
+        self.failures = []
+
+    def check(self, ok: bool, label: str, detail: str = "") -> None:
+        self.checks += 1
+        if ok:
+            print(f"  ok   {label}")
+        else:
+            self.failures.append(f"{label}: {detail}" if detail else label)
+            print(f"  FAIL {label}  {detail}")
+
+
+def _schema(g: Gate, kind: str, d: dict) -> None:
+    want = _SCHEMA_EXPECTED[kind]
+    g.check(d.get("schema_version") == want,
+            f"{kind}.schema_version == {want}",
+            f"got {d.get('schema_version')!r}")
+
+
+def check_engine(g: Gate, d: dict) -> None:
+    g.check(d.get("id_mismatch_points") == 0,
+            "engine: exec modes agree on ids at every config",
+            f"id_mismatch_points={d.get('id_mismatch_points')}")
+    g.check(all(0.0 <= c["recall"] <= 1.0 and c["dco"] > 0
+                for c in d.get("configs", [])),
+            "engine: every config has sane recall and nonzero DCO")
+
+
+def check_stream(g: Gate, d: dict) -> None:
+    g.check(d.get("delta_layout_builds") == 0,
+            "stream: delta appends never rebuild the layout",
+            f"delta_layout_builds={d.get('delta_layout_builds')}")
+    g.check(d.get("append_speedup", 0) > 1.0,
+            "stream: delta append beats legacy rebuild",
+            f"append_speedup={d.get('append_speedup')}")
+    g.check(d.get("recall_post_compact", 0) >=
+            d.get("recall_churn", 1) - 0.02,
+            "stream: compaction does not lose recall",
+            f"churn={d.get('recall_churn')} "
+            f"post_compact={d.get('recall_post_compact')}")
+
+
+def check_dist(g: Gate, d: dict) -> None:
+    g.check(d.get("one_dev_id_mismatch_points") == 0,
+            "dist: 1-device sharded session matches plain searcher bitwise",
+            f"one_dev_id_mismatch_points="
+            f"{d.get('one_dev_id_mismatch_points')}")
+    by_mode = {}
+    for c in d.get("configs", []):
+        by_mode.setdefault(c["exec_mode"], []).append(c["dco"])
+    # shard-count padding moves a few blocks between shards, so DCO
+    # drifts a fraction of a percent — but it must never *scale* with
+    # device count (work moves across the mesh, it does not grow)
+    g.check(all(max(dcos) / min(dcos) < 1.05
+                for dcos in by_mode.values() if dcos),
+            "dist: total DCO stays flat across device counts",
+            f"dco spread={ {m: (min(v), max(v)) for m, v in by_mode.items()} }")
+
+
+def check_plan(g: Gate, d: dict) -> None:
+    g.check(d.get("id_mismatch_points") == 0,
+            "plan: clustered/planned scans agree with paged ids",
+            f"id_mismatch_points={d.get('id_mismatch_points')}")
+    for name, s in d.get("streams", {}).items():
+        g.check(s.get("union_reduction", 0) > 1.0,
+                f"plan[{name}]: tile union is a strict cut of the "
+                f"batch union",
+                f"union_reduction={s.get('union_reduction')}")
+        p = s.get("plan", {})
+        tiles = p.get("tiles", 0)
+        reuse = (p.get("hits", 0) + p.get("extends", 0)) / tiles \
+            if tiles else 0.0
+        g.check(p.get("hits", 0) + p.get("extends", 0) +
+                p.get("misses", 0) == tiles,
+                f"plan[{name}]: hit/extend/miss partition the tiles",
+                f"plan={p}")
+        g.check(reuse > 0.0,
+                f"plan[{name}]: plan cache reuses at least one tile",
+                f"reuse_rate={reuse:.3f}")
+    dr = d.get("delta_routing", {})
+    g.check(dr.get("dco_reduction", 0) > 1.0,
+            "plan: routed delta scan cuts delta DCO vs exhaustive",
+            f"dco_reduction={dr.get('dco_reduction')}")
+
+
+def check_fused(g: Gate, d: dict) -> None:
+    m = d.get("modeled_bytes_per_query", {})
+    g.check(m.get("write_reduction_x", 0) >= 4.0,
+            "fused: modeled scan-stage HBM write reduction >= 4x",
+            f"write_reduction_x={m.get('write_reduction_x')}")
+    g.check(m.get("roundtrip_reduction_x", 0) >= 4.0,
+            "fused: modeled scan/finalize roundtrip reduction >= 4x",
+            f"roundtrip_reduction_x={m.get('roundtrip_reduction_x')}")
+    g.check(m.get("fused_scan_write", 1) < m.get("unfused_scan_write", 0),
+            "fused: fused write strictly below unfused")
+    g.check(all(row.get("ids_equal") for row in d.get("modes", [])),
+            "fused: fused top-k returns identical ids in every exec mode",
+            f"modes={[r.get('ids_equal') for r in d.get('modes', [])]}")
+
+
+def check_serve(g: Gate, d: dict) -> None:
+    errs = sum(pt["batched"].get("errors", 1) +
+               pt["per_request"].get("errors", 1)
+               for pt in d.get("points", []))
+    g.check(errs == 0, "serve: no request failed or timed out",
+            f"errors={errs}")
+    g.check(d.get("batched", {}).get("batch_fill", 0) > 1.0,
+            "serve: the deadline batcher actually coalesces",
+            f"batch_fill={d.get('batched', {}).get('batch_fill')}")
+    g.check(max((pt.get("speedup", 0) for pt in d.get("points", [])),
+                default=0) >= 2.0,
+            "serve: batched >= 2x per-request at some offered load",
+            f"speedups="
+            f"{[round(pt.get('speedup', 0), 2) for pt in d.get('points', [])]}")
+
+
+def check_trace(g: Gate, d: dict) -> None:
+    g.check(d.get("traced_id_mismatch_points") == 0,
+            "trace: traced dispatch returns bitwise-identical ids",
+            f"traced_id_mismatch_points="
+            f"{d.get('traced_id_mismatch_points')}")
+    floor = d.get("min_attribution", 0.95)
+    for c in d.get("configs", []):
+        g.check(c.get("stage_attribution", 0) >= floor,
+                f"trace[{c.get('config')}]: stage spans attribute >= "
+                f"{floor:.0%} of dispatch time",
+                f"stage_attribution={c.get('stage_attribution')}")
+        g.check(c.get("fences", 0) > 0 and bool(c.get("dco_per_stage")),
+                f"trace[{c.get('config')}]: device fences + per-stage "
+                f"DCO recorded")
+    m = d.get("hbm_model", {}).get("bytes_per_query", {})
+    g.check(m.get("write_reduction_x", 0) >= 4.0,
+            "trace: session HBM model matches the fused-bench floor",
+            f"write_reduction_x={m.get('write_reduction_x')}")
+
+
+_CHECKERS: Dict[str, Callable[[Gate, dict], None]] = {
+    "engine": check_engine, "stream": check_stream, "dist": check_dist,
+    "plan": check_plan, "fused": check_fused, "serve": check_serve,
+    "trace": check_trace,
+}
+
+
+def run(targets: Dict[str, str]) -> int:
+    g = Gate()
+    for kind, path in sorted(targets.items()):
+        print(f"[{kind}] {path}")
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, ValueError) as e:
+            g.checks += 1
+            g.failures.append(f"{kind}: unreadable {path}: {e}")
+            print(f"  FAIL unreadable: {e}")
+            continue
+        _schema(g, kind, d)
+        _CHECKERS[kind](g, d)
+    print(f"{g.checks} invariant checks, {len(g.failures)} failure(s)")
+    for f in g.failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    return 1 if g.failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate machine-checkable BENCH_*.json invariants "
+                    "(never wall-clock).")
+    ap.add_argument("targets", nargs="*", metavar="KIND=PATH",
+                    help="bench summaries to gate, e.g. "
+                         "plan=/tmp/BENCH_plan_unit.json; with no "
+                         "targets, validates every committed repo-root "
+                         "BENCH_*.json baseline")
+    args = ap.parse_args(argv)
+    if args.targets:
+        targets = {}
+        for t in args.targets:
+            kind, sep, path = t.partition("=")
+            if not sep or kind not in _CHECKERS:
+                ap.error(f"target {t!r} is not KIND=PATH with KIND in "
+                         f"{sorted(_CHECKERS)}")
+            targets[kind] = path
+    else:
+        targets = {k: p for k in _CHECKERS
+                   if os.path.exists(p := os.path.join(_REPO,
+                                                       f"BENCH_{k}.json"))}
+        missing = sorted(set(_CHECKERS) - set(targets))
+        if missing:
+            print(f"(no committed baseline yet for: {', '.join(missing)})")
+    return run(targets)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,11 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.configs.base import SHAPES
 from repro.launch.shapes import LONG_KNN_CFG
+# The ANN scan-stage HBM model lives with the serving stats schema so
+# benchmark reports (bench_fused) and live serving snapshots
+# (repro.obs.snapshot_all) use identical accounting; re-exported here
+# because this module owns the repo's HBM-traffic bookkeeping.
+from repro.obs.stats import scan_traffic_model  # noqa: F401
 
 PEAK = 197e12
 HBM = 819e9

@@ -19,7 +19,14 @@ before the run), and the fused scan->top-k bench with
 plus QPS per exec mode — the CI ``kernel-smoke`` guard), and the
 gateway serving bench with ``BENCH_serve.json`` (deadline-batched vs
 per-request throughput and p50/p99 latency per open-loop offered load
-point — the CI ``gateway-smoke`` guard).
+point — the CI ``gateway-smoke`` guard), and the stage-trace bench
+with ``BENCH_trace.json`` (per-stage wall-time/DCO breakdown from
+tracer spans with >= 95% dispatch-time attribution asserted,
+single-host and sharded — the stage-attributed view of the
+BENCH_dist.json multi-device cliff; DESIGN.md §11).
+
+``benchmarks/check_regression.py`` consumes the committed BENCH_*.json
+files and gates CI on machine-checkable invariants (never wall-clock).
 """
 from __future__ import annotations
 
@@ -44,12 +51,15 @@ FUSED_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_fused.json")
 SERVE_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_serve.json")
+TRACE_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_trace.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
 DIST_JSON_SCHEMA_VERSION = 1
 PLAN_JSON_SCHEMA_VERSION = 1
 FUSED_JSON_SCHEMA_VERSION = 1
 SERVE_JSON_SCHEMA_VERSION = 1
+TRACE_JSON_SCHEMA_VERSION = 1
 
 
 def _write_summary_json(label: str, schema_version: int, body: dict,
@@ -124,6 +134,17 @@ def write_serve_json(serve_out: dict, dataset: str, path: str) -> None:
                         dataset, path)
 
 
+def write_trace_json(trace_out: dict, dataset: str, path: str) -> None:
+    """Persist the stage-trace bench (per-stage time/DCO breakdown and
+    attribution, single-host + sharded — DESIGN.md §11)."""
+    import jax
+    _write_summary_json("trace", TRACE_JSON_SCHEMA_VERSION, {
+        "devices_available": len(jax.devices()),
+        "platform": jax.devices()[0].platform,
+        **trace_out,
+    }, dataset, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -146,6 +167,9 @@ def main() -> None:
     ap.add_argument("--serve-json", type=str, default=SERVE_JSON_DEFAULT,
                     help="where the gateway serving bench writes its "
                          "machine-readable summary ('' disables)")
+    ap.add_argument("--trace-json", type=str, default=TRACE_JSON_DEFAULT,
+                    help="where the stage-trace bench writes its machine-"
+                         "readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
                          "BENCH_*.json files")
@@ -172,6 +196,8 @@ def main() -> None:
                 write_fused_json(out, args.bench_dataset, args.fused_json)
             if name == "serve" and args.serve_json:
                 write_serve_json(out, args.bench_dataset, args.serve_json)
+            if name == "trace" and args.trace_json:
+                write_trace_json(out, args.bench_dataset, args.trace_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -212,6 +238,7 @@ def _bench_list(args):
         ("dist", lambda: suite.bench_dist(dataset=args.bench_dataset)),
         ("fused", lambda: suite.bench_fused(dataset=args.bench_dataset)),
         ("serve", lambda: suite.bench_serve(dataset=args.bench_dataset)),
+        ("trace", lambda: suite.bench_trace(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

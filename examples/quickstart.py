@@ -125,3 +125,28 @@ with Gateway(index, params,
           f"{snap['counters']['batches']} dispatches "
           f"(batch_fill={snap['batch_fill']:.1f}, "
           f"p99={snap['latency']['p99_ms']:.1f}ms)")
+
+# 11. x-ray the dispatch: with a tracer active every engine stage is a
+#     fenced span (device time + per-stage DCO); off, tracing costs
+#     literally nothing and results are bitwise identical either way.
+#     write_trace emits Chrome/Perfetto trace-event JSON — drop it on
+#     ui.perfetto.dev — and snapshot_all unifies session, gateway, HBM-
+#     model, and per-stage trace stats in one dict (DESIGN.md §11)
+from repro import obs
+
+searcher = index.searcher(params)
+ref = searcher(queries[:64])
+with obs.trace():
+    searcher(queries[:64])              # first traced call compiles stages
+with obs.trace() as tr:
+    traced = searcher(queries[:64])
+assert np.array_equal(np.asarray(traced.ids), np.asarray(ref.ids))
+trace_path = os.path.join(tempfile.mkdtemp(), "quickstart_trace.json")
+obs.write_trace(tr, trace_path)
+snap = obs.snapshot_all(searcher=searcher, tracer=tr)
+stages = {n.removeprefix("stage."): f"{v['mean_ms']:.2f}ms"
+          for n, v in sorted(tr.stage_summary().items())
+          if n.startswith("stage.")}
+print(f"traced dispatch == untraced (64 queries); per-stage {stages}; "
+      f"attribution={snap['trace']['stage_attribution']:.0%} -> "
+      f"{trace_path}")

@@ -56,7 +56,7 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
                      oversample: int = 2, exec_mode: str = "paged",
                      query_tile: int = 8, axes=("data",), ndev: int = 1,
                      streaming: bool = False, use_kernel: bool = False,
-                     fused_topk: bool = False):
+                     fused_topk: bool = False, stage: str = "all"):
     """Build the per-device serve step for shard_map.
 
     Returns ``serve(block_codes, block_ids, block_other, owned,
@@ -67,14 +67,26 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
     scalars (sharded (ndev,) arrays), and everything else replicates.
     With ``streaming=False`` the delta/live arguments are zero-width
     placeholders and the streaming merge is compiled out.
+
+    ``stage`` is the tracing split (DESIGN.md §11): ``"all"`` (default)
+    is the production fused program; ``"scan"`` runs everything through
+    the local preselect and returns the per-device candidate streams
+    ``(l_d, l_ids, approx_dco, scanned, dropped)`` (counters psum'd);
+    ``"tail"`` takes ``(vectors, vec_lo, queries, l_d, l_ids)`` and runs
+    the all_gather + shared finalize.  ``"scan"`` then ``"tail"``
+    composes to exactly ``"all"`` — same per-device ops, same
+    collectives — so results stay bitwise identical (asserted in
+    tests/test_obs.py).
     """
+    if stage not in ("all", "scan", "tail"):
+        raise ValueError(f"stage must be all|scan|tail, got {stage!r}")
     fetch = bigk * (oversample if dedup_results else 1)
     axes = tuple(axes)
 
-    def serve(block_codes, block_ids, block_other, owned, owned_other,
-              refs, refs_other, misc, centroids, codebooks, vectors,
-              vec_lo, block_lo, dev_rank, delta_codes, delta_ids, live,
-              queries):
+    def scan_half(block_codes, block_ids, block_other, owned, owned_other,
+                  refs, refs_other, misc, centroids, codebooks, vectors,
+                  vec_lo, block_lo, dev_rank, delta_codes, delta_ids, live,
+                  queries):
         # -- replicated control path: list selection + dedup + local plan
         # (identical on every device; no collective needed)
         selection = select_lists(queries, centroids, nprobe=nprobe,
@@ -130,26 +142,47 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
             flat_d = jnp.where(dead, jnp.inf, flat_d)
             approx_dco = approx_dco + jnp.sum(mine).astype(jnp.int32)
 
-        # -- collective 1: local stable top-fetch, all_gather the streams
-        # (with fused_topk + no streaming merge the stream is already the
+        # -- collective 1 (first half): local stable top-fetch.  (With
+        # fused_topk + no streaming merge the stream is already the
         # stable top-fetch; the preselect is then a width-preserving
-        # stable sort, harmless and shape-identical)
+        # stable sort, harmless and shape-identical.)
         l_d, l_ids = preselect_candidates(flat_d, flat_i, fetch=fetch)
+        return (l_d, l_ids,
+                jax.lax.psum(approx_dco, axes),
+                jax.lax.psum(scan.scanned_blocks, axes),
+                jax.lax.psum(plan.dropped, axes))
+
+    def tail_half(vectors, vec_lo, queries, l_d, l_ids):
+        # -- collective 1 (second half): all_gather the candidate streams
         g_d = jax.lax.all_gather(l_d, axes, axis=1, tiled=True)
         g_ids = jax.lax.all_gather(l_ids, axes, axis=1, tiled=True)
-
         # -- shared finalize tail; collective 2: pmin of owner-scored
         # exact distances (vec_lo windows the row shard)
-        out_ids, out_d, refine_dco = finalize_candidates(
+        return finalize_candidates(
             g_d, g_ids, bigk=bigk, k=k, vectors=vectors, queries=queries,
             metric=metric, dedup_results=dedup_results,
             oversample=oversample, vec_lo=vec_lo[0], reduce_axes=axes)
+
+    if stage == "scan":
+        return scan_half
+    if stage == "tail":
+        return tail_half
+
+    def serve(block_codes, block_ids, block_other, owned, owned_other,
+              refs, refs_other, misc, centroids, codebooks, vectors,
+              vec_lo, block_lo, dev_rank, delta_codes, delta_ids, live,
+              queries):
+        l_d, l_ids, approx_dco, scanned, dropped = scan_half(
+            block_codes, block_ids, block_other, owned, owned_other,
+            refs, refs_other, misc, centroids, codebooks, vectors,
+            vec_lo, block_lo, dev_rank, delta_codes, delta_ids, live,
+            queries)
+        out_ids, out_d, refine_dco = tail_half(vectors, vec_lo, queries,
+                                               l_d, l_ids)
         return SearchResult(
-            ids=out_ids, dists=out_d,
-            approx_dco=jax.lax.psum(approx_dco, axes),
-            refine_dco=refine_dco,
-            scanned_blocks=jax.lax.psum(scan.scanned_blocks, axes),
-            dropped_blocks=jax.lax.psum(plan.dropped, axes))
+            ids=out_ids, dists=out_d, approx_dco=approx_dco,
+            refine_dco=refine_dco, scanned_blocks=scanned,
+            dropped_blocks=dropped)
 
     return serve
 

@@ -37,7 +37,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from .. import obs
 from .engine import (PlanProbe, cluster_order, finalize_candidates,
                      plan_blocks, scan_blocks, scan_blocks_topk,
                      select_lists, store_from_arrays, tables_from_arrays,
@@ -106,6 +108,110 @@ def seil_search(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,
         oversample=oversample)
+    return SearchResult(
+        ids=out_ids, dists=out_d, approx_dco=scan.approx_dco,
+        refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,
+        dropped_blocks=plan.dropped)
+
+
+# ---------------------------------------------------------------------------
+# traced pipeline — seil_search cut at its four stage boundaries
+# (DESIGN.md §11).
+#
+# With a tracer active (repro/obs/) sessions dispatch through
+# ``seil_search_traced`` instead of the monolithic executable: the same
+# four engine stages, one jitted program each, with an obs span + device
+# fence at every boundary so each span's duration covers that stage's
+# device time.  Splitting at jit boundaries preserves bitwise results —
+# the same invariant the plan_reuse split (probe_plan + scan_finalize)
+# already relies on — asserted against seil_search in tests/test_obs.py.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "metric"))
+def _stage_select(centroids, queries, *, nprobe, metric):
+    return select_lists(queries, centroids, nprobe=nprobe, metric=metric)
+
+
+@functools.partial(jax.jit, static_argnames=("max_scan", "metric"))
+def _stage_plan(arrays, codebook, selection, queries, *, max_scan, metric):
+    plan = plan_blocks(tables_from_arrays(arrays), selection,
+                       max_scan=max_scan)
+    lut = (pq_lut(codebook, queries) if metric == "l2"
+           else pq_lut_ip(codebook, queries))
+    return plan, lut
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fetch", "exec_mode", "use_kernel", "query_tile",
+                     "fused_topk", "has_live"))
+def _stage_scan(arrays, plan, lut, selection, live, *, fetch, exec_mode,
+                use_kernel, query_tile, fused_topk, has_live):
+    if fused_topk:
+        return scan_blocks_topk(
+            store_from_arrays(arrays), plan, lut, selection.rank_of,
+            fetch=fetch, exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, sel=selection.sel,
+            live=live if has_live else None)
+    return scan_blocks(store_from_arrays(arrays), plan, lut,
+                       selection.rank_of, exec_mode=exec_mode,
+                       use_kernel=use_kernel, query_tile=query_tile,
+                       sel=selection.sel)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bigk", "k", "metric", "dedup_results", "oversample"))
+def _stage_finalize(vectors, queries, flat_d, flat_i, *, bigk, k, metric,
+                    dedup_results, oversample):
+    return finalize_candidates(
+        flat_d, flat_i, bigk=bigk, k=k, vectors=vectors, queries=queries,
+        metric=metric, dedup_results=dedup_results, oversample=oversample)
+
+
+def seil_search_traced(
+    arrays: SeilArrays,
+    centroids: jnp.ndarray,
+    codebook: PQCodebook,
+    vectors: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    nprobe: int,
+    bigk: int,
+    k: int,
+    max_scan: int,
+    metric: str = "l2",
+    dedup_results: bool = True,
+    use_kernel: bool = False,
+    oversample: int = 2,
+    exec_mode: str = "paged",
+    query_tile: int = 8,
+    fused_topk: bool = False,
+) -> SearchResult:
+    """Stage-fenced ``seil_search`` for tracing: identical composition,
+    one program per stage, span + fence at each boundary."""
+    with obs.span("stage.select_lists", cat="device", nprobe=nprobe):
+        selection = obs.fence(_stage_select(centroids, queries,
+                                            nprobe=nprobe, metric=metric))
+    with obs.span("stage.plan_blocks", cat="device", max_scan=max_scan):
+        plan, lut = obs.fence(_stage_plan(arrays, codebook, selection,
+                                          queries, max_scan=max_scan,
+                                          metric=metric))
+    name = "stage.scan_blocks_topk" if fused_topk else "stage.scan_blocks"
+    with obs.span(name, cat="device", exec_mode=exec_mode) as sp:
+        scan = obs.fence(_stage_scan(
+            arrays, plan, lut, selection, lut,   # live unused (has_live=F)
+            fetch=finalize_fetch(bigk, oversample, dedup_results),
+            exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, fused_topk=fused_topk, has_live=False))
+        sp.add(approx_dco=int(np.sum(np.asarray(scan.approx_dco))),
+               scanned_blocks=int(np.sum(np.asarray(scan.scanned_blocks))))
+    with obs.span("stage.finalize", cat="device") as sp:
+        out_ids, out_d, refine_dco = obs.fence(_stage_finalize(
+            vectors, queries, scan.flat_d, scan.flat_i, bigk=bigk, k=k,
+            metric=metric, dedup_results=dedup_results,
+            oversample=oversample))
+        sp.add(refine_dco=int(np.sum(np.asarray(refine_dco))))
     return SearchResult(
         ids=out_ids, dists=out_d, approx_dco=scan.approx_dco,
         refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,

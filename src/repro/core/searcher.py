@@ -32,10 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .engine import (BIG, merge_unions_host, plan_width, tile_signatures,
                      union_live, width_buckets)
 from .params import SearchParams
-from .search import SearchResult, probe_plan, scan_finalize, seil_search
+from .search import (SearchResult, probe_plan, scan_finalize, seil_search,
+                     seil_search_traced)
 
 
 @dataclasses.dataclass
@@ -191,7 +193,8 @@ class Searcher:
         cache = self._compiled if cache is None else cache
         hit = key in cache
         if not hit:
-            cache[key] = lower_fn().compile()
+            with obs.span("searcher.compile", cat="compile", key=str(key)):
+                cache[key] = lower_fn().compile()
             self.stats.compiles += 1
         else:
             self.stats.cache_hits += 1
@@ -207,56 +210,93 @@ class Searcher:
     def _executable(self, bucket: int):
         return self._get_exe(bucket, lambda: self._lower(bucket))
 
+    def _dispatch_traced(self, bucket: int, qc: jnp.ndarray):
+        """Stage-fenced dispatch used while a tracer is active
+        (repro/obs/): the same engine stages as the monolithic
+        executable, one jitted program each, span + device fence per
+        stage — bitwise identical results.  Subclasses without a staged
+        pipeline return ``NotImplemented`` and ``_dispatch`` falls back
+        to fencing the monolithic executable as one span."""
+        p = self.params
+        idx = self.index
+        return seil_search_traced(
+            idx.arrays, idx.centroids, idx.codebook, idx.vectors, qc,
+            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            use_kernel=p.use_kernel, oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            fused_topk=p.fused_topk)
+
     def _dispatch(self, bucket: int, qc: jnp.ndarray) -> SearchResult:
         """One padded chunk through either the monolithic executable or
-        the incremental probe -> merge -> scan pipeline."""
+        the incremental probe -> merge -> scan pipeline.  With a tracer
+        active (repro/obs/) the monolithic path reroutes through the
+        stage-fenced ``_dispatch_traced`` and the plan_reuse path fences
+        its (already natural) probe / host-merge / scan boundaries."""
         self.stats.dispatches += 1
         if not self.params.plan_reuse:
+            if obs.enabled():
+                r = self._dispatch_traced(bucket, qc)
+                if r is not NotImplemented:
+                    return r
+                with obs.span("stage.execute", cat="device", bucket=bucket):
+                    return obs.fence(
+                        self._executable(bucket)(*self._call_inputs(), qc))
             return self._executable(bucket)(*self._call_inputs(), qc)
         probe = self._get_exe(("probe", bucket),
                               lambda: self._lower_probe(bucket),
                               cache=self._probe_exe_store())
-        pr = probe(*self._probe_inputs(), qc)
-        own = np.asarray(pr.unions)
-        t, w = own.shape
-        if t == 1:                 # grouped: one batch-wide union
-            sigs = [(0, 0)]
-        else:                      # clustered: name tiles by working set
-            lead = np.asarray(pr.sel[:, 0])[np.asarray(pr.perm)][::bucket // t]
-            sigs = tile_signatures(lead)
-        cache = self._plan_cache.setdefault(bucket, collections.OrderedDict())
-        rows = [cache.get(s) for s in sigs]
-        present = np.array([r is not None for r in rows])
-        if present.any():
-            pad = np.full(w, int(BIG), own.dtype)
-            cached = np.stack([pad if r is None else r for r in rows])
-            used, hit, ext = merge_unions_host(cached, own, present)
-        else:
-            used, hit, ext = merge_unions_host(None, own)
-        for s, row in zip(sigs, used):
-            cache[s] = row
-            cache.move_to_end(s)
-        while len(cache) > max(64, 4 * t):     # bound drifting signatures
-            cache.popitem(last=False)
-        live = union_live(used)
-        wp = plan_width(int(live.max(initial=1)), w)
-        ps = self.plan_stats
-        ps.batches += 1
-        ps.tiles += t
-        ps.hits += int(hit.sum())
-        ps.extends += int(ext.sum())
-        ps.misses += t - int(hit.sum()) - int(ext.sum())
-        ps.union_live_sum += int(live.sum())
-        ps.own_live_sum += int(union_live(own).sum())
-        ps.width_sum += wp * t
-        unions_w = jnp.asarray(used[:, :wp])
+        with obs.span("stage.probe_plan", cat="device", bucket=bucket):
+            pr = obs.fence(probe(*self._probe_inputs(), qc))
+        with obs.span("stage.merge_unions_host", cat="host") as msp:
+            own = np.asarray(pr.unions)
+            t, w = own.shape
+            if t == 1:                 # grouped: one batch-wide union
+                sigs = [(0, 0)]
+            else:                      # clustered: name tiles by working set
+                lead = np.asarray(pr.sel[:, 0])[np.asarray(pr.perm)
+                                                ][::bucket // t]
+                sigs = tile_signatures(lead)
+            cache = self._plan_cache.setdefault(bucket,
+                                                collections.OrderedDict())
+            rows = [cache.get(s) for s in sigs]
+            present = np.array([r is not None for r in rows])
+            if present.any():
+                pad = np.full(w, int(BIG), own.dtype)
+                cached = np.stack([pad if r is None else r for r in rows])
+                used, hit, ext = merge_unions_host(cached, own, present)
+            else:
+                used, hit, ext = merge_unions_host(None, own)
+            for s, row in zip(sigs, used):
+                cache[s] = row
+                cache.move_to_end(s)
+            while len(cache) > max(64, 4 * t):  # bound drifting signatures
+                cache.popitem(last=False)
+            live = union_live(used)
+            wp = plan_width(int(live.max(initial=1)), w)
+            ps = self.plan_stats
+            ps.batches += 1
+            ps.tiles += t
+            ps.hits += int(hit.sum())
+            ps.extends += int(ext.sum())
+            ps.misses += t - int(hit.sum()) - int(ext.sum())
+            ps.union_live_sum += int(live.sum())
+            ps.own_live_sum += int(union_live(own).sum())
+            ps.width_sum += wp * t
+            msp.add(tiles=t, hits=int(hit.sum()), extends=int(ext.sum()),
+                    misses=t - int(hit.sum()) - int(ext.sum()),
+                    union_live=int(live.sum()), width=wp)
+            unions_w = jnp.asarray(used[:, :wp])
         probe_spec = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), pr)
         unions_spec = jax.ShapeDtypeStruct(unions_w.shape, unions_w.dtype)
         scan = self._get_exe(
             ("scan", bucket, wp),
             lambda: self._lower_scan(bucket, probe_spec, unions_spec))
-        return scan(*self._scan_inputs(), qc, pr, unions_w)
+        with obs.span("stage.scan_finalize", cat="device", bucket=bucket,
+                      width=wp):
+            return obs.fence(scan(*self._scan_inputs(), qc, pr, unions_w))
 
     def warmup(self, *batch_sizes: int) -> "Searcher":
         """Pre-compile the buckets covering `batch_sizes` (chainable).
@@ -328,14 +368,17 @@ class Searcher:
         while s < n:
             b = min(n - s, self.params.max_chunk)
             bucket = self.params.bucket_for(b)
-            qc = q[s:s + b]
-            if b < bucket:
-                qc = jnp.concatenate(
-                    [qc, jnp.zeros((bucket - b, q.shape[1]), q.dtype)], axis=0)
-                self.stats.padded_rows += bucket - b
-            r = self._dispatch(bucket, qc)
-            if b < bucket:
-                r = jax.tree.map(lambda a: a[:b], r)
+            with obs.span("searcher.dispatch", cat="searcher",
+                          bucket=bucket, rows=b, pad=bucket - b):
+                qc = q[s:s + b]
+                if b < bucket:
+                    qc = jnp.concatenate(
+                        [qc, jnp.zeros((bucket - b, q.shape[1]), q.dtype)],
+                        axis=0)
+                    self.stats.padded_rows += bucket - b
+                r = self._dispatch(bucket, qc)
+                if b < bucket:
+                    r = jax.tree.map(lambda a: a[:b], r)
             outs.append(r)
             s += b
         self.stats.calls += 1

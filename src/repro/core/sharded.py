@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import obs
 from ..dist import shard_map
 from .distributed import build_serve_step
 from .params import SearchParams
@@ -466,12 +467,11 @@ class ShardedSearcher(Searcher):
                 f"version {sh.version}); mutations invalidate sessions — "
                 f"re-fetch via sharded.searcher(params)")
 
-    def _lower(self, bucket: int):
+    def _build_step(self, stage: str):
         sh = self.sharded
-        st = self._state
         p = self.params
         idx = sh.index
-        serve = build_serve_step(
+        return build_serve_step(
             nprobe=p.nprobe, bigk=p.bigk, k=p.k,
             max_scan_local=self.max_scan_local,
             metric=idx.config.metric,
@@ -479,7 +479,12 @@ class ShardedSearcher(Searcher):
             oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
             axes=sh.axes, ndev=sh.ndev, streaming=sh.streaming,
-            use_kernel=p.use_kernel, fused_topk=p.fused_topk)
+            use_kernel=p.use_kernel, fused_topk=p.fused_topk, stage=stage)
+
+    def _lower(self, bucket: int):
+        sh = self.sharded
+        st = self._state
+        serve = self._build_step("all")
         s, r = P(sh.axes), P()
         fn = jax.jit(shard_map(
             serve, mesh=sh.mesh,
@@ -498,3 +503,67 @@ class ShardedSearcher(Searcher):
 
     def _call_inputs(self) -> tuple:
         return self._state.serve_args()
+
+    # -- traced two-program split (DESIGN.md §11) ----------------------
+    def _lower_stage_scan(self, bucket: int):
+        """Lower the per-shard scan half: same in_specs as the fused
+        program; the per-device candidate streams come out sharded on
+        their fetch axis (global width fetch*ndev)."""
+        sh = self.sharded
+        st = self._state
+        s, r = P(sh.axes), P()
+        cand = P(None, sh.axes)
+        fn = jax.jit(shard_map(
+            self._build_step("scan"), mesh=sh.mesh,
+            in_specs=(s, s, s, r, r, r, r, r, r, r, s, s, s, s, r, r, r, r),
+            out_specs=(cand, cand, r, r, r)))
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, sh.index.vectors.shape[1]), jnp.float32)
+        return fn.lower(*st.serve_args(), q_spec)
+
+    def _lower_stage_tail(self, bucket: int, l_d, l_ids):
+        """Lower the gather/finalize tail against the scan half's
+        candidate-stream shapes: each device slices its own fetch
+        columns back out, all_gathers, and refines owner-scored exact
+        distances — identical collectives to the fused program."""
+        sh = self.sharded
+        st = self._state
+        s, r = P(sh.axes), P()
+        cand = P(None, sh.axes)
+        fn = jax.jit(shard_map(
+            self._build_step("tail"), mesh=sh.mesh,
+            in_specs=(s, s, r, cand, cand),
+            out_specs=(r, r, r)))
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, sh.index.vectors.shape[1]), jnp.float32)
+        spec = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), (l_d, l_ids))
+        return fn.lower(st.vectors, st.vec_lo, q_spec, *spec)
+
+    def _dispatch_traced(self, bucket: int, qc):
+        """Stage-fenced mesh dispatch: the shard_map program split at
+        the preselect/all_gather boundary into two AOT executables, so
+        a trace separates per-shard scan time from the gather/merge
+        tail — the two halves the multi-device regression hides in."""
+        sh = self.sharded
+        st = self._state
+        scan_exe = self._get_exe(("tscan", bucket),
+                                 lambda: self._lower_stage_scan(bucket))
+        with obs.span("stage.shard_scan", cat="device", bucket=bucket,
+                      ndev=sh.ndev) as sp:
+            l_d, l_ids, approx_dco, scanned, dropped = obs.fence(
+                scan_exe(*self._call_inputs(), qc))
+            sp.add(approx_dco=int(np.sum(np.asarray(approx_dco))),
+                   scanned_blocks=int(np.sum(np.asarray(scanned))))
+        tail_exe = self._get_exe(
+            ("ttail", bucket),
+            lambda: self._lower_stage_tail(bucket, l_d, l_ids))
+        with obs.span("stage.gather_finalize", cat="device", bucket=bucket,
+                      ndev=sh.ndev) as sp:
+            out_ids, out_d, refine_dco = obs.fence(
+                tail_exe(st.vectors, st.vec_lo, qc, l_d, l_ids))
+            sp.add(refine_dco=int(np.sum(np.asarray(refine_dco))))
+        return SearchResult(
+            ids=out_ids, dists=out_d, approx_dco=approx_dco,
+            refine_dco=refine_dco, scanned_blocks=scanned,
+            dropped_blocks=dropped)

@@ -48,12 +48,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ... import obs
 from ..engine import (PlanProbe, finalize_candidates, plan_blocks,
                       scan_blocks, scan_blocks_topk, select_lists,
                       store_from_arrays, tables_from_arrays)
 from ..pq import PQCodebook, pq_lut, pq_lut_ip
-from ..search import SearchResult, finalize_fetch
+from ..search import (SearchResult, _stage_plan, _stage_scan, _stage_select,
+                      finalize_fetch)
 from ..seil import SeilArrays
 
 
@@ -167,6 +170,76 @@ def streaming_search(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,
         oversample=oversample, extra_d=dd, extra_i=di, live=live)
+    return SearchResult(
+        ids=out_ids, dists=out_d, approx_dco=scan.approx_dco + delta_dco,
+        refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,
+        dropped_blocks=plan.dropped)
+
+
+# ---------------------------------------------------------------------------
+# traced pipeline — streaming_search cut at its stage boundaries
+# (DESIGN.md §11): the base stage programs from core/search.py plus a
+# separate delta-scan stage, so the delta-vs-base scan split shows up
+# directly as span counters.  Bitwise-identical to streaming_search
+# (asserted in tests/test_obs.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("route_delta",))
+def _stage_delta(lut, delta_codes, delta_ids, delta_post, delta_assigns,
+                 sel, rank_of, *, route_delta):
+    return _delta_candidates(lut, delta_codes, delta_ids, delta_post,
+                             delta_assigns, sel, rank_of, route_delta)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bigk", "k", "metric", "dedup_results", "oversample"))
+def _stage_finalize_stream(vectors, queries, flat_d, flat_i, dd, di, live,
+                           *, bigk, k, metric, dedup_results, oversample):
+    return finalize_candidates(
+        flat_d, flat_i, bigk=bigk, k=k, vectors=vectors, queries=queries,
+        metric=metric, dedup_results=dedup_results, oversample=oversample,
+        extra_d=dd, extra_i=di, live=live)
+
+
+def streaming_search_traced(
+    arrays, centroids, codebook, vectors, delta_codes, delta_ids,
+    delta_post, delta_assigns, live, queries, *, nprobe, bigk, k, max_scan,
+    metric="l2", dedup_results=True, use_kernel=False, oversample=2,
+    exec_mode="paged", query_tile=8, route_delta=False, fused_topk=False,
+) -> SearchResult:
+    """Stage-fenced ``streaming_search`` for tracing: identical
+    composition, span + fence per stage, delta DCO on its own span."""
+    with obs.span("stage.select_lists", cat="device", nprobe=nprobe):
+        selection = obs.fence(_stage_select(centroids, queries,
+                                            nprobe=nprobe, metric=metric))
+    with obs.span("stage.plan_blocks", cat="device", max_scan=max_scan):
+        plan, lut = obs.fence(_stage_plan(arrays, codebook, selection,
+                                          queries, max_scan=max_scan,
+                                          metric=metric))
+    name = "stage.scan_blocks_topk" if fused_topk else "stage.scan_blocks"
+    with obs.span(name, cat="device", exec_mode=exec_mode) as sp:
+        # fused applies the tombstone mask pre-selection (has_live)
+        scan = obs.fence(_stage_scan(
+            arrays, plan, lut, selection, live,
+            fetch=finalize_fetch(bigk, oversample, dedup_results),
+            exec_mode=exec_mode, use_kernel=use_kernel,
+            query_tile=query_tile, fused_topk=fused_topk,
+            has_live=fused_topk))
+        sp.add(approx_dco=int(np.sum(np.asarray(scan.approx_dco))),
+               scanned_blocks=int(np.sum(np.asarray(scan.scanned_blocks))))
+    with obs.span("stage.delta_scan", cat="device",
+                  routed=bool(route_delta)) as sp:
+        dd, di, delta_dco = obs.fence(_stage_delta(
+            lut, delta_codes, delta_ids, delta_post, delta_assigns,
+            selection.sel, selection.rank_of, route_delta=route_delta))
+        sp.add(delta_dco=int(np.sum(np.asarray(delta_dco))))
+    with obs.span("stage.finalize", cat="device") as sp:
+        out_ids, out_d, refine_dco = obs.fence(_stage_finalize_stream(
+            vectors, queries, scan.flat_d, scan.flat_i, dd, di, live,
+            bigk=bigk, k=k, metric=metric, dedup_results=dedup_results,
+            oversample=oversample))
+        sp.add(refine_dco=int(np.sum(np.asarray(refine_dco))))
     return SearchResult(
         ids=out_ids, dists=out_d, approx_dco=scan.approx_dco + delta_dco,
         refine_dco=refine_dco, scanned_blocks=scan.scanned_blocks,

@@ -59,7 +59,8 @@ from ..search import SearchResult
 from ..searcher import Searcher
 from ..seil import build_seil
 from .delta import DeltaSegment
-from .search import scan_finalize_stream, streaming_search
+from .search import (scan_finalize_stream, streaming_search,
+                     streaming_search_traced)
 
 
 class StaleSessionError(RuntimeError):
@@ -864,6 +865,25 @@ class StreamingSearcher(Searcher):
             idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
             dev.delta_codes, dev.delta_ids, self._post_arg(dev),
             dev.delta_assigns, dev.live_full, q_spec,
+            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            metric=idx.config.metric,
+            dedup_results=idx.needs_result_dedup,
+            use_kernel=p.use_kernel, oversample=idx.result_oversample,
+            exec_mode=p.exec_mode, query_tile=p.query_tile,
+            route_delta=self._route_delta, fused_topk=p.fused_topk)
+
+    def _dispatch_traced(self, bucket: int, qc):
+        """Stage-fenced streaming dispatch (repro/obs/): the base stage
+        programs plus a separate delta-scan span, so a trace shows the
+        delta-vs-base DCO split directly.  A pristine session never
+        reaches this — ``__call__`` delegates to the base session."""
+        p = self.params
+        idx = self.stream.base
+        dev = self.stream._device_state()
+        return streaming_search_traced(
+            idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
+            dev.delta_codes, dev.delta_ids, self._post_arg(dev),
+            dev.delta_assigns, dev.live_full, qc,
             nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,

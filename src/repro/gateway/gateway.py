@@ -36,6 +36,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.params import SearchParams
 from ..core.stream.streaming import StaleSessionError, StreamingIndex
 from .queue import PendingRequest, RequestQueue, RequestResult
@@ -162,18 +163,19 @@ class Gateway:
         gateway-wide ``max_delay_ms`` (it never loosens it)."""
         if self._closed.is_set():
             raise RuntimeError("gateway is closed")
-        q = np.asarray(query, np.float32)
-        if q.ndim == 2 and q.shape[0] == 1:
-            q = q[0]
-        if q.ndim != 1 or q.shape[0] != self._dim:
-            raise ValueError(
-                f"query must be ({self._dim},), got shape {q.shape}")
-        sig = self._signature(q) if self.queue.grouped else 0
-        deadline = (time.perf_counter() + deadline_s
-                    if deadline_s is not None else None)
-        req = PendingRequest(q, sig, deadline=deadline)
-        self.telemetry.inc("requests")
-        self.queue.put(req)
+        with obs.span("gateway.submit", cat="gateway"):
+            q = np.asarray(query, np.float32)
+            if q.ndim == 2 and q.shape[0] == 1:
+                q = q[0]
+            if q.ndim != 1 or q.shape[0] != self._dim:
+                raise ValueError(
+                    f"query must be ({self._dim},), got shape {q.shape}")
+            sig = self._signature(q) if self.queue.grouped else 0
+            deadline = (time.perf_counter() + deadline_s
+                        if deadline_s is not None else None)
+            req = PendingRequest(q, sig, deadline=deadline)
+            self.telemetry.inc("requests")
+            self.queue.put(req)
         return req
 
     def search(self, query, timeout: Optional[float] = None) -> RequestResult:
@@ -396,25 +398,28 @@ class Gateway:
         for r in batch:
             tm.record_latency(tm.queue_wait, t_take - r.t_enqueue)
         tm.gauge("queue_depth", self.queue.depth)
-        q = np.stack([r.query for r in batch])
-        try:
-            with self._lock:
-                res, epoch = self._search_locked(q)
-                ids = np.asarray(res.ids)
-                if self._is_stream:
-                    # responses carry stable external ids so clients
-                    # survive epoch handovers (resolve_ids maps back)
-                    ids = self.index.external_ids(ids)
-                else:
-                    ids = ids.astype(np.int64)
-                dists = np.asarray(res.dists)
-                approx = float(np.sum(np.asarray(res.approx_dco)))
-                refine = float(np.sum(np.asarray(res.refine_dco)))
-        except BaseException as e:
-            tm.inc("errors", len(batch))
-            for r in batch:
-                r._fail(e)
-            return
+        with obs.span("gateway.flush", cat="gateway",
+                      batch=len(batch)) as fsp:
+            q = np.stack([r.query for r in batch])
+            try:
+                with self._lock:
+                    res, epoch = self._search_locked(q)
+                    ids = np.asarray(res.ids)
+                    if self._is_stream:
+                        # responses carry stable external ids so clients
+                        # survive epoch handovers (resolve_ids maps back)
+                        ids = self.index.external_ids(ids)
+                    else:
+                        ids = ids.astype(np.int64)
+                    dists = np.asarray(res.dists)
+                    approx = float(np.sum(np.asarray(res.approx_dco)))
+                    refine = float(np.sum(np.asarray(res.refine_dco)))
+            except BaseException as e:
+                tm.inc("errors", len(batch))
+                for r in batch:
+                    r._fail(e)
+                return
+            fsp.add(approx_dco=approx, refine_dco=refine)
         t_done = time.perf_counter()
         tm.record_latency(tm.dispatch, t_done - t_take)
         tm.inc("batches")
@@ -425,9 +430,19 @@ class Gateway:
         tm.add("refine_dco", refine)
         tm.add("result_slots", float(ids.size))
         tm.add("result_filled", float((ids >= 0).sum()))
-        tm.add("top1_dist", float(dists[:, 0].sum()))
+        # exact top-1 distances are signed under the ip metric (finalize
+        # scores are negated inner products) — not a monotone counter
+        tm.add_signed("top1_dist", float(dists[:, 0].sum()))
+        tr = obs.tracer()
         for i, r in enumerate(batch):
             tm.record_latency(tm.latency, t_done - r.t_enqueue)
+            if tr is not None and tr.sampled():
+                # one exemplar complete-event per sampled request,
+                # spanning enqueue -> fulfill on a virtual request track
+                tr.event("gateway.request", r.t_enqueue,
+                         t_done - r.t_enqueue,
+                         queued_ms=(t_take - r.t_enqueue) * 1e3,
+                         batch=len(batch), epoch=epoch)
             r._fulfill(RequestResult(
                 ids=ids[i], dists=dists[i], latency_s=t_done - r.t_enqueue,
                 queued_s=t_take - r.t_enqueue, batch=len(batch),

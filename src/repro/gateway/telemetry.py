@@ -73,9 +73,13 @@ class LatencyHistogram:
         return self.max_s
 
     def snapshot(self) -> Dict[str, float]:
+        """Schema (locked by tests/test_gateway.py): count, sum_ms,
+        mean_ms, p50/p95/p99_ms, max_ms — count + sum let sinks derive
+        rates and cross-interval means without re-binning."""
         ms = 1e3
         return {
             "count": self.total,
+            "sum_ms": self.sum_s * ms,
             "mean_ms": (self.sum_s / self.total * ms) if self.total else 0.0,
             "p50_ms": self.percentile(50) * ms,
             "p95_ms": self.percentile(95) * ms,
@@ -137,6 +141,22 @@ class Telemetry:
             self._counters[name] = self._counters.get(name, 0) + v
 
     def add(self, name: str, v: float) -> None:
+        """Accumulate a monotone float counter.  Negative deltas violate
+        the counters-are-monotone contract (module docstring) and raise;
+        values that legitimately move both ways go through ``gauge`` or
+        ``add_signed``."""
+        if v < 0:
+            raise ValueError(
+                f"accumulator {name!r}: negative delta {v!r} breaks the "
+                f"monotone-counters contract; use add_signed() for sums "
+                f"that are legitimately signed")
+        with self._lock:
+            self._sums[name] = self._sums.get(name, 0.0) + v
+
+    def add_signed(self, name: str, v: float) -> None:
+        """Accumulate a *signed* sum (e.g. top-1 inner-product scores,
+        which are negated distances).  The escape hatch from ``add``'s
+        monotonicity check — use sparingly and document the call site."""
         with self._lock:
             self._sums[name] = self._sums.get(name, 0.0) + v
 

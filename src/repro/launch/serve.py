@@ -51,16 +51,30 @@ Combined with churn ops, ``--gateway --compact`` exercises the
 zero-downtime epoch handover: the compaction folds on a background
 thread while requests keep flowing, and the new epoch installs
 between batches.
+
+Observability (DESIGN.md §11): ``--trace out.json`` traces the serving
+phase — stage spans from gateway flush down to the per-shard scan,
+device work fenced at stage boundaries — and writes a Chrome/Perfetto
+trace-event file (open in ui.perfetto.dev; validate offline with
+``python -m repro.obs.export out.json``).  ``--stats-format prom|json``
+prints the unified ``snapshot_all`` stats (compile/cache + plan +
+gateway telemetry + modeled HBM traffic + per-stage trace aggregates)
+after serving:
+
+``... --gateway --trace /tmp/serve_trace.json --stats-format prom``
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core import (IndexConfig, SearchParams, StreamConfig,
                         StreamingIndex, available_strategies, build_index,
                         dco_summary, ground_truth, load_index,
@@ -158,6 +172,9 @@ def run_gateway(serving, args, q, compact_async: bool = False):
               f"p50={tel['latency']['p50_ms']:.2f}ms "
               f"p99={tel['latency']['p99_ms']:.2f}ms "
               f"counters={tel['counters']}")
+        # snapshot while the gateway (and any tracer) is still live so
+        # --stats-format can render one unified stack-wide view
+        return obs.snapshot_all(gateway=gw, tracer=obs.tracer())
 
 
 def main():
@@ -233,6 +250,20 @@ def main():
     ap.add_argument("--telemetry-interval", type=float, default=0.0,
                     metavar="S", help="emit a structured gateway "
                          "telemetry line every S seconds (0 = off)")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="trace the serving phase (stage spans with "
+                         "device fencing, DESIGN.md §11) and write a "
+                         "Chrome/Perfetto trace-event JSON to FILE; "
+                         "open in ui.perfetto.dev")
+    ap.add_argument("--trace-sample", type=int, default=1, metavar="N",
+                    help="with --trace: record one gateway request "
+                         "exemplar per N requests")
+    ap.add_argument("--stats-format", default=None,
+                    choices=("json", "prom"),
+                    help="print the unified snapshot_all() stats "
+                         "(session + gateway + HBM model + trace "
+                         "aggregates) after serving, as pretty JSON or "
+                         "Prometheus text exposition")
     args = ap.parse_args()
     try:
         args.offered_qps = [float(v) for v in
@@ -332,8 +363,11 @@ def main():
         print(f"serving over a {args.ndev}-device mesh (block/vector "
               f"shards of ~{base.stats.n_blocks // args.ndev} blocks; "
               f"same session API)")
+    if args.trace:
+        obs.start(sample=args.trace_sample)
     if args.gateway:
-        run_gateway(serving, args, q, compact_async=gateway_handover)
+        snap = run_gateway(serving, args, q, compact_async=gateway_handover)
+        finish_obs(args, snap)
         return
     searcher = serving.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
@@ -371,6 +405,24 @@ def main():
         print(f"stream searcher stats: {index.searcher_stats()}")
     if args.ndev:
         print(f"sharded searcher stats: {serving.searcher_stats()}")
+    finish_obs(args, obs.snapshot_all(searcher=searcher,
+                                      tracer=obs.tracer()))
+
+
+def finish_obs(args, snap):
+    """Close out the observability surfaces after serving: stop the
+    tracer and write the Perfetto trace-event file (``--trace``), then
+    render the unified ``snapshot_all`` stats (``--stats-format``)."""
+    if args.trace:
+        tr = obs.stop()
+        doc = obs.write_trace(tr, args.trace)
+        print(f"trace: {len(doc['traceEvents'])} trace events "
+              f"({tr.fences} fences, {tr.dropped} dropped) -> "
+              f"{args.trace}")
+    if args.stats_format == "prom":
+        sys.stdout.write(obs.to_prometheus(snap))
+    elif args.stats_format == "json":
+        print(json.dumps(snap, indent=1, default=float))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+"""Unified stats schema + the modeled scan-stage HBM traffic.
+
+``snapshot_all`` folds every counter surface the stack already computes
+— session compile/cache stats, plan-cache hit/extend/miss and union
+widths, gateway telemetry, streaming epoch state, per-stage time/DCO
+from tracer span counters, and the analytic HBM traffic model of the
+scan stage — into ONE dict with a documented layout (see the function
+docstring; locked by tests/test_obs.py and rendered to Prometheus text
+by ``repro.obs.to_prometheus``).
+
+``scan_traffic_model`` is the single definition of the scan/finalize
+boundary traffic model ``bench_fused`` introduced; ``benchmarks/
+roofline.py`` re-exports it so benchmark reports and serving snapshots
+use identical accounting.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .tracer import Tracer
+
+SNAPSHOT_SCHEMA_VERSION = 1
+
+
+def scan_traffic_model(*, scan_width: int, fetch: int) -> Dict[str, float]:
+    """Analytic minimum bytes/query exchanged with HBM around the
+    scan/finalize boundary (DESIGN.md §9):
+
+      unfused: the scan materializes the full ``scan_width`` candidate
+        stream for finalize to re-read — 8 B each (f32 distance + i32
+        id), written once and read once;
+      fused:   only the top-``fetch`` accumulator leaves the scan —
+        12 B written each (f32 distance + i32 flat position + i32 id),
+        8 B of which finalize reads back.
+    """
+    unfused_write = scan_width * 8.0
+    fused_write = fetch * 12.0
+    return {
+        "unfused_scan_write": unfused_write,
+        "fused_scan_write": fused_write,
+        "write_reduction_x": unfused_write / fused_write,
+        "unfused_roundtrip": 2 * unfused_write,
+        "fused_roundtrip": fused_write + fetch * 8.0,
+        "roundtrip_reduction_x":
+            2 * unfused_write / (fused_write + fetch * 8.0),
+    }
+
+
+def session_traffic_model(searcher) -> Dict[str, Any]:
+    """The scan-stage traffic model at a live session's operating point
+    (scan width from the resolved params, fetch from the index's
+    finalize contract)."""
+    from ..core.search import finalize_fetch
+    p = searcher.params
+    idx = searcher.index
+    base = getattr(idx, "base", idx)          # StreamingIndex -> base
+    blk = int(base.arrays.block_codes.shape[1])
+    scan_width = p.max_scan * blk
+    fetch = min(finalize_fetch(p.bigk, idx.result_oversample,
+                               idx.needs_result_dedup), scan_width)
+    return {"scan_width": scan_width, "fetch": fetch, "block": blk,
+            "max_scan": p.max_scan, "fused_topk": p.fused_topk,
+            "bytes_per_query": scan_traffic_model(scan_width=scan_width,
+                                                  fetch=fetch)}
+
+
+def _trace_section(tracer: Tracer) -> Dict[str, Any]:
+    summary = tracer.stage_summary()
+    stage_s = sum(v["total_s"] for name, v in summary.items()
+                  if name.startswith("stage."))
+    disp = summary.get("searcher.dispatch")
+    section: Dict[str, Any] = {
+        "spans": summary,
+        "fences": tracer.fences,
+        "dropped": tracer.dropped,
+        "events": len(tracer.records),
+    }
+    if disp and disp["total_s"] > 0:
+        # fraction of end-to-end dispatch wall time attributed to named
+        # engine stages — the bench_trace acceptance metric
+        section["stage_attribution"] = stage_s / disp["total_s"]
+    # per-stage DCO: the delta-vs-base scan split plus refine, straight
+    # from span counters
+    dco = {}
+    for name, v in summary.items():
+        for key in ("approx_dco", "delta_dco", "refine_dco"):
+            if key in v["counters"]:
+                dco[f"{name}.{key}"] = v["counters"][key]
+    if dco:
+        section["dco"] = dco
+    return section
+
+
+def snapshot_all(*, gateway=None, gateway_stats: Optional[dict] = None,
+                 searcher=None, tracer: Optional[Tracer] = None
+                 ) -> Dict[str, Any]:
+    """One coherent stats dict across the stack.  Schema (top-level
+    keys, each present only when its source was supplied):
+
+      schema_version  int — bump on layout changes.
+      session   ``Searcher.compile_stats()``: compiles /
+                warmup_compiles / calls / dispatches / cache_hits /
+                padded_rows / buckets, plus ``plan`` (hit_rate,
+                hits/extends/misses, mean_union_live / mean_own_live /
+                mean_width) when the session runs plan_reuse.
+      gateway   ``Gateway.stats()``: telemetry counters + gauges +
+                derived rates (qps, batch_fill, bucket_fill,
+                *_dco_per_query, result_fill_rate, mean_top1_dist) +
+                latency/queue_wait/dispatch histograms, queue depth,
+                handover + session + stream state.
+      hbm_model ``session_traffic_model``: scan_width / fetch / block /
+                max_scan / fused_topk + modeled bytes_per_query
+                (unfused vs fused write and roundtrip, reductions).
+      trace     per-span-name aggregates (count / total_s / mean_ms /
+                summed counters), fence + drop counts, and
+                ``stage_attribution`` (stage time / dispatch time) and
+                ``dco`` (per-stage DCO incl. the delta-vs-base scan
+                split) when the trace carried them.
+    """
+    out: Dict[str, Any] = {"schema_version": SNAPSHOT_SCHEMA_VERSION}
+    if gateway is not None and gateway_stats is None:
+        gateway_stats = gateway.stats()
+    if gateway_stats is not None:
+        out["gateway"] = gateway_stats
+    if searcher is None and gateway is not None:
+        searcher = getattr(gateway, "_last_session", None)
+    if searcher is not None:
+        out["session"] = searcher.compile_stats()
+        out["hbm_model"] = session_traffic_model(searcher)
+    if tracer is not None:
+        out["trace"] = _trace_section(tracer)
+    return out

@@ -182,6 +182,29 @@ def test_latency_histogram_percentiles_never_understate():
     assert h.percentile(99) >= h.percentile(50) >= h.percentile(10)
     snap = h.snapshot()
     assert snap["count"] == 5 and snap["max_ms"] == pytest.approx(10.0)
+    # locked snapshot schema: sinks derive rates from count and
+    # cross-interval means from sum_ms without re-binning
+    assert set(snap) == {"count", "sum_ms", "mean_ms", "p50_ms", "p95_ms",
+                         "p99_ms", "max_ms"}
+    assert snap["sum_ms"] == pytest.approx(sum(vals) * 1e3)
+    assert snap["mean_ms"] == pytest.approx(snap["sum_ms"] / snap["count"])
+    empty = LatencyHistogram().snapshot()
+    assert empty["count"] == 0 and empty["mean_ms"] == 0.0
+
+
+def test_telemetry_add_rejects_negative_deltas():
+    from repro.gateway.telemetry import Telemetry
+    tm = Telemetry()
+    tm.add("approx_dco", 16.0)
+    with pytest.raises(ValueError, match="monotone"):
+        tm.add("approx_dco", -1.0)
+    assert tm.snapshot()["counters"] == {}      # counters untouched
+    # signed sums (ip-metric top-1 scores are negated inner products)
+    # go through the documented escape hatch
+    tm.add_signed("top1_dist", -3.5)
+    tm.add_signed("top1_dist", 1.0)
+    tm.inc("responses")
+    assert tm.snapshot()["mean_top1_dist"] == pytest.approx(-2.5)
 
 
 def test_periodic_sink_and_monotone_counters(rairs_index, unit_data):
