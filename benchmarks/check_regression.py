@@ -30,7 +30,7 @@ from typing import Callable, Dict
 
 _REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 _SCHEMA_EXPECTED = {"engine": 1, "stream": 1, "dist": 1, "plan": 1,
-                    "fused": 1, "serve": 1, "trace": 1}
+                    "fused": 1, "serve": 1, "trace": 1, "refine": 1}
 
 
 class Gate:
@@ -173,10 +173,45 @@ def check_trace(g: Gate, d: dict) -> None:
             f"write_reduction_x={m.get('write_reduction_x')}")
 
 
+def check_refine(g: Gate, d: dict) -> None:
+    g.check(d.get("rf1_id_mismatch_points") == 0,
+            "refine: refine_factor=1 is bitwise-identical to single-tier",
+            f"rf1_id_mismatch_points={d.get('rf1_id_mismatch_points')}")
+    configs = d.get("configs", [])
+    # the sweep deliberately includes losing operating points (large
+    # refine factors overshoot), so per-config checks are structural:
+    # tier-1 must scan a strictly narrower plane than the full codes
+    g.check(bool(configs) and all(
+        0.0 <= c["recall"] <= 1.0
+        and c["m_compact"] < c["m_full"]
+        and 0 < c["tier1_ops"] < c["single_tier_ops"]
+        for c in configs),
+            "refine: every config scans a strictly narrower tier-1 plane")
+    # the headline claim of the ladder, exact on any machine: on the
+    # iso-recall frontier, some two-tier config must match the best
+    # single-tier recall (within the summary's tolerance) at >= 2x
+    # fewer modeled total ops than that single-tier point spends
+    # (sift1m holds the committed claim; smoke scales run a looser
+    # floor — at D=32 the compact plane is only 2-4x narrower)
+    floor = 2.0 if d.get("dataset") == "sift1m" else 1.2
+    tol = d.get("tolerance", 0.005)
+    fr = d.get("frontier")
+    g.check(fr is not None
+            and fr.get("total_ops_reduction_x", 0) >= floor
+            and fr.get("recall_drop", 1) <= tol
+            and fr.get("total_ops", 0) > 0
+            and abs(fr.get("target_single_tier_ops", 0)
+                    - fr.get("total_ops_reduction_x", 0)
+                    * fr.get("total_ops", 1)) < 1.0,
+            f"refine: iso-recall frontier >= {floor}x total-ops "
+            f"reduction within {tol:.3f} of the best single-tier recall",
+            f"frontier={fr}")
+
+
 _CHECKERS: Dict[str, Callable[[Gate, dict], None]] = {
     "engine": check_engine, "stream": check_stream, "dist": check_dist,
     "plan": check_plan, "fused": check_fused, "serve": check_serve,
-    "trace": check_trace,
+    "trace": check_trace, "refine": check_refine,
 }
 
 

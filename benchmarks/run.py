@@ -23,7 +23,11 @@ point — the CI ``gateway-smoke`` guard), and the stage-trace bench
 with ``BENCH_trace.json`` (per-stage wall-time/DCO breakdown from
 tracer spans with >= 95% dispatch-time attribution asserted,
 single-host and sharded — the stage-attributed view of the
-BENCH_dist.json multi-device cliff; DESIGN.md §11).
+BENCH_dist.json multi-device cliff; DESIGN.md §11), and the two-tier
+quantization-ladder bench with ``BENCH_refine.json`` (backend x
+refine_factor x nprobe sweep: recall and the weighted total-ops model
+vs single-tier, rf=1 bitwise-parity count, and the frontier config —
+the CI ``refine-smoke`` guard; DESIGN.md §12).
 
 ``benchmarks/check_regression.py`` consumes the committed BENCH_*.json
 files and gates CI on machine-checkable invariants (never wall-clock).
@@ -53,6 +57,8 @@ SERVE_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_serve.json")
 TRACE_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_trace.json")
+REFINE_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_refine.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
 DIST_JSON_SCHEMA_VERSION = 1
@@ -60,6 +66,7 @@ PLAN_JSON_SCHEMA_VERSION = 1
 FUSED_JSON_SCHEMA_VERSION = 1
 SERVE_JSON_SCHEMA_VERSION = 1
 TRACE_JSON_SCHEMA_VERSION = 1
+REFINE_JSON_SCHEMA_VERSION = 1
 
 
 def _write_summary_json(label: str, schema_version: int, body: dict,
@@ -145,6 +152,14 @@ def write_trace_json(trace_out: dict, dataset: str, path: str) -> None:
     }, dataset, path)
 
 
+def write_refine_json(refine_out: dict, dataset: str, path: str) -> None:
+    """Persist the two-tier quantization-ladder bench (backend x
+    refine_factor x nprobe sweep: recall vs modeled total-ops reduction
+    against single-tier, plus the rf=1 bitwise-parity count)."""
+    _write_summary_json("refine", REFINE_JSON_SCHEMA_VERSION, refine_out,
+                        dataset, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -170,6 +185,9 @@ def main() -> None:
     ap.add_argument("--trace-json", type=str, default=TRACE_JSON_DEFAULT,
                     help="where the stage-trace bench writes its machine-"
                          "readable summary ('' disables)")
+    ap.add_argument("--refine-json", type=str, default=REFINE_JSON_DEFAULT,
+                    help="where the quantization-ladder bench writes its "
+                         "machine-readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
                          "BENCH_*.json files")
@@ -198,6 +216,8 @@ def main() -> None:
                 write_serve_json(out, args.bench_dataset, args.serve_json)
             if name == "trace" and args.trace_json:
                 write_trace_json(out, args.bench_dataset, args.trace_json)
+            if name == "refine" and args.refine_json:
+                write_refine_json(out, args.bench_dataset, args.refine_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -239,6 +259,7 @@ def _bench_list(args):
         ("fused", lambda: suite.bench_fused(dataset=args.bench_dataset)),
         ("serve", lambda: suite.bench_serve(dataset=args.bench_dataset)),
         ("trace", lambda: suite.bench_trace(dataset=args.bench_dataset)),
+        ("refine", lambda: suite.bench_refine(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

@@ -150,3 +150,26 @@ stages = {n.removeprefix("stage."): f"{v['mean_ms']:.2f}ms"
 print(f"traced dispatch == untraced (64 queries); per-stage {stages}; "
       f"attribution={snap['trace']['stage_attribution']:.0%} -> "
       f"{trace_path}")
+
+# 12. the two-tier quantization ladder (DESIGN.md §12): tier-1 scans a
+#     compact code plane (here coarse 4-bit PQ) keeping a widened
+#     bigK * refine_factor survivor set, tier-2 re-ranks the survivors
+#     exactly — same engine, same sessions, just cheaper scanning.
+#     refine_factor=1 degenerates to the single-tier program *bitwise*;
+#     snapshot_all reports the modeled tier split
+from repro.core import RefineParams
+
+two_tier = index.searcher(SearchParams(
+    k=10, nprobe=6, refine=RefineParams(plane="pq4", refine_factor=4)))
+res_2t = two_tier(queries)
+model = obs.snapshot_all(searcher=two_tier)["hbm_model"]["refine"]
+res_rf1 = index.searcher(SearchParams(
+    k=10, nprobe=6, refine=RefineParams(plane="pq4", refine_factor=1)))(queries)
+assert np.array_equal(np.asarray(res_rf1.ids),
+                      np.asarray(index.searcher(params)(queries).ids))
+print(f"two-tier pq4/rf4: recall@10="
+      f"{recall_at_k(np.asarray(res_2t.ids), gt):.3f} "
+      f"(single-tier {recall_at_k(np.asarray(res.ids), gt):.3f}); "
+      f"tier-1 scans {model['m_compact']} of {model['m_full']} "
+      f"subquantizers -> modeled total-ops "
+      f"{model['total_ops_reduction_x']:.2f}x cheaper; rf=1 == single-tier")

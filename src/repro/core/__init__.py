@@ -15,9 +15,10 @@ from .engine import (EXEC_MODES, BlockStore, ListSelection, ListTables,  # noqa
                      merge_unions_host)
 from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
 from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION,  # noqa
-                 SHARDED_FORMAT_VERSION, load_index, read_index_meta,
-                 save_index)
-from .params import MAX_AUTO_BUCKET, SearchParams  # noqa
+                 PLANE_FORMAT_VERSION, SHARDED_FORMAT_VERSION, load_index,
+                 read_index_meta, save_index)
+from .params import (MAX_AUTO_BUCKET, REFINE_PLANES, RefineParams,  # noqa
+                     SearchParams)
 from .searcher import PlanStats, Searcher, SearcherStats  # noqa
 from .sharded import ShardedIndex, ShardedSearcher, shard_index  # noqa
 from .distributed import build_serve_step, distributed_search  # noqa

@@ -29,14 +29,10 @@ moving vector data.
 
 ``build_serve_step`` is the only lowering entry point; ``ShardedSearcher``
 AOT-compiles it per batch bucket through the ``Searcher._lower`` hook.
-``make_distributed_serve_step`` / ``distributed_search`` remain as thin
-deprecated shims over the unified API.
+``distributed_search`` remains as a thin session wrapper over the
+unified API (the legacy ``make_distributed_serve_step`` shim is gone).
 """
 from __future__ import annotations
-
-import sys
-import warnings
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +52,8 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
                      oversample: int = 2, exec_mode: str = "paged",
                      query_tile: int = 8, axes=("data",), ndev: int = 1,
                      streaming: bool = False, use_kernel: bool = False,
-                     fused_topk: bool = False, stage: str = "all"):
+                     fused_topk: bool = False, stage: str = "all",
+                     packed_codes: bool = False):
     """Build the per-device serve step for shard_map.
 
     Returns ``serve(block_codes, block_ids, block_other, owned,
@@ -113,11 +110,12 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
                 store, plan, lut, selection.rank_of, fetch=fetch,
                 exec_mode=exec_mode, use_kernel=use_kernel,
                 query_tile=query_tile, sel=selection.sel,
-                live=live if streaming else None)
+                live=live if streaming else None, packed=packed_codes)
         else:
             scan = scan_blocks(store, plan, lut, selection.rank_of,
                                exec_mode=exec_mode, use_kernel=use_kernel,
-                               query_tile=query_tile, sel=selection.sel)
+                               query_tile=query_tile, sel=selection.sel,
+                               packed=packed_codes)
         flat_d, flat_i = scan.flat_d, scan.flat_i
         approx_dco = scan.approx_dco
 
@@ -188,62 +186,8 @@ def build_serve_step(*, nprobe: int, bigk: int, k: int, max_scan_local: int,
 
 
 # ---------------------------------------------------------------------------
-# deprecated compat shims (pre-ShardedIndex entry points)
+# compat session wrapper (pre-ShardedIndex entry point)
 # ---------------------------------------------------------------------------
-
-class DistSearchResult(NamedTuple):
-    ids: jnp.ndarray
-    dists: jnp.ndarray
-    local_dco: jnp.ndarray     # (B,) per-device approx DCO (psum'd)
-
-
-_DEPRECATION_NOTED = False
-
-
-def make_distributed_serve_step(nlist: int, nprobe: int, bigk: int, k: int,
-                                max_scan_local: int, axes=("data",),
-                                exec_mode: str = "paged",
-                                query_tile: int = 8):
-    """Deprecated: use ``index.shard(mesh).searcher(params)``.
-
-    Thin shim over ``build_serve_step`` preserving the old 14-argument
-    serve signature and ``DistSearchResult`` return (no result dedup, no
-    streaming state, l2 only) for callers that still hand-roll the
-    shard_map wrapping."""
-    warnings.warn(
-        "make_distributed_serve_step is deprecated; create a session via "
-        "index.shard(mesh).searcher(params) (core/sharded.py) — it serves "
-        "the same shard_map step through the unified Searcher API",
-        DeprecationWarning, stacklevel=2)
-    # DeprecationWarning is filtered out of non-__main__ code by default,
-    # so also say it once where the operator can actually see it
-    global _DEPRECATION_NOTED
-    if not _DEPRECATION_NOTED:
-        _DEPRECATION_NOTED = True
-        print("note: make_distributed_serve_step is deprecated — use "
-              "index.shard(mesh).searcher(params)", file=sys.stderr)
-    step = build_serve_step(
-        nprobe=nprobe, bigk=bigk, k=k, max_scan_local=max_scan_local,
-        metric="l2", dedup_results=False, oversample=1, exec_mode=exec_mode,
-        query_tile=query_tile, axes=axes, ndev=1, streaming=False)
-
-    def serve(block_codes, block_ids, block_other, owned, owned_other,
-              refs, refs_other, misc, centroids, lut_codebooks, vectors,
-              vec_lo, block_lo, queries):
-        m = lut_codebooks.shape[0]
-        res = step(block_codes, block_ids, block_other, owned, owned_other,
-                   refs, refs_other, misc, centroids, lut_codebooks,
-                   vectors, vec_lo, block_lo,
-                   jnp.zeros_like(block_lo),            # dev_rank (unused)
-                   jnp.zeros((0, m), jnp.uint8),        # delta_codes
-                   jnp.zeros((0,), jnp.int32),          # delta_ids
-                   jnp.zeros((0,), bool),               # live
-                   queries)
-        return DistSearchResult(ids=res.ids, dists=res.dists,
-                                local_dco=res.approx_dco)
-
-    return serve
-
 
 def distributed_search(index, mesh, queries, *,
                        params: SearchParams = None,

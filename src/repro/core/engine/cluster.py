@@ -141,7 +141,7 @@ def width_buckets(width_cap: int) -> list:
     return sorted(out)
 
 
-def tile_signatures(lead_lists: np.ndarray) -> list:
+def tile_signatures(lead_lists: np.ndarray, deep=None) -> list:
     """Stable identity keys for a batch's tiles, from the rank-0 probed
     list of each tile's first query (in cluster order).
 
@@ -150,10 +150,32 @@ def tile_signatures(lead_lists: np.ndarray) -> list:
     caches die the moment popularity drift moves a tile boundary; these
     keys follow the working set instead (``Searcher`` keys its plan
     cache with them).
+
+    ``deep`` (T, P) — the full ranked probe row of each tile-lead query
+    — widens the key with the probe prefix beyond the lead (ranks
+    1..CLUSTER_DEPTH-1): at large nprobe many tiles anchor on the same
+    hot list, and a lead-only key then separates them only by run index
+    — which is positional, so drift reshuffles their cached unions into
+    each other.  The deep key ``(lead, prefix, run)`` weights the tile
+    identity by probed-list overlap instead; distinct working sets
+    sharing a lead stop colliding and the hit rate stops collapsing as
+    nprobe outgrows the lead-rank window (reported per dispatch as
+    ``sig_deep_split`` in ``compile_stats()["plan"]``).
     """
+    leads = np.asarray(lead_lists).tolist()
+    if deep is not None:
+        d = np.asarray(deep)
+        depth = min(CLUSTER_DEPTH, d.shape[1])
+        fps = [tuple(r) for r in d[:, 1:depth].tolist()]
+        sig = []
+        run = 0
+        for i, key in enumerate(zip(leads, fps)):
+            run = run + 1 if i and key == sig[-1][:2] else 0
+            sig.append((key[0], key[1], run))
+        return sig
     sig = []
     run = 0
-    for i, lst in enumerate(np.asarray(lead_lists).tolist()):
+    for i, lst in enumerate(leads):
         run = run + 1 if i and lst == sig[-1][0] else 0
         sig.append((lst, run))
     return sig

@@ -80,7 +80,7 @@ def plan_slot_maps(blocks: jnp.ndarray, ranks: jnp.ndarray,
 
 def _fused_kernel_scan(store: BlockStore, plan: QueryPlan, lut, rank_of,
                        *, fetch: int, exec_mode: str, query_tile: int,
-                       sel, perm, unions, dead):
+                       sel, perm, unions, dead, packed: bool = False):
     """Per-exec-mode kernel dispatch: build (tile_idx, slot_of, rank_u)
     and run the fused Pallas kernel.  Returns (flat_d, flat_i, dco)."""
     from ...kernels.ops import pq_scan_topk
@@ -93,7 +93,7 @@ def _fused_kernel_scan(store: BlockStore, plan: QueryPlan, lut, rank_of,
         d, _, ids, dco = pq_scan_topk(
             lut, store.block_codes, store.block_ids, store.block_other,
             plan.blocks, rank_of, slot_of, plan.ranks, dead,
-            fetch=fetch, query_tile=1)
+            fetch=fetch, query_tile=1, packed=packed)
         return d, ids, dco
 
     if exec_mode == "grouped":
@@ -108,7 +108,7 @@ def _fused_kernel_scan(store: BlockStore, plan: QueryPlan, lut, rank_of,
         d, _, ids, dco = pq_scan_topk(
             lut, store.block_codes, store.block_ids, store.block_other,
             tile_idx, rank_of, slot_of, rank_u, dead,
-            fetch=fetch, query_tile=qt)
+            fetch=fetch, query_tile=qt, packed=packed)
         return d, ids, dco
 
     # clustered: per-tile unions in probe-overlap order, then un-permute
@@ -126,7 +126,7 @@ def _fused_kernel_scan(store: BlockStore, plan: QueryPlan, lut, rank_of,
     d, _, ids, dco = pq_scan_topk(
         lut[perm], store.block_codes, store.block_ids, store.block_other,
         safe_u, rank_of[perm], slot_of, rank_u, dead,
-        fetch=fetch, query_tile=qt)
+        fetch=fetch, query_tile=qt, packed=packed)
     inv = jnp.argsort(perm)
     return d[inv], ids[inv], dco[inv]
 
@@ -135,13 +135,15 @@ def scan_blocks_topk(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
                      rank_of: jnp.ndarray, *, fetch: int,
                      exec_mode: str = "paged", use_kernel: bool = False,
                      query_tile: int = 8, sel=None, perm=None, unions=None,
-                     live=None) -> ScanOut:
+                     live=None, packed: bool = False) -> ScanOut:
     """Fused scan + stable top-``fetch`` selection (see module docstring).
 
     Same signature and semantics as ``scan_blocks`` plus ``fetch`` (the
     candidate budget finalize needs: ``bigk * oversample`` for
     dedup-required layouts, ``bigk`` otherwise) and ``live`` (optional
     tombstone mask over the id space, applied pre-selection).
+    ``packed`` marks the code store as a nibble-packed quant plane,
+    exactly as in ``scan_blocks``.
     """
     assert exec_mode in EXEC_MODES, exec_mode
     b, s = plan.blocks.shape
@@ -150,7 +152,7 @@ def scan_blocks_topk(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
     if not use_kernel:
         out = scan_blocks(store, plan, lut, rank_of, exec_mode=exec_mode,
                           use_kernel=False, query_tile=query_tile, sel=sel,
-                          perm=perm, unions=unions)
+                          perm=perm, unions=unions, packed=packed)
         d = out.flat_d
         if live is not None:
             dead = (out.flat_i >= 0) & ~live[jnp.maximum(out.flat_i, 0)]
@@ -168,7 +170,8 @@ def scan_blocks_topk(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
                 & ~live[jnp.maximum(store.block_ids, 0)]).astype(jnp.uint8)
     d, ids, dco = _fused_kernel_scan(
         store, plan, lut, rank_of, fetch=fetch, exec_mode=exec_mode,
-        query_tile=query_tile, sel=sel, perm=perm, unions=unions, dead=dead)
+        query_tile=query_tile, sel=sel, perm=perm, unions=unions, dead=dead,
+        packed=packed)
     return ScanOut(
         flat_d=d, flat_i=ids, approx_dco=dco,
         scanned_blocks=jnp.sum(plan.valid, axis=1).astype(jnp.int32))

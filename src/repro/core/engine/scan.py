@@ -48,10 +48,18 @@ import jax
 import jax.numpy as jnp
 
 from ...kernels.ref import adc_gather as _adc_gather
+from ...quant.nibbles import unpack_nibbles
 from .cluster import cluster_order, fit_tile, tile_unions, union_dims
 from .types import BIG, BlockStore, QueryPlan, ScanOut
 
 EXEC_MODES = ("paged", "grouped", "clustered")
+
+
+def _codes_for(codes: jnp.ndarray, m: int, packed: bool) -> jnp.ndarray:
+    """Gathered code tiles -> scannable codes.  A packed store (quant
+    plane: two 4-bit codes per byte) is unpacked in-register to the LUT
+    width ``m`` right after the gather; full-width stores pass through."""
+    return unpack_nibbles(codes, m) if packed else codes
 
 
 def batch_union(plan: QueryPlan, total_blocks: int) -> jnp.ndarray:
@@ -64,16 +72,20 @@ def batch_union(plan: QueryPlan, total_blocks: int) -> jnp.ndarray:
     return tile_unions(plan.blocks, plan.valid, 1, u)[0]
 
 
-def _scan_paged(store: BlockStore, plan: QueryPlan, lut, use_kernel: bool):
+def _scan_paged(store: BlockStore, plan: QueryPlan, lut, use_kernel: bool,
+                packed: bool = False):
     if use_kernel:
         from ...kernels.ops import pq_scan_paged
-        return pq_scan_paged(lut, store.block_codes, plan.blocks)
-    codes = store.block_codes[plan.blocks]         # (B, S, BLK, M)
+        return pq_scan_paged(lut, store.block_codes, plan.blocks,
+                             packed=packed)
+    codes = _codes_for(store.block_codes[plan.blocks], lut.shape[1],
+                       packed)                     # (B, S, BLK, M)
     return _adc_gather(lut, codes)
 
 
 def _scan_grouped(store: BlockStore, plan: QueryPlan, lut,
-                  use_kernel: bool, query_tile: int, union=None):
+                  use_kernel: bool, query_tile: int, union=None,
+                  packed: bool = False):
     b, s = plan.blocks.shape
     if union is None:
         union = batch_union(plan, store.block_codes.shape[0])   # (U,)
@@ -82,9 +94,11 @@ def _scan_grouped(store: BlockStore, plan: QueryPlan, lut,
         from ...kernels.ops import pq_scan_grouped
         qt = fit_tile(b, query_tile)
         dists_u = pq_scan_grouped(lut, store.block_codes, safe_union,
-                                  query_tile=qt)            # (B, U, BLK)
+                                  query_tile=qt,
+                                  packed=packed)             # (B, U, BLK)
     else:
-        codes_u = store.block_codes[safe_union]             # (U, BLK, M)
+        codes_u = _codes_for(store.block_codes[safe_union], lut.shape[1],
+                             packed)                        # (U, BLK, M)
         dists_u = _adc_gather(
             lut, jnp.broadcast_to(codes_u[None], (b,) + codes_u.shape))
     # scatter back to the plan layout: every valid plan block is in the
@@ -96,7 +110,7 @@ def _scan_grouped(store: BlockStore, plan: QueryPlan, lut,
 
 def _scan_clustered(store: BlockStore, plan: QueryPlan, lut,
                     use_kernel: bool, query_tile: int, sel=None,
-                    perm=None, unions=None):
+                    perm=None, unions=None, packed: bool = False):
     """Per-tile-union scan in cluster order; returns (B, S, BLK) dists
     in the *original* batch order — byte-for-byte the paged values."""
     b, s = plan.blocks.shape
@@ -114,9 +128,11 @@ def _scan_clustered(store: BlockStore, plan: QueryPlan, lut,
     if use_kernel:
         from ...kernels.ops import pq_scan_tiled
         d_u = pq_scan_tiled(lut_p, store.block_codes, safe_u,
-                            query_tile=qt)                  # (B, W, BLK)
+                            query_tile=qt,
+                            packed=packed)                  # (B, W, BLK)
     else:
-        codes_u = store.block_codes[safe_u]                 # (T, W, BLK, M)
+        codes_u = _codes_for(store.block_codes[safe_u], lut.shape[1],
+                             packed)                       # (T, W, BLK, M)
         m, k = lut.shape[1], lut.shape[2]
         g = jnp.take_along_axis(
             lut_p.reshape(t, qt, 1, 1, m, k),
@@ -132,7 +148,8 @@ def _scan_clustered(store: BlockStore, plan: QueryPlan, lut,
 def scan_blocks(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
                 rank_of: jnp.ndarray, *, exec_mode: str = "paged",
                 use_kernel: bool = False, query_tile: int = 8,
-                sel=None, perm=None, unions=None) -> ScanOut:
+                sel=None, perm=None, unions=None,
+                packed: bool = False) -> ScanOut:
     """ADC distances + item masks + DCO for the planned blocks.
 
     lut: (B, M, K) per-query subspace tables; rank_of: (B, nlist).
@@ -140,17 +157,22 @@ def scan_blocks(store: BlockStore, plan: QueryPlan, lut: jnp.ndarray,
     ``exec_mode="clustered"`` unless ``perm``/``unions`` are provided by
     a caller holding incremental plans (core/searcher.py); ``unions``
     alone also overrides the batch union of ``"grouped"`` ((1, U) row).
+    ``packed`` marks ``store.block_codes`` as a nibble-packed quant
+    plane (two 4-bit codes per byte) — the tier-1 compact scan; the
+    LUT width stays the logical M and ids/masks/DCO are untouched.
     """
     assert exec_mode in EXEC_MODES, exec_mode
     bq = plan.blocks.shape[0]
     if exec_mode == "grouped":
         dists = _scan_grouped(store, plan, lut, use_kernel, query_tile,
-                              union=None if unions is None else unions[0])
+                              union=None if unions is None else unions[0],
+                              packed=packed)
     elif exec_mode == "clustered":
         dists = _scan_clustered(store, plan, lut, use_kernel, query_tile,
-                                sel=sel, perm=perm, unions=unions)
+                                sel=sel, perm=perm, unions=unions,
+                                packed=packed)
     else:
-        dists = _scan_paged(store, plan, lut, use_kernel)
+        dists = _scan_paged(store, plan, lut, use_kernel, packed=packed)
 
     ids = store.block_ids[plan.blocks]             # (B, S, BLK)
     other = store.block_other[plan.blocks]

@@ -147,6 +147,37 @@ class RairsIndex:
             cache[params] = Searcher(self, params)
         return cache[params]
 
+    def plane(self, backend: str, codec=None):
+        """Attach (or fetch) a compact code plane — the tier-1 side of
+        the quantization ladder (repro/quant/, DESIGN.md §12).
+
+        Planes are derived lazily on first use and cached per backend:
+        the codec is trained (pq4) or closed-form (binary) from the
+        refine store, every id is encoded, and the codes are gathered
+        into this index's exact SEIL block layout, nibble-packed.  Pass
+        ``codec=`` to carry a trained codec across a rebuild
+        (compaction) — re-encoding is deterministic, so the carried
+        plane is bitwise the retrained one would be on identical data.
+        """
+        from ..quant import PLANE_BACKENDS, build_plane
+        if backend not in PLANE_BACKENDS:
+            raise ValueError(f"unknown plane backend {backend!r}; "
+                             f"choose from {PLANE_BACKENDS}")
+        cache = getattr(self, "_planes", None)
+        if cache is None:
+            cache = {}
+            self._planes = cache
+        hit = cache.get(backend)
+        if hit is not None and (codec is None or codec is hit.codec):
+            return hit
+        key = jax.random.fold_in(jax.random.PRNGKey(17),
+                                 PLANE_BACKENDS.index(backend))
+        cache[backend] = build_plane(
+            backend, key, np.asarray(self.vectors),
+            np.asarray(self.arrays.block_ids), codec=codec,
+            iters=self.config.pq_iters)
+        return cache[backend]
+
     def streaming(self, config=None):
         """Wrap this (immutable) index as the base epoch of a mutable
         ``StreamingIndex`` (core/stream/, DESIGN.md §8): inserts go to a

@@ -36,6 +36,15 @@ loads onto an 8-device mesh and vice versa.  ``load_index`` reassembles
 and returns the same index type as the v1/v2 path — pass ``mesh=`` to
 get a ``ShardedIndex`` back directly.  v1/v2 single-file bundles load
 unchanged (asserted against golden fixtures in tests/test_io_compat.py).
+
+Format v4 (DESIGN.md §12) adds the *quantization ladder*: attached
+compact planes persist as their codec books plus the per-id codes —
+the canonical pair from which the packed SEIL block layout re-derives
+deterministically on load (``quant.plane_block_codes`` is a pure
+gather), so the scan-form array never needs to travel.  A bundle is
+written as v4 **only when planes are attached**; an index without
+planes round-trips byte-identically to the v2/v3 writer, and v1-v3
+bundles load exactly as before — v4 is strictly additive.
 """
 from __future__ import annotations
 
@@ -53,9 +62,10 @@ from .seil import SeilArrays, SeilStats
 from .stream import StreamConfig, StreamingIndex
 
 INDEX_FORMAT = "rairs-index"
-INDEX_FORMAT_VERSION = 2          # single-file bundles
+INDEX_FORMAT_VERSION = 2          # single-file bundles without planes
 SHARDED_FORMAT_VERSION = 3        # manifest + per-shard bundles
-READ_FORMAT_VERSIONS = (1, 2, 3)  # v1 = v2 without the streaming section
+PLANE_FORMAT_VERSION = 4          # either layout + attached compact planes
+READ_FORMAT_VERSIONS = (1, 2, 3, 4)  # v1 = v2 without the streaming section
 MANIFEST_NAME = "MANIFEST.json"
 
 _SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
@@ -106,6 +116,18 @@ def _gather_arrays(index: Union[RairsIndex, StreamingIndex],
         arrays["delta_assigns"] = d.assigns[:d.count]
         arrays["delta_live"] = d.live[:d.count]
         arrays["base_live"] = np.packbits(stream._base_live)
+    # quantization-ladder planes (v4): codec books + per-id codes only —
+    # the packed block layout is a deterministic gather, re-derived on
+    # load.  Indexes with no attached planes keep the v2 byte layout.
+    planes = getattr(base, "_planes", None) or {}
+    if planes:
+        meta["format_version"] = PLANE_FORMAT_VERSION
+        meta["planes"] = sorted(planes)
+        for b in sorted(planes):
+            pp = planes[b]
+            arrays[f"plane_{b}_codebooks"] = np.asarray(
+                pp.codec.codebooks, np.float32)
+            arrays[f"plane_{b}_codes"] = np.asarray(pp.codes, np.uint8)
     return meta, arrays
 
 
@@ -165,17 +187,23 @@ def _save_sharded(meta: dict, arrays: dict, path, shards: int) -> None:
     for f in _TABLE_FIELDS + _STREAM_FIELDS:
         if f in arrays:
             common[f] = arrays[f]
+    # plane payloads are tiny (Mc << M) — they replicate with the tables
+    for f in arrays:
+        if f.startswith("plane_"):
+            common[f] = arrays[f]
     with open(os.path.join(path, "common.npz"), "wb") as fh:
         np.savez_compressed(fh, **common)
+    version = (PLANE_FORMAT_VERSION if "planes" in meta
+               else SHARDED_FORMAT_VERSION)
     manifest = {
         "format": INDEX_FORMAT,
-        "format_version": SHARDED_FORMAT_VERSION,
+        "format_version": version,
         "shards": shards,
         "common": "common.npz",
         "shard_files": shard_files,
         "block_rows": block_rows,
         "vector_rows": vector_rows,
-        "meta": dict(meta, format_version=SHARDED_FORMAT_VERSION),
+        "meta": dict(meta, format_version=version),
     }
     with open(os.path.join(path, MANIFEST_NAME), "w") as fh:
         json.dump(manifest, fh, indent=1)
@@ -209,12 +237,13 @@ def _load_npz_meta(path, z) -> dict:
         raise ValueError(f"{path}: not a {INDEX_FORMAT} bundle")
     meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
     _check_meta(path, meta)
-    if meta["format_version"] not in (1, INDEX_FORMAT_VERSION):
+    if meta["format_version"] not in (1, INDEX_FORMAT_VERSION,
+                                      PLANE_FORMAT_VERSION):
         raise ValueError(
-            f"{path}: single-file bundles carry format_version 1 or "
-            f"{INDEX_FORMAT_VERSION}, got {meta['format_version']} "
-            f"(v{SHARDED_FORMAT_VERSION} bundles are directories with a "
-            f"{MANIFEST_NAME})")
+            f"{path}: single-file bundles carry format_version 1, "
+            f"{INDEX_FORMAT_VERSION} or {PLANE_FORMAT_VERSION}, got "
+            f"{meta['format_version']} (v{SHARDED_FORMAT_VERSION} bundles "
+            f"are directories with a {MANIFEST_NAME})")
     return meta
 
 
@@ -224,10 +253,12 @@ def _read_manifest(mpath: str) -> dict:
     with open(mpath) as fh:
         manifest = json.load(fh)
     _check_meta(mpath, manifest)
-    if manifest.get("format_version") != SHARDED_FORMAT_VERSION:
+    if manifest.get("format_version") not in (SHARDED_FORMAT_VERSION,
+                                              PLANE_FORMAT_VERSION):
         raise ValueError(
             f"{mpath}: manifest version "
-            f"{manifest.get('format_version')} != {SHARDED_FORMAT_VERSION}")
+            f"{manifest.get('format_version')} not in "
+            f"({SHARDED_FORMAT_VERSION}, {PLANE_FORMAT_VERSION})")
     return manifest
 
 
@@ -259,10 +290,25 @@ def _index_from(meta: dict, get):
         codes=np.asarray(get("codes")) if meta["has_codes"] else None,
         build_seconds=dict(meta.get("build_seconds", {})),
     )
+    if meta.get("planes"):
+        from ..quant import PlanePack, plane_block_codes
+        block_ids = np.asarray(arrays.block_ids)
+        base._planes = {}
+        for b in meta["planes"]:
+            codec = PQCodebook(jnp.asarray(get(f"plane_{b}_codebooks")))
+            codes = np.asarray(get(f"plane_{b}_codes"), np.uint8)
+            base._planes[b] = PlanePack(
+                backend=b, codec=codec, codes=codes,
+                block_codes=plane_block_codes(codes, block_ids))
     sm = meta.get("streaming")
     if sm is None:
         return base
     stream = StreamingIndex(base, StreamConfig(**sm["stream_config"]))
+    if meta.get("planes"):
+        # restored codecs are the stream's carried ones: a later
+        # compaction re-encodes with them instead of retraining
+        stream._plane_codecs.update(
+            {b: base._planes[b].codec for b in meta["planes"]})
     stream.restore_state(
         epoch=sm["epoch"], version=sm["version"],
         base_live=np.unpackbits(

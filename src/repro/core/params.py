@@ -27,6 +27,39 @@ from .engine import EXEC_MODES
 # batches are chunked so the executable set stays small and bounded.
 MAX_AUTO_BUCKET = 1024
 
+# compact-plane backends the quant subsystem implements, plus "full":
+# scan the full-width codes but keep the widened survivor set — the
+# pure-widening ablation (monotone-recall baseline, tests/test_refine.py)
+REFINE_PLANES = ("pq4", "binary", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineParams:
+    """Two-tier scan knobs (quantization ladder, DESIGN.md §12).
+
+    plane          tier-1 code plane: "pq4" (coarse 4-bit PQ, packed two
+                   codes per byte), "binary" (RaBitQ-style sign codes
+                   behind the same interface), or "full" (no compact
+                   plane — widen the survivor set over the full-width
+                   codes; the recall-monotone ablation)
+    refine_factor  survivor widening: tier-1 keeps ``bigk * refine_factor``
+                   candidates for tier-2's exact re-rank.  A factor of 1
+                   leaves no margin for a coarser tier, so the ladder
+                   degenerates to the exact single-tier program —
+                   bitwise-identical to ``refine=None`` (asserted in
+                   tests/test_refine.py).
+    """
+    plane: str = "pq4"
+    refine_factor: int = 4
+
+    def __post_init__(self):
+        if self.plane not in REFINE_PLANES:
+            raise ValueError(
+                f"plane must be one of {REFINE_PLANES}, got {self.plane!r}")
+        if self.refine_factor < 1:
+            raise ValueError(
+                f"refine_factor must be >= 1, got {self.refine_factor}")
+
 
 @dataclasses.dataclass(frozen=True)
 class SearchParams:
@@ -62,6 +95,10 @@ class SearchParams:
                  hit/extend/miss counters and union sizes.
     batch_buckets  optional ascending pad-and-dispatch bucket sizes;
                  None -> powers of two up to MAX_AUTO_BUCKET
+    refine       two-tier scan (``RefineParams``): tier-1 scans the
+                 compact code plane keeping ``bigk * refine_factor``
+                 survivors, tier-2 exactly re-ranks them in finalize.
+                 None (default) is the single-tier exact path.
     """
     k: int = 10
     nprobe: int = 16
@@ -73,6 +110,7 @@ class SearchParams:
     query_tile: int = 8
     plan_reuse: bool = False
     batch_buckets: Optional[Tuple[int, ...]] = None
+    refine: Optional[RefineParams] = None
 
     def __post_init__(self):
         if self.k < 1:
@@ -99,10 +137,33 @@ class SearchParams:
                     "batch_buckets must be a non-empty ascending tuple of "
                     f"positive sizes, got {self.batch_buckets!r}")
             object.__setattr__(self, "batch_buckets", bb)
+        if self.refine is not None and not isinstance(self.refine,
+                                                      RefineParams):
+            raise ValueError(
+                f"refine must be a RefineParams or None, got "
+                f"{self.refine!r}")
 
     @property
     def bigk(self) -> int:
         return self.k * self.k_factor
+
+    @property
+    def bigk_eff(self) -> int:
+        """Tier-1 survivor budget: bigK widened by the refine factor."""
+        if self.refine is None:
+            return self.bigk
+        return self.bigk * self.refine.refine_factor
+
+    @property
+    def active_plane(self) -> Optional[str]:
+        """The compact-plane backend the scan substitutes, or None when
+        the program is the plain single-tier one (no refine, the "full"
+        widening ablation, or refine_factor=1 — which degenerates to the
+        exact path bitwise)."""
+        r = self.refine
+        if r is None or r.plane == "full" or r.refine_factor == 1:
+            return None
+        return r.plane
 
     def resolve(self, index) -> "SearchParams":
         """Pin index-dependent defaults and cross-check against the index."""

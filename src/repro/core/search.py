@@ -68,7 +68,8 @@ class SearchResult(NamedTuple):
     jax.jit,
     static_argnames=("nprobe", "bigk", "k", "max_scan", "metric",
                      "dedup_results", "use_kernel", "oversample",
-                     "exec_mode", "query_tile", "fused_topk"))
+                     "exec_mode", "query_tile", "fused_topk",
+                     "packed_codes"))
 def seil_search(
     arrays: SeilArrays,
     centroids: jnp.ndarray,       # (nlist, D)
@@ -87,6 +88,7 @@ def seil_search(
     exec_mode: str = "paged",
     query_tile: int = 8,
     fused_topk: bool = False,
+    packed_codes: bool = False,   # arrays carry a nibble-packed quant plane
 ) -> SearchResult:
     selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
     plan = plan_blocks(tables_from_arrays(arrays), selection,
@@ -98,12 +100,12 @@ def seil_search(
             store_from_arrays(arrays), plan, lut, selection.rank_of,
             fetch=finalize_fetch(bigk, oversample, dedup_results),
             exec_mode=exec_mode, use_kernel=use_kernel,
-            query_tile=query_tile, sel=selection.sel)
+            query_tile=query_tile, sel=selection.sel, packed=packed_codes)
     else:
         scan = scan_blocks(store_from_arrays(arrays), plan, lut,
                            selection.rank_of, exec_mode=exec_mode,
                            use_kernel=use_kernel, query_tile=query_tile,
-                           sel=selection.sel)
+                           sel=selection.sel, packed=packed_codes)
     out_ids, out_d, refine_dco = finalize_candidates(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,
@@ -144,19 +146,20 @@ def _stage_plan(arrays, codebook, selection, queries, *, max_scan, metric):
 @functools.partial(
     jax.jit,
     static_argnames=("fetch", "exec_mode", "use_kernel", "query_tile",
-                     "fused_topk", "has_live"))
+                     "fused_topk", "has_live", "packed_codes"))
 def _stage_scan(arrays, plan, lut, selection, live, *, fetch, exec_mode,
-                use_kernel, query_tile, fused_topk, has_live):
+                use_kernel, query_tile, fused_topk, has_live,
+                packed_codes=False):
     if fused_topk:
         return scan_blocks_topk(
             store_from_arrays(arrays), plan, lut, selection.rank_of,
             fetch=fetch, exec_mode=exec_mode, use_kernel=use_kernel,
             query_tile=query_tile, sel=selection.sel,
-            live=live if has_live else None)
+            live=live if has_live else None, packed=packed_codes)
     return scan_blocks(store_from_arrays(arrays), plan, lut,
                        selection.rank_of, exec_mode=exec_mode,
                        use_kernel=use_kernel, query_tile=query_tile,
-                       sel=selection.sel)
+                       sel=selection.sel, packed=packed_codes)
 
 
 @functools.partial(
@@ -187,6 +190,7 @@ def seil_search_traced(
     exec_mode: str = "paged",
     query_tile: int = 8,
     fused_topk: bool = False,
+    packed_codes: bool = False,
 ) -> SearchResult:
     """Stage-fenced ``seil_search`` for tracing: identical composition,
     one program per stage, span + fence at each boundary."""
@@ -203,7 +207,8 @@ def seil_search_traced(
             arrays, plan, lut, selection, lut,   # live unused (has_live=F)
             fetch=finalize_fetch(bigk, oversample, dedup_results),
             exec_mode=exec_mode, use_kernel=use_kernel,
-            query_tile=query_tile, fused_topk=fused_topk, has_live=False))
+            query_tile=query_tile, fused_topk=fused_topk, has_live=False,
+            packed_codes=packed_codes))
         sp.add(approx_dco=int(np.sum(np.asarray(scan.approx_dco))),
                scanned_blocks=int(np.sum(np.asarray(scan.scanned_blocks))))
     with obs.span("stage.finalize", cat="device") as sp:
@@ -268,7 +273,8 @@ def probe_plan(
 @functools.partial(
     jax.jit,
     static_argnames=("bigk", "k", "metric", "dedup_results", "use_kernel",
-                     "oversample", "exec_mode", "query_tile", "fused_topk"))
+                     "oversample", "exec_mode", "query_tile", "fused_topk",
+                     "packed_codes"))
 def scan_finalize(
     arrays: SeilArrays,
     vectors: jnp.ndarray,
@@ -285,6 +291,7 @@ def scan_finalize(
     exec_mode: str = "grouped",
     query_tile: int = 8,
     fused_topk: bool = False,
+    packed_codes: bool = False,
 ) -> SearchResult:
     """Stages 3-4 against caller-provided (possibly reused) unions."""
     if fused_topk:
@@ -292,12 +299,14 @@ def scan_finalize(
             store_from_arrays(arrays), probe.plan, probe.lut, probe.rank_of,
             fetch=finalize_fetch(bigk, oversample, dedup_results),
             exec_mode=exec_mode, use_kernel=use_kernel,
-            query_tile=query_tile, perm=probe.perm, unions=unions)
+            query_tile=query_tile, perm=probe.perm, unions=unions,
+            packed=packed_codes)
     else:
         scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
                            probe.rank_of, exec_mode=exec_mode,
                            use_kernel=use_kernel, query_tile=query_tile,
-                           perm=probe.perm, unions=unions)
+                           perm=probe.perm, unions=unions,
+                           packed=packed_codes)
     out_ids, out_d, refine_dco = finalize_candidates(
         scan.flat_d, scan.flat_i, bigk=bigk, k=k, vectors=vectors,
         queries=queries, metric=metric, dedup_results=dedup_results,

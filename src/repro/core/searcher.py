@@ -74,6 +74,9 @@ class PlanStats:
     union_live_sum: int = 0   # live entries actually scanned (per tile)
     own_live_sum: int = 0     # live entries this batch needed (per tile)
     width_sum: int = 0        # dispatched union-width buckets (per tile)
+    sig_deep_split: int = 0   # tiles the deep (beyond-lead) signature
+                              # separated from a lead-sharing neighbor —
+                              # the collisions a lead-only key would eat
 
     def summary(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -101,6 +104,10 @@ class Searcher:
         self.index = index
         self.params = params.resolve(index)
         self.epoch = getattr(index, "epoch", 0)
+        # two-tier scan (params.refine, DESIGN.md §12): resolve the
+        # compact plane once — sessions pin it like everything else
+        ap = self.params.active_plane
+        self._plane = index.plane(ap) if ap is not None else None
         self.stats = SearcherStats()
         self.plan_stats = PlanStats()
         self._compiled: Dict[Any, Any] = {}
@@ -135,59 +142,79 @@ class Searcher:
         A plain ``RairsIndex`` is immutable, so the base hook is a no-op;
         ``StreamingSearcher`` raises ``StaleSessionError`` here."""
 
+    def _scan_state(self) -> tuple:
+        """(arrays, codebook, packed) the scan stages run over: the
+        compact-plane substitution when a refine tier is active —
+        plane-packed block codes, the plane codec's LUT — else the
+        index's own full-width pair.  Everything downstream (vectors,
+        finalize) is untouched: tier-2 IS the existing exact re-rank,
+        just over the ``bigk_eff`` widened survivor set."""
+        idx = self.index
+        if self._plane is None:
+            return idx.arrays, idx.codebook, False
+        return (dataclasses.replace(idx.arrays,
+                                    block_codes=self._plane.block_codes),
+                self._plane.codec, True)
+
     def _lower(self, bucket: int):
         """Lower the search pipeline for one batch-size bucket."""
         p = self.params
         idx = self.index
+        arrays, codebook, packed = self._scan_state()
         q_spec = jax.ShapeDtypeStruct(
             (bucket, idx.vectors.shape[1]), jnp.float32)
         return seil_search.lower(
-            idx.arrays, idx.centroids, idx.codebook, idx.vectors, q_spec,
-            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            arrays, idx.centroids, codebook, idx.vectors, q_spec,
+            nprobe=p.nprobe, bigk=p.bigk_eff, k=p.k, max_scan=p.max_scan,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            fused_topk=p.fused_topk)
+            fused_topk=p.fused_topk, packed_codes=packed)
 
     def _call_inputs(self) -> tuple:
         """Runtime arguments preceding the query batch at dispatch."""
         idx = self.index
-        return (idx.arrays, idx.centroids, idx.codebook, idx.vectors)
+        arrays, codebook, _ = self._scan_state()
+        return (arrays, idx.centroids, codebook, idx.vectors)
 
     # -- incremental-plan hooks (probe -> plan-cache merge -> scan) --------
     def _lower_probe(self, bucket: int):
         """Lower the probe half (stages 1-2 + own unions) for one bucket."""
         p = self.params
         idx = self.index
+        arrays, codebook, _ = self._scan_state()
         q_spec = jax.ShapeDtypeStruct(
             (bucket, idx.vectors.shape[1]), jnp.float32)
         return probe_plan.lower(
-            idx.arrays, idx.centroids, idx.codebook, q_spec,
+            arrays, idx.centroids, codebook, q_spec,
             nprobe=p.nprobe, max_scan=p.max_scan, metric=idx.config.metric,
             exec_mode=p.exec_mode, query_tile=p.query_tile)
 
     def _probe_inputs(self) -> tuple:
         idx = self.index
-        return (idx.arrays, idx.centroids, idx.codebook)
+        arrays, codebook, _ = self._scan_state()
+        return (arrays, idx.centroids, codebook)
 
     def _lower_scan(self, bucket: int, probe_spec, unions_spec):
         """Lower the scan half (stages 3-4) at one union width."""
         p = self.params
         idx = self.index
+        arrays, _, packed = self._scan_state()
         q_spec = jax.ShapeDtypeStruct(
             (bucket, idx.vectors.shape[1]), jnp.float32)
         return scan_finalize.lower(
-            idx.arrays, idx.vectors, q_spec, probe_spec, unions_spec,
-            bigk=p.bigk, k=p.k, metric=idx.config.metric,
+            arrays, idx.vectors, q_spec, probe_spec, unions_spec,
+            bigk=p.bigk_eff, k=p.k, metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            fused_topk=p.fused_topk)
+            fused_topk=p.fused_topk, packed_codes=packed)
 
     def _scan_inputs(self) -> tuple:
         idx = self.index
-        return (idx.arrays, idx.vectors)
+        arrays, _, _ = self._scan_state()
+        return (arrays, idx.vectors)
 
     def _get_exe(self, key, lower_fn, cache=None):
         cache = self._compiled if cache is None else cache
@@ -219,14 +246,15 @@ class Searcher:
         to fencing the monolithic executable as one span."""
         p = self.params
         idx = self.index
+        arrays, codebook, packed = self._scan_state()
         return seil_search_traced(
-            idx.arrays, idx.centroids, idx.codebook, idx.vectors, qc,
-            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            arrays, idx.centroids, codebook, idx.vectors, qc,
+            nprobe=p.nprobe, bigk=p.bigk_eff, k=p.k, max_scan=p.max_scan,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            fused_topk=p.fused_topk)
+            fused_topk=p.fused_topk, packed_codes=packed)
 
     def _dispatch(self, bucket: int, qc: jnp.ndarray) -> SearchResult:
         """One padded chunk through either the monolithic executable or
@@ -252,12 +280,16 @@ class Searcher:
         with obs.span("stage.merge_unions_host", cat="host") as msp:
             own = np.asarray(pr.unions)
             t, w = own.shape
+            deep_split = 0
             if t == 1:                 # grouped: one batch-wide union
                 sigs = [(0, 0)]
             else:                      # clustered: name tiles by working set
-                lead = np.asarray(pr.sel[:, 0])[np.asarray(pr.perm)
-                                                ][::bucket // t]
-                sigs = tile_signatures(lead)
+                rows = np.asarray(pr.sel)[np.asarray(pr.perm)][::bucket // t]
+                sigs = tile_signatures(rows[:, 0], deep=rows)
+                # how many tiles the beyond-lead prefix disambiguated —
+                # distinct deep keys minus distinct leads this dispatch
+                deep_split = (len({(s[0], s[1]) for s in sigs})
+                              - len({s[0] for s in sigs}))
             cache = self._plan_cache.setdefault(bucket,
                                                 collections.OrderedDict())
             rows = [cache.get(s) for s in sigs]
@@ -284,9 +316,11 @@ class Searcher:
             ps.union_live_sum += int(live.sum())
             ps.own_live_sum += int(union_live(own).sum())
             ps.width_sum += wp * t
+            ps.sig_deep_split += deep_split
             msp.add(tiles=t, hits=int(hit.sum()), extends=int(ext.sum()),
                     misses=t - int(hit.sum()) - int(ext.sum()),
-                    union_live=int(live.sum()), width=wp)
+                    union_live=int(live.sum()), width=wp,
+                    sig_deep_split=deep_split)
             unions_w = jnp.asarray(used[:, :wp])
         probe_spec = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), pr)

@@ -116,6 +116,12 @@ class _Placement:
         self.base_epoch = None
         self.exec_cache: Dict[tuple, dict] = {}
         self.budget_cache: Dict[tuple, int] = {}   # derived max_scan_local
+        # compact-plane placements (DESIGN.md §12): per-epoch sharded
+        # packed block codes + replicated codec books, and per-version
+        # replicated delta plane codes — placed lazily on first refine
+        # session, dropped with the epoch exactly like the base
+        self.plane_base: Dict[str, tuple] = {}
+        self.plane_delta: Dict[str, tuple] = {}
 
 
 def shard_index(index, mesh, axes=("data",),
@@ -310,6 +316,8 @@ class ShardedIndex:
         if pl.base is None or pl.base_epoch != self.epoch:
             pl.base = self._place_base(base)
             pl.base_epoch = self.epoch
+            pl.plane_base.clear()
+            pl.plane_delta.clear()
         vecs = _pad_rows(vectors_full, nd, 0.0)
         n_l = vecs.shape[0] // nd
         lanes = np.arange(nd, dtype=np.int32)
@@ -319,6 +327,39 @@ class ShardedIndex:
             vec_lo=self._put(lanes * n_l, sh),
             delta_codes=delta_codes, delta_ids=delta_ids, live=live,
             signature=(pl.base.block_ids.shape[0], vecs.shape[0], cap, nd))
+
+    def plane(self, backend: str, codec=None):
+        """Forwarded plane accessor (``Searcher.__init__`` resolves the
+        session's plane through it): the wrapped index owns the codec
+        and the host-side layout; the mesh placement happens separately
+        in ``_plane_args``."""
+        return self.index.plane(backend, codec=codec)
+
+    def _plane_args(self, plane) -> tuple:
+        """Mesh placements of one compact plane: packed block codes
+        padded and row-sharded exactly like the base block store (same
+        padded TB, so per-device block-id windows line up), codec books
+        and the delta's plane codes replicated.  Cached per epoch /
+        version on the shared placement like their full-width twins."""
+        pl = self._placement
+        sh, rep = P(self.axes), P()
+        hit = pl.plane_base.get(plane.backend)
+        if hit is None:
+            codes = _pad_rows(np.asarray(plane.block_codes), self.ndev, 0)
+            hit = (self._put(codes, sh),
+                   self._put(plane.codec.codebooks, rep))
+            pl.plane_base[plane.backend] = hit
+        key = (plane.backend, self.version)
+        dhit = pl.plane_delta.get(plane.backend)
+        if dhit is None or dhit[0] != key:
+            if self.streaming:
+                dcodes = self.index._plane_delta_codes(plane.backend)
+            else:
+                dcodes = np.zeros(
+                    (0, int(plane.codec.codebooks.shape[0])), np.uint8)
+            dhit = (key, self._put(dcodes, rep))
+            pl.plane_delta[plane.backend] = dhit
+        return hit[0], hit[1], dhit[1]
 
     def _ensure_state(self) -> _PlacedState:
         pl = self._placement
@@ -467,23 +508,38 @@ class ShardedSearcher(Searcher):
                 f"version {sh.version}); mutations invalidate sessions — "
                 f"re-fetch via sharded.searcher(params)")
 
+    def _serve_args(self) -> tuple:
+        """Runtime serve-step arguments, with the compact-plane
+        substitution applied when a refine tier is active: sharded
+        packed block codes for the block store, the plane codec's books
+        for the LUT source, the plane's delta codes for the delta scan.
+        Everything else — vectors, tables, tombstones — is untouched;
+        tier-2 owner refinement runs over the exact shard vectors."""
+        args = self._state.serve_args()
+        if self._plane is None:
+            return args
+        bc, cb, dc = self.sharded._plane_args(self._plane)
+        args = list(args)
+        args[0], args[9], args[14] = bc, cb, dc
+        return tuple(args)
+
     def _build_step(self, stage: str):
         sh = self.sharded
         p = self.params
         idx = sh.index
         return build_serve_step(
-            nprobe=p.nprobe, bigk=p.bigk, k=p.k,
+            nprobe=p.nprobe, bigk=p.bigk_eff, k=p.k,
             max_scan_local=self.max_scan_local,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
             axes=sh.axes, ndev=sh.ndev, streaming=sh.streaming,
-            use_kernel=p.use_kernel, fused_topk=p.fused_topk, stage=stage)
+            use_kernel=p.use_kernel, fused_topk=p.fused_topk, stage=stage,
+            packed_codes=self._plane is not None)
 
     def _lower(self, bucket: int):
         sh = self.sharded
-        st = self._state
         serve = self._build_step("all")
         s, r = P(sh.axes), P()
         fn = jax.jit(shard_map(
@@ -499,10 +555,10 @@ class ShardedSearcher(Searcher):
                                    dropped_blocks=r)))
         q_spec = jax.ShapeDtypeStruct(
             (bucket, sh.index.vectors.shape[1]), jnp.float32)
-        return fn.lower(*st.serve_args(), q_spec)
+        return fn.lower(*self._serve_args(), q_spec)
 
     def _call_inputs(self) -> tuple:
-        return self._state.serve_args()
+        return self._serve_args()
 
     # -- traced two-program split (DESIGN.md §11) ----------------------
     def _lower_stage_scan(self, bucket: int):
@@ -510,7 +566,6 @@ class ShardedSearcher(Searcher):
         program; the per-device candidate streams come out sharded on
         their fetch axis (global width fetch*ndev)."""
         sh = self.sharded
-        st = self._state
         s, r = P(sh.axes), P()
         cand = P(None, sh.axes)
         fn = jax.jit(shard_map(
@@ -519,7 +574,7 @@ class ShardedSearcher(Searcher):
             out_specs=(cand, cand, r, r, r)))
         q_spec = jax.ShapeDtypeStruct(
             (bucket, sh.index.vectors.shape[1]), jnp.float32)
-        return fn.lower(*st.serve_args(), q_spec)
+        return fn.lower(*self._serve_args(), q_spec)
 
     def _lower_stage_tail(self, bucket: int, l_d, l_ids):
         """Lower the gather/finalize tail against the scan half's

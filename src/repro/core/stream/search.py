@@ -119,7 +119,7 @@ def _delta_candidates(lut, delta_codes, delta_ids, delta_post,
     static_argnames=("nprobe", "bigk", "k", "max_scan", "metric",
                      "dedup_results", "use_kernel", "oversample",
                      "exec_mode", "query_tile", "route_delta",
-                     "fused_topk"))
+                     "fused_topk", "packed_codes"))
 def streaming_search(
     arrays: SeilArrays,
     centroids: jnp.ndarray,       # (nlist, D)
@@ -144,6 +144,7 @@ def streaming_search(
     query_tile: int = 8,
     route_delta: bool = False,
     fused_topk: bool = False,
+    packed_codes: bool = False,   # arrays carry a nibble-packed quant plane
 ) -> SearchResult:
     selection = select_lists(queries, centroids, nprobe=nprobe, metric=metric)
     plan = plan_blocks(tables_from_arrays(arrays), selection,
@@ -157,12 +158,13 @@ def streaming_search(
             store_from_arrays(arrays), plan, lut, selection.rank_of,
             fetch=finalize_fetch(bigk, oversample, dedup_results),
             exec_mode=exec_mode, use_kernel=use_kernel,
-            query_tile=query_tile, sel=selection.sel, live=live)
+            query_tile=query_tile, sel=selection.sel, live=live,
+            packed=packed_codes)
     else:
         scan = scan_blocks(store_from_arrays(arrays), plan, lut,
                            selection.rank_of, exec_mode=exec_mode,
                            use_kernel=use_kernel, query_tile=query_tile,
-                           sel=selection.sel)
+                           sel=selection.sel, packed=packed_codes)
     dd, di, delta_dco = _delta_candidates(
         lut, delta_codes, delta_ids, delta_post, delta_assigns,
         selection.sel, selection.rank_of, route_delta)
@@ -207,6 +209,7 @@ def streaming_search_traced(
     delta_post, delta_assigns, live, queries, *, nprobe, bigk, k, max_scan,
     metric="l2", dedup_results=True, use_kernel=False, oversample=2,
     exec_mode="paged", query_tile=8, route_delta=False, fused_topk=False,
+    packed_codes=False,
 ) -> SearchResult:
     """Stage-fenced ``streaming_search`` for tracing: identical
     composition, span + fence per stage, delta DCO on its own span."""
@@ -225,7 +228,7 @@ def streaming_search_traced(
             fetch=finalize_fetch(bigk, oversample, dedup_results),
             exec_mode=exec_mode, use_kernel=use_kernel,
             query_tile=query_tile, fused_topk=fused_topk,
-            has_live=fused_topk))
+            has_live=fused_topk, packed_codes=packed_codes))
         sp.add(approx_dco=int(np.sum(np.asarray(scan.approx_dco))),
                scanned_blocks=int(np.sum(np.asarray(scan.scanned_blocks))))
     with obs.span("stage.delta_scan", cat="device",
@@ -250,7 +253,7 @@ def streaming_search_traced(
     jax.jit,
     static_argnames=("bigk", "k", "metric", "dedup_results", "use_kernel",
                      "oversample", "exec_mode", "query_tile", "route_delta",
-                     "fused_topk"))
+                     "fused_topk", "packed_codes"))
 def scan_finalize_stream(
     arrays: SeilArrays,
     vectors: jnp.ndarray,
@@ -273,6 +276,7 @@ def scan_finalize_stream(
     query_tile: int = 8,
     route_delta: bool = False,
     fused_topk: bool = False,
+    packed_codes: bool = False,
 ) -> SearchResult:
     """Streaming stages 3-4 against caller-provided (reused) unions —
     the probe half is the base ``probe_plan`` (the delta needs no block
@@ -283,12 +287,13 @@ def scan_finalize_stream(
             fetch=finalize_fetch(bigk, oversample, dedup_results),
             exec_mode=exec_mode, use_kernel=use_kernel,
             query_tile=query_tile, perm=probe.perm, unions=unions,
-            live=live)
+            live=live, packed=packed_codes)
     else:
         scan = scan_blocks(store_from_arrays(arrays), probe.plan, probe.lut,
                            probe.rank_of, exec_mode=exec_mode,
                            use_kernel=use_kernel, query_tile=query_tile,
-                           perm=probe.perm, unions=unions)
+                           perm=probe.perm, unions=unions,
+                           packed=packed_codes)
     dd, di, delta_dco = _delta_candidates(
         probe.lut, delta_codes, delta_ids, delta_post, delta_assigns,
         probe.sel, probe.rank_of, route_delta)

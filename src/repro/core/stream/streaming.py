@@ -299,6 +299,9 @@ class StreamingIndex:
         # and _int_to_ext is its inverse over the current id space
         self._ext_to_int = np.arange(self.n_base, dtype=np.int64)
         self._int_to_ext = np.arange(self.n_base, dtype=np.int64)
+        # compact-plane codecs outlive epochs: train once, re-encode
+        # every rebuilt base with the carried codec (quant/plane.py)
+        self._plane_codecs: Dict[str, object] = {}
         self._reset_epoch_state()
 
     def _reset_epoch_state(self):
@@ -317,6 +320,9 @@ class StreamingIndex:
         # arrays, so they survive delta capacity/posting bucket jumps
         # (keyed per params; dropped with the epoch like everything here)
         self._probe_cache: Dict[SearchParams, dict] = {}
+        # per-backend device mirrors of the delta's compact-plane codes,
+        # keyed by (version, capacity) — dropped with the epoch
+        self._plane_delta: Dict[str, tuple] = {}
 
     # ------------------------------------------------------------------
     # sizes / views
@@ -414,6 +420,38 @@ class StreamingIndex:
 
     def default_max_scan(self, nprobe: int, slack: float = 1.3) -> int:
         return self.base.default_max_scan(nprobe, slack)
+
+    def plane(self, backend: str, codec=None):
+        """The stream-level compact plane (DESIGN.md §12): delegates to
+        the current base epoch but *pins the codec* across compactions —
+        the first epoch trains it, every rebuilt base re-encodes its
+        surviving corpus with the carried codec (deterministic, so the
+        folded plane is bitwise what a reload would derive).  An
+        explicit ``codec=`` (bundle restore) takes precedence."""
+        if codec is None:
+            codec = self._plane_codecs.get(backend)
+        pp = self.base.plane(backend, codec=codec)
+        self._plane_codecs[backend] = pp.codec
+        return pp
+
+    def _plane_delta_codes(self, backend: str) -> jnp.ndarray:
+        """(capacity, Mc) uint8 compact codes over the delta buffer.
+
+        Deliberately *unpacked*: the delta scan is a per-slot gather-ADC
+        (stream/search.py), which composes with the plane codec's LUT
+        as-is — nibble packing only pays inside the blocked base scan.
+        Recomputed lazily per (version, capacity); the delta is small by
+        construction, so the O(capacity) encode rides the mutation
+        budget, never the steady-state query path."""
+        key = (self.version, self._delta.capacity)
+        hit = self._plane_delta.get(backend)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        from ...quant import encode_plane
+        codes = jnp.asarray(encode_plane(self.plane(backend).codec,
+                                         self._delta.vectors))
+        self._plane_delta[backend] = (key, codes)
+        return codes
 
     @property
     def vectors(self) -> jnp.ndarray:
@@ -822,6 +860,12 @@ class StreamingSearcher(Searcher):
     def __init__(self, stream: StreamingIndex, params: SearchParams):
         self.stream = stream
         self.version = stream.version
+        ap = params.active_plane
+        if ap is not None:
+            # pin the carried codec on the base's plane cache *before*
+            # Searcher.__init__ resolves it, so a post-compaction epoch
+            # re-encodes with the stream's codec instead of retraining
+            stream.plane(ap)
         super().__init__(stream.base, params)
         self.epoch = stream.epoch
         # pinned at session creation: a mutation that changes the answer
@@ -855,22 +899,41 @@ class StreamingSearcher(Searcher):
                 f"{st.epoch}, version {st.version}); mutations invalidate "
                 f"sessions — re-fetch via stream.searcher(params)")
 
+    def _stream_state(self) -> tuple:
+        """Streaming analogue of ``Searcher._scan_state``: when a refine
+        tier is active, substitute the plane-packed base block codes,
+        the plane codec (LUT source), and the plane's *unpacked* delta
+        codes — the delta gather-ADC and the blocked base scan then both
+        score tier-1 distances against the same codec, and tier-2 stays
+        the shared exact finalize over ``vectors_full``."""
+        idx = self.stream.base
+        dev = self.stream._device_state()
+        if self._plane is None:
+            return idx.arrays, idx.codebook, dev.delta_codes, False
+        return (dataclasses.replace(idx.arrays,
+                                    block_codes=self._plane.block_codes),
+                self._plane.codec,
+                self.stream._plane_delta_codes(self._plane.backend),
+                True)
+
     def _lower(self, bucket: int):
         p = self.params
         idx = self.stream.base
         dev = self.stream._device_state()
+        arrays, codebook, delta_codes, packed = self._stream_state()
         q_spec = jax.ShapeDtypeStruct(
             (bucket, idx.vectors.shape[1]), jnp.float32)
         return streaming_search.lower(
-            idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
-            dev.delta_codes, dev.delta_ids, self._post_arg(dev),
+            arrays, idx.centroids, codebook, dev.vectors_full,
+            delta_codes, dev.delta_ids, self._post_arg(dev),
             dev.delta_assigns, dev.live_full, q_spec,
-            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            nprobe=p.nprobe, bigk=p.bigk_eff, k=p.k, max_scan=p.max_scan,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            route_delta=self._route_delta, fused_topk=p.fused_topk)
+            route_delta=self._route_delta, fused_topk=p.fused_topk,
+            packed_codes=packed)
 
     def _dispatch_traced(self, bucket: int, qc):
         """Stage-fenced streaming dispatch (repro/obs/): the base stage
@@ -880,16 +943,18 @@ class StreamingSearcher(Searcher):
         p = self.params
         idx = self.stream.base
         dev = self.stream._device_state()
+        arrays, codebook, delta_codes, packed = self._stream_state()
         return streaming_search_traced(
-            idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
-            dev.delta_codes, dev.delta_ids, self._post_arg(dev),
+            arrays, idx.centroids, codebook, dev.vectors_full,
+            delta_codes, dev.delta_ids, self._post_arg(dev),
             dev.delta_assigns, dev.live_full, qc,
-            nprobe=p.nprobe, bigk=p.bigk, k=p.k, max_scan=p.max_scan,
+            nprobe=p.nprobe, bigk=p.bigk_eff, k=p.k, max_scan=p.max_scan,
             metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            route_delta=self._route_delta, fused_topk=p.fused_topk)
+            route_delta=self._route_delta, fused_topk=p.fused_topk,
+            packed_codes=packed)
 
     def _post_arg(self, dev) -> jnp.ndarray:
         """The posting-map argument: real directory when routed, a
@@ -902,8 +967,9 @@ class StreamingSearcher(Searcher):
     def _call_inputs(self) -> tuple:
         idx = self.stream.base
         dev = self.stream._device_state()
-        return (idx.arrays, idx.centroids, idx.codebook, dev.vectors_full,
-                dev.delta_codes, dev.delta_ids, self._post_arg(dev),
+        arrays, codebook, delta_codes, _ = self._stream_state()
+        return (arrays, idx.centroids, codebook, dev.vectors_full,
+                delta_codes, dev.delta_ids, self._post_arg(dev),
                 dev.delta_assigns, dev.live_full)
 
     # -- incremental-plan hooks: the probe half is the base index's own
@@ -913,22 +979,25 @@ class StreamingSearcher(Searcher):
         p = self.params
         idx = self.stream.base
         dev = self.stream._device_state()
+        arrays, _, delta_codes, packed = self._stream_state()
         q_spec = jax.ShapeDtypeStruct(
             (bucket, idx.vectors.shape[1]), jnp.float32)
         return scan_finalize_stream.lower(
-            idx.arrays, dev.vectors_full, dev.delta_codes, dev.delta_ids,
+            arrays, dev.vectors_full, delta_codes, dev.delta_ids,
             self._post_arg(dev), dev.delta_assigns, dev.live_full, q_spec,
             probe_spec, unions_spec,
-            bigk=p.bigk, k=p.k, metric=idx.config.metric,
+            bigk=p.bigk_eff, k=p.k, metric=idx.config.metric,
             dedup_results=idx.needs_result_dedup,
             use_kernel=p.use_kernel, oversample=idx.result_oversample,
             exec_mode=p.exec_mode, query_tile=p.query_tile,
-            route_delta=self._route_delta, fused_topk=p.fused_topk)
+            route_delta=self._route_delta, fused_topk=p.fused_topk,
+            packed_codes=packed)
 
     def _scan_inputs(self) -> tuple:
         idx = self.stream.base
         dev = self.stream._device_state()
-        return (idx.arrays, dev.vectors_full, dev.delta_codes,
+        arrays, _, delta_codes, _ = self._stream_state()
+        return (arrays, dev.vectors_full, delta_codes,
                 dev.delta_ids, self._post_arg(dev), dev.delta_assigns,
                 dev.live_full)
 

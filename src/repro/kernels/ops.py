@@ -32,38 +32,70 @@ def _pad_m(lut: jnp.ndarray, block_codes: jnp.ndarray, align: int):
     return lut, block_codes
 
 
-@functools.partial(jax.jit, static_argnames=())
+def _pad_m_packed(lut: jnp.ndarray, block_codes: jnp.ndarray, on_tpu: bool):
+    """Align a nibble-packed code plane with its LUT.
+
+    The kernel unpacks each byte into two codes, so its effective M is
+    always 2x the byte width: the LUT is zero-padded to that width on
+    every backend (this also absorbs an odd Mc's phantom hi nibble),
+    and on TPU the byte width is first padded to half the uint8 lane
+    tile so the unpacked M lands on the lane boundary.  Padded bytes
+    are 0 -> both nibbles select zero LUT rows -> contribute nothing.
+    """
+    mb = block_codes.shape[-1]
+    if on_tpu:
+        pad_b = (-mb) % (_LANE // 2)
+        if pad_b:
+            block_codes = jnp.pad(block_codes,
+                                  ((0, 0), (0, 0), (0, pad_b)))
+            mb += pad_b
+    pad = 2 * mb - lut.shape[1]
+    if pad:
+        lut = jnp.pad(lut, ((0, 0), (0, pad), (0, 0)))
+    return lut, block_codes
+
+
+def _align(lut, block_codes, packed: bool, on_tpu: bool):
+    if packed:
+        return _pad_m_packed(lut, block_codes, on_tpu)
+    if on_tpu:
+        return _pad_m(lut, block_codes, _LANE)
+    return lut, block_codes
+
+
+@functools.partial(jax.jit, static_argnames=("packed",))
 def pq_scan_paged(lut: jnp.ndarray, block_codes: jnp.ndarray,
-                  block_idx: jnp.ndarray) -> jnp.ndarray:
+                  block_idx: jnp.ndarray, *,
+                  packed: bool = False) -> jnp.ndarray:
     """Per-query paged ADC scan.  lut (B, M, K) f32, block_codes
     (TB, BLK, M) uint8, block_idx (B, S) int32 (>= 0) -> (B, S, BLK) f32."""
     on_tpu = _on_tpu()
-    if on_tpu:
-        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    lut, block_codes = _align(lut, block_codes, packed, on_tpu)
     return pq_scan_paged_kernel(lut, block_codes, block_idx.astype(jnp.int32),
-                                query_tile=1, interpret=not on_tpu)
+                                query_tile=1, interpret=not on_tpu,
+                                packed=packed)
 
 
 def pq_scan_grouped(lut: jnp.ndarray, block_codes: jnp.ndarray,
-                    shared_idx: jnp.ndarray, query_tile: int = 8
-                    ) -> jnp.ndarray:
+                    shared_idx: jnp.ndarray, query_tile: int = 8,
+                    *, packed: bool = False) -> jnp.ndarray:
     """List-major batch mode (paper §5.3 cache optimization): all B queries
     score the SAME scan list.  lut (B, M, K), shared_idx (S,) -> (B, S, BLK).
     The code tile for each position stays resident in VMEM across the
     query-tile grid steps."""
     b = lut.shape[0]
     on_tpu = _on_tpu()
-    if on_tpu:
-        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    lut, block_codes = _align(lut, block_codes, packed, on_tpu)
     idx = jnp.broadcast_to(shared_idx[None, :],
                            (b // query_tile, shared_idx.shape[0]))
     return pq_scan_tiled_kernel(lut, block_codes, idx.astype(jnp.int32),
-                                query_tile=query_tile, interpret=not on_tpu)
+                                query_tile=query_tile, interpret=not on_tpu,
+                                packed=packed)
 
 
 def pq_scan_tiled(lut: jnp.ndarray, block_codes: jnp.ndarray,
-                  tile_idx: jnp.ndarray, query_tile: int = 8
-                  ) -> jnp.ndarray:
+                  tile_idx: jnp.ndarray, query_tile: int = 8,
+                  *, packed: bool = False) -> jnp.ndarray:
     """Clustered mode (locality-aware §5.3): each query *tile* scores its
     own scan list — the tile's block union, padded per tile rather than
     to the batch-wide maximum.  lut (B, M, K) in cluster order, tile_idx
@@ -72,17 +104,17 @@ def pq_scan_tiled(lut: jnp.ndarray, block_codes: jnp.ndarray,
     the code tile for each union position stays resident in VMEM across
     its tile's grid steps."""
     on_tpu = _on_tpu()
-    if on_tpu:
-        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    lut, block_codes = _align(lut, block_codes, packed, on_tpu)
     return pq_scan_tiled_kernel(lut, block_codes, tile_idx.astype(jnp.int32),
-                                query_tile=query_tile, interpret=not on_tpu)
+                                query_tile=query_tile, interpret=not on_tpu,
+                                packed=packed)
 
 
 def pq_scan_topk(lut: jnp.ndarray, block_codes: jnp.ndarray,
                  block_ids: jnp.ndarray, block_other: jnp.ndarray,
                  tile_idx: jnp.ndarray, rank_of: jnp.ndarray,
                  slot_of: jnp.ndarray, rank_u: jnp.ndarray, dead=None,
-                 *, fetch: int, query_tile: int = 8):
+                 *, fetch: int, query_tile: int = 8, packed: bool = False):
     """Fused scan -> top-``fetch``: the paged ADC scan with the keep mask
     and the stable partial top-k folded into the kernel, so only
     ``fetch`` candidates per query cross the HBM boundary instead of
@@ -93,9 +125,9 @@ def pq_scan_topk(lut: jnp.ndarray, block_codes: jnp.ndarray,
     Returns (acc_d, acc_pos, acc_id, dco) — (B, fetch) sorted candidate
     triple + (B,) logical DCO."""
     on_tpu = _on_tpu()
-    if on_tpu:
-        lut, block_codes = _pad_m(lut, block_codes, _LANE)
+    lut, block_codes = _align(lut, block_codes, packed, on_tpu)
     return pq_scan_topk_kernel(
         lut, block_codes, block_ids, block_other,
         tile_idx.astype(jnp.int32), rank_of, slot_of, rank_u, dead,
-        query_tile=query_tile, fetch=fetch, interpret=not on_tpu)
+        query_tile=query_tile, fetch=fetch, interpret=not on_tpu,
+        packed=packed)

@@ -40,30 +40,57 @@ from jax.experimental.pallas import tpu as pltpu
 from .topk import PAD_POS, bitonic_sort, merge_topf, pow2_ceil
 
 
-def _kernel(idx_ref, lut_ref, codes_ref, out_ref):
-    """One grid step: score one code block for QT queries.
+def _tile_codes(codes_ref, packed: bool) -> jnp.ndarray:
+    """Code tile -> (BLK, M) int32 codes, unpacking nibble pairs in-VMEM.
 
-    lut_ref:   (QT, M, K) f32 in VMEM
-    codes_ref: (BLK, M) uint8 in VMEM (the paged block)
-    out_ref:   (QT, 1, BLK) f32
+    A packed tile (quant plane, two 4-bit codes per byte) carries MB =
+    M/2 bytes; the lo nibble is the even subquantizer, hi the odd —
+    the single layout defined by ``quant/nibbles.py``.  Callers
+    guarantee 2*MB == lut M (ops wrappers zero-pad the LUT so a padded
+    byte's two zero codes select zero rows and contribute nothing).
     """
-    qt, m, k = lut_ref.shape
-    blk = codes_ref.shape[1]
-    codes = codes_ref[0].astype(jnp.int32)                     # (BLK, M)
-    # one-hot over the K table entries; flatten (M, K) -> MK for the MXU
-    sel = codes[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
-    oh = sel.astype(jnp.float32).reshape(blk, m * k)           # (BLK, MK)
-    lut = lut_ref[...].reshape(qt, m * k)                      # (QT, MK)
-    # (QT, MK) @ (MK, BLK) on the MXU: every query scores the block at once
-    d = jax.lax.dot_general(lut, oh, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    out_ref[...] = d[:, None, :]
+    raw = codes_ref[0].astype(jnp.int32)                       # (BLK, MB)
+    if not packed:
+        return raw
+    blk, mb = raw.shape
+    lo = raw & 15
+    hi = raw >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(blk, 2 * mb)
 
 
-@functools.partial(jax.jit, static_argnames=("query_tile", "interpret"))
+def _make_kernel(packed: bool):
+    """Body factory for the unfused scan (packed-ness is static)."""
+
+    def _kernel(idx_ref, lut_ref, codes_ref, out_ref):
+        """One grid step: score one code block for QT queries.
+
+        lut_ref:   (QT, M, K) f32 in VMEM
+        codes_ref: (BLK, MB) uint8 in VMEM (the paged block; MB = M, or
+                   M/2 when nibble-packed)
+        out_ref:   (QT, 1, BLK) f32
+        """
+        qt, m, k = lut_ref.shape
+        codes = _tile_codes(codes_ref, packed)                 # (BLK, M)
+        blk = codes.shape[0]
+        # one-hot over the K table entries; flatten (M, K) -> MK for the MXU
+        sel = (codes[:, :, None]
+               == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2))
+        oh = sel.astype(jnp.float32).reshape(blk, m * k)       # (BLK, MK)
+        lut = lut_ref[...].reshape(qt, m * k)                  # (QT, MK)
+        # (QT, MK) @ (MK, BLK) on the MXU: every query scores the block at once
+        d = jax.lax.dot_general(lut, oh, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        out_ref[...] = d[:, None, :]
+
+    return _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("query_tile", "interpret", "packed"))
 def pq_scan_tiled_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
                          tile_idx: jnp.ndarray, *, query_tile: int = 8,
-                         interpret: bool = False) -> jnp.ndarray:
+                         interpret: bool = False,
+                         packed: bool = False) -> jnp.ndarray:
     """Per-tile paged scan: every query tile pages its *own* scan list.
 
     lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, tile_idx
@@ -72,22 +99,24 @@ def pq_scan_tiled_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
     granularity — the clustered exec mode hands each tile its own
     (tile-padded) block union with no re-broadcast to a batch-wide
     list.  B % query_tile == 0; entries must be valid (callers clamp
-    padding to 0 and mask downstream)."""
+    padding to 0 and mask downstream).  With ``packed=True`` the code
+    tile carries two 4-bit codes per byte (quant plane) and M must be
+    2x the byte width — half the DMA bytes per block."""
     b, m, k = lut.shape
     qb, s = tile_idx.shape
-    tb, blk, m2 = block_codes.shape
-    assert m2 == m, (m2, m)
+    tb, blk, mb = block_codes.shape
+    assert (2 * mb if packed else mb) == m, (mb, m, packed)
     assert b == qb * query_tile, (b, qb, query_tile)
 
     grid = (qb, s)
     kernel = pl.pallas_call(
-        _kernel,
+        _make_kernel(packed),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((query_tile, m, k), lambda qi, si, idx: (qi, 0, 0)),
-                pl.BlockSpec((1, blk, m),
+                pl.BlockSpec((1, blk, mb),
                              lambda qi, si, idx: (idx[qi, si], 0, 0)),
             ],
             out_specs=pl.BlockSpec((query_tile, 1, blk),
@@ -101,7 +130,7 @@ def pq_scan_tiled_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
 
 def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
                          block_idx: jnp.ndarray, *, query_tile: int = 8,
-                         interpret: bool = False,
+                         interpret: bool = False, packed: bool = False,
                          debug: bool = False) -> jnp.ndarray:
     """lut (B, M, K) f32, block_codes (TB, BLK, M) uint8, block_idx (B, S)
     -> (B, S, BLK) f32.  B % query_tile == 0; block_idx entries must be
@@ -136,10 +165,12 @@ def pq_scan_paged_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
                 shared, "pq_scan_paged_kernel: tile rows of block_idx "
                 "disagree under query_tile > 1 (tile-shared-list invariant)")
     return pq_scan_tiled_kernel(lut, block_codes, rows[:, 0, :],
-                                query_tile=query_tile, interpret=interpret)
+                                query_tile=query_tile, interpret=interpret,
+                                packed=packed)
 
 
-def _make_topk_kernel(query_tile: int, blk: int, f: int, with_dead: bool):
+def _make_topk_kernel(query_tile: int, blk: int, f: int, with_dead: bool,
+                      packed: bool = False):
     """Kernel body factory for the fused scan->top-k (shapes are static)."""
 
     def kernel(idx_ref, lut_ref, codes_ref, bids_ref, bother_ref, rank_ref,
@@ -162,8 +193,8 @@ def _make_topk_kernel(query_tile: int, blk: int, f: int, with_dead: bool):
             dco_ref[...] = jnp.zeros((qt, 1), jnp.int32)
 
         # -- score the paged block: same one-hot MXU contraction as the
-        # unfused kernel (_kernel), so distances are bitwise identical
-        codes = codes_ref[0].astype(jnp.int32)                 # (BLK, M)
+        # unfused kernel (_make_kernel), so distances are bitwise identical
+        codes = _tile_codes(codes_ref, packed)                 # (BLK, M)
         onehot = (codes[:, :, None]
                   == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2))
         oh = onehot.astype(jnp.float32).reshape(blk, m * k)
@@ -215,13 +246,14 @@ def _make_topk_kernel(query_tile: int, blk: int, f: int, with_dead: bool):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("query_tile", "fetch", "interpret"))
+                   static_argnames=("query_tile", "fetch", "interpret",
+                                    "packed"))
 def pq_scan_topk_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
                         block_ids: jnp.ndarray, block_other: jnp.ndarray,
                         tile_idx: jnp.ndarray, rank_of: jnp.ndarray,
                         slot_of: jnp.ndarray, rank_u: jnp.ndarray,
                         dead=None, *, query_tile: int = 8, fetch: int = 64,
-                        interpret: bool = False):
+                        interpret: bool = False, packed: bool = False):
     """Fused paged scan -> partial top-``fetch``: only ``fetch`` candidates
     per query ever leave the kernel, instead of (S, BLK) scores.
 
@@ -249,8 +281,8 @@ def pq_scan_topk_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
     """
     b, m, k = lut.shape
     qb, s = tile_idx.shape
-    tb, blk, m2 = block_codes.shape
-    assert m2 == m, (m2, m)
+    tb, blk, mb = block_codes.shape
+    assert (2 * mb if packed else mb) == m, (mb, m, packed)
     assert b == qb * query_tile, (b, qb, query_tile)
     assert blk == pow2_ceil(blk), f"block size must be a power of 2: {blk}"
     assert slot_of.shape == (b, s), (slot_of.shape, (b, s))
@@ -261,7 +293,7 @@ def pq_scan_topk_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
 
     in_specs = [
         pl.BlockSpec((query_tile, m, k), lambda qi, si, idx: (qi, 0, 0)),
-        pl.BlockSpec((1, blk, m), lambda qi, si, idx: (idx[qi, si], 0, 0)),
+        pl.BlockSpec((1, blk, mb), lambda qi, si, idx: (idx[qi, si], 0, 0)),
         pl.BlockSpec((1, blk), lambda qi, si, idx: (idx[qi, si], 0)),
         pl.BlockSpec((1, blk), lambda qi, si, idx: (idx[qi, si], 0)),
         pl.BlockSpec((query_tile, nlist), lambda qi, si, idx: (qi, 0)),
@@ -277,7 +309,7 @@ def pq_scan_topk_kernel(lut: jnp.ndarray, block_codes: jnp.ndarray,
         operands.append(dead.astype(jnp.uint8))
 
     kernel = pl.pallas_call(
-        _make_topk_kernel(query_tile, blk, f, with_dead),
+        _make_topk_kernel(query_tile, blk, f, with_dead, packed),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(qb, s),

@@ -75,11 +75,19 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro import obs
-from repro.core import (IndexConfig, SearchParams, StreamConfig,
-                        StreamingIndex, available_strategies, build_index,
-                        dco_summary, ground_truth, load_index,
+from repro.core import (IndexConfig, RefineParams, SearchParams,
+                        StreamConfig, StreamingIndex, available_strategies,
+                        build_index, dco_summary, ground_truth, load_index,
                         read_index_meta, recall_at_k, save_index)
 from repro.data import make_dataset
+
+
+def refine_params(args):
+    """``RefineParams`` from --refine-plane/--refine-factor (None = off)."""
+    if args.refine_plane is None:
+        return None
+    return RefineParams(plane=args.refine_plane,
+                        refine_factor=args.refine_factor)
 
 
 def apply_stream_ops(index, args, x, rows_used: int):
@@ -137,7 +145,8 @@ def run_gateway(serving, args, q, compact_async: bool = False):
     params = SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel,
-        fused_topk=args.fused_topk, plan_reuse=args.plan_reuse)
+        fused_topk=args.fused_topk, plan_reuse=args.plan_reuse,
+        refine=refine_params(args))
     with Gateway(serving, params, config=cfg, sinks=sinks) as gw:
         for point, qps in enumerate(args.offered_qps):
             handover = None
@@ -210,6 +219,16 @@ def main():
                     help="fuse candidate selection into the scan stage "
                          "(with --use-kernel: VMEM-resident top-k inside "
                          "the Pallas kernel, DESIGN.md §9)")
+    ap.add_argument("--refine-plane", default=None,
+                    choices=("pq4", "binary", "full"),
+                    help="two-tier ladder (DESIGN.md §12): scan this "
+                         "compact plane in tier-1 and exactly re-rank the "
+                         "widened survivor set in tier-2 ('full' = "
+                         "widening-only ablation)")
+    ap.add_argument("--refine-factor", type=int, default=4, metavar="R",
+                    help="tier-1 survivor widening: tier-2 re-ranks "
+                         "bigk*R candidates (R=1 is bitwise the "
+                         "single-tier path)")
     ap.add_argument("--save", metavar="PATH", default=None,
                     help="persist the index bundle (after any stream ops)")
     ap.add_argument("--load", metavar="PATH", default=None,
@@ -372,7 +391,8 @@ def main():
     searcher = serving.searcher(SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel,
-        fused_topk=args.fused_topk, plan_reuse=args.plan_reuse))
+        fused_topk=args.fused_topk, plan_reuse=args.plan_reuse,
+        refine=refine_params(args)))
 
     # score against the index's own live corpus (== x when freshly built;
     # under churn the oracle runs over survivors with ids mapped back)

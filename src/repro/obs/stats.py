@@ -49,19 +49,53 @@ def scan_traffic_model(*, scan_width: int, fetch: int) -> Dict[str, float]:
 def session_traffic_model(searcher) -> Dict[str, Any]:
     """The scan-stage traffic model at a live session's operating point
     (scan width from the resolved params, fetch from the index's
-    finalize contract)."""
+    finalize contract).
+
+    When the session runs the two-tier ladder (``params.refine``,
+    DESIGN.md §12) a ``refine`` sub-dict reports the tier split: the
+    compact plane's geometry (m_compact LUT lookups and packed
+    code bytes per scanned item vs the full plane's m_full), the
+    widened ``bigk_eff`` survivor budget, the modeled per-query code
+    read traffic of each tier-1 variant, and the weighted total-ops
+    model (tier-1 LUT lookups + tier-2 exact dims) against the
+    single-tier baseline — the same accounting ``bench_refine`` and
+    ``check_regression`` gate on, so serving snapshots and committed
+    benches can never disagree about the claimed reduction."""
     from ..core.search import finalize_fetch
     p = searcher.params
     idx = searcher.index
     base = getattr(idx, "base", idx)          # StreamingIndex -> base
     blk = int(base.arrays.block_codes.shape[1])
     scan_width = p.max_scan * blk
-    fetch = min(finalize_fetch(p.bigk, idx.result_oversample,
+    fetch = min(finalize_fetch(p.bigk_eff, idx.result_oversample,
                                idx.needs_result_dedup), scan_width)
-    return {"scan_width": scan_width, "fetch": fetch, "block": blk,
-            "max_scan": p.max_scan, "fused_topk": p.fused_topk,
-            "bytes_per_query": scan_traffic_model(scan_width=scan_width,
-                                                  fetch=fetch)}
+    out = {"scan_width": scan_width, "fetch": fetch, "block": blk,
+           "max_scan": p.max_scan, "fused_topk": p.fused_topk,
+           "bytes_per_query": scan_traffic_model(scan_width=scan_width,
+                                                 fetch=fetch)}
+    plane = getattr(searcher, "_plane", None)
+    if plane is not None:
+        m_full = int(base.codebook.m)
+        dim = int(base.vectors.shape[1])
+        tier1_ops = scan_width * plane.m
+        tier2_ops = p.bigk_eff * dim
+        single_ops = scan_width * m_full + p.bigk * dim
+        out["refine"] = {
+            "plane": plane.backend,
+            "refine_factor": p.refine.refine_factor,
+            "bigk": p.bigk, "bigk_eff": p.bigk_eff,
+            "m_compact": plane.m, "m_full": m_full,
+            "lookups_per_item": plane.m,
+            "code_bytes_per_item": plane.bytes_per_item,
+            "full_code_bytes_per_item": m_full,
+            "tier1_code_read_bytes": scan_width * plane.bytes_per_item,
+            "single_tier_code_read_bytes": scan_width * m_full,
+            "tier1_ops": tier1_ops, "tier2_ops": tier2_ops,
+            "total_ops": tier1_ops + tier2_ops,
+            "single_tier_ops": single_ops,
+            "total_ops_reduction_x": single_ops / (tier1_ops + tier2_ops),
+        }
+    return out
 
 
 def _trace_section(tracer: Tracer) -> Dict[str, Any]:
@@ -110,7 +144,10 @@ def snapshot_all(*, gateway=None, gateway_stats: Optional[dict] = None,
                 handover + session + stream state.
       hbm_model ``session_traffic_model``: scan_width / fetch / block /
                 max_scan / fused_topk + modeled bytes_per_query
-                (unfused vs fused write and roundtrip, reductions).
+                (unfused vs fused write and roundtrip, reductions);
+                plus ``refine`` (tier geometry, per-tier ops and code
+                read traffic, total_ops_reduction_x vs single-tier)
+                when the session runs the two-tier ladder.
       trace     per-span-name aggregates (count / total_s / mean_ms /
                 summed counters), fence + drop counts, and
                 ``stage_attribution`` (stage time / dispatch time) and

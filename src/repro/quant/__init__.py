@@ -1,0 +1,20 @@
+"""Quantization ladder (DESIGN.md §12): compact code planes for the
+two-tier scan — tier-1 scans a 4-bit-packed compact plane through the
+unchanged engine, tier-2 exactly re-ranks the widened survivor set in
+``finalize_candidates``.
+
+``nibbles`` is the packed code layout (dependency-free; the engine and
+kernels import it directly); ``plane`` holds the backends (pq4 /
+binary), the ``PlanePack`` attachment container, and the SEIL block-
+layout derivation.  ``repro.core`` is only imported lazily inside
+functions, so this package is import-safe from anywhere in the stack.
+"""
+from .nibbles import pack_nibbles, packed_width, unpack_nibbles
+from .plane import (PLANE_BACKENDS, PlanePack, build_plane, compact_subdim,
+                    encode_plane, plane_block_codes, train_plane)
+
+__all__ = [
+    "PLANE_BACKENDS", "PlanePack", "build_plane", "compact_subdim",
+    "encode_plane", "pack_nibbles", "packed_width", "plane_block_codes",
+    "train_plane", "unpack_nibbles",
+]

@@ -1,0 +1,53 @@
+"""Packed 4-bit code layout shared by the quant planes and the scan.
+
+A compact plane stores two 4-bit codes per byte (lo nibble = even
+subquantizer, hi nibble = odd), so the tier-1 scan reads half the code
+bytes of an unpacked plane with the same ksub<=16 codebook.  These
+helpers are the single definition of that layout — `plane.py` packs
+with them at attach time, and the engine/kernel scan paths unpack with
+them in-register (core/engine/scan.py jnp fallback) or in-VMEM
+(kernels/pq_scan.py), so packer and unpacker can never diverge.
+
+Deliberately dependency-free (numpy/jnp only): imported from both the
+kernels package and the engine without touching `repro.core`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def packed_width(m: int) -> int:
+    """Code bytes per item for an m-subquantizer 4-bit plane."""
+    return (m + 1) // 2
+
+
+def pack_nibbles(codes: np.ndarray) -> np.ndarray:
+    """(..., M) uint8 codes < 16 -> (..., ceil(M/2)) packed bytes.
+
+    Odd M pads a zero code into the final hi nibble; the scan's LUT is
+    zero-padded to 2*ceil(M/2) rows so that phantom code contributes 0.
+    """
+    codes = np.asarray(codes)
+    if codes.size and int(codes.max()) >= 16:
+        raise ValueError("pack_nibbles needs 4-bit codes (< 16)")
+    m = codes.shape[-1]
+    if m % 2:
+        pad = np.zeros(codes.shape[:-1] + (1,), codes.dtype)
+        codes = np.concatenate([codes, pad], axis=-1)
+    lo = codes[..., 0::2].astype(np.uint8)
+    hi = codes[..., 1::2].astype(np.uint8)
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(..., ceil(M/2)) packed bytes -> (..., m) int32 codes (jit-safe).
+
+    Interleaves lo/hi nibbles back into subquantizer order and slices
+    off the odd-M phantom column.  Works on numpy arrays too.
+    """
+    lo = (packed & 15).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    out = jnp.stack([lo, hi], axis=-1)
+    out = out.reshape(packed.shape[:-1] + (2 * packed.shape[-1],))
+    return out[..., :m]

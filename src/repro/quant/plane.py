@@ -1,0 +1,151 @@
+"""Compact code planes — the tier-1 side of the quantization ladder.
+
+The two-tier scan (DESIGN.md §12) runs the existing four-stage engine
+over a *compact plane*: a second, coarser set of per-item codes laid
+out in the exact same SEIL block geometry as the full-width codes, so
+every scan path (paged/grouped/clustered, jnp or Pallas, frozen/
+streaming/sharded) executes unchanged with three substitutions — the
+plane's packed block codes for ``arrays.block_codes``, the plane's
+codebook for the ADC LUT, and a survivor budget widened to
+``bigk * refine_factor``.  Tier-2 is the engine's own
+``finalize_candidates`` exact re-rank over the untouched vector store.
+
+Every backend reduces to a ``PQCodebook`` with ksub <= 16, so ADC LUT
+construction, encoding and decoding reuse ``core/pq.py`` verbatim:
+
+``pq4``     a coarser product quantizer trained with ``pq_train`` at
+            dsub = 8 (falling back to 4 / 2 for small or odd dims) —
+            Mc = D/8 vs the full plane's M = D/2, i.e. 4x fewer LUT
+            lookups and 8x fewer code bytes per scanned item once
+            nibble-packed.
+``binary``  a RaBitQ-style sign code with a *virtual* codebook built in
+            closed form (no k-means): per-dimension mean/scale over
+            groups of 4 dims, corner c of group g reconstructing
+            ``mean + scale * (2*bit_j(c) - 1)``.  Nearest-corner
+            encoding of x is exactly ``x > mean`` per dimension (the
+            sign bit), and the standard ADC LUT against the corners is
+            the asymmetric query-to-corner distance.
+
+Codecs are tiny (Mc * ksub * dsub floats) and deterministic given
+(vectors, key), so compaction re-derives a plane bitwise by re-encoding
+the surviving corpus with the carried-over codec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .nibbles import pack_nibbles, packed_width
+
+PLANE_BACKENDS: Tuple[str, ...] = ("pq4", "binary")
+
+
+def compact_subdim(d: int) -> int:
+    """Subspace width of the pq4 plane: as coarse as the dim allows."""
+    if d % 8 == 0 and d >= 16:
+        return 8
+    if d % 4 == 0:
+        return 4
+    if d % 2 == 0:
+        return 2
+    raise ValueError(f"pq4 plane needs an even dimension, got d={d}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanePack:
+    """One attached compact plane: codec + per-id codes + block layout.
+
+    ``codes`` are the unpacked per-id codes (n, Mc) — the persistence
+    and delta-append form.  ``block_codes`` is the scan form: the SEIL
+    block-id gather of ``codes``, nibble-packed to (TB, BLK, ceil(Mc/2))
+    so a block tile carries half the bytes of an unpacked plane.
+    """
+    backend: str
+    codec: object               # core.pq.PQCodebook, ksub <= 16
+    codes: np.ndarray           # (n, Mc) uint8 per-id compact codes
+    block_codes: jnp.ndarray    # (TB, BLK, ceil(Mc/2)) uint8, packed
+
+    @property
+    def m(self) -> int:
+        return int(self.codec.codebooks.shape[0])
+
+    @property
+    def ksub(self) -> int:
+        return int(self.codec.codebooks.shape[1])
+
+    @property
+    def bytes_per_item(self) -> int:
+        return int(self.block_codes.shape[-1])
+
+
+def train_plane(backend: str, key, vectors, *, iters: int = 10):
+    """Train (pq4) or derive (binary) a compact-plane codec.
+
+    Returns a ``PQCodebook``; encoding/LUT/decoding ride core/pq.py.
+    """
+    from repro.core.pq import PQCodebook, pq_train
+    x = np.asarray(vectors, np.float32)
+    d = x.shape[1]
+    if backend == "pq4":
+        dsub = compact_subdim(d)
+        return pq_train(key, jnp.asarray(x), m=d // dsub, nbits=4,
+                        iters=iters)
+    if backend == "binary":
+        group = 4 if d % 4 == 0 else (2 if d % 2 == 0 else 1)
+        mc = d // group
+        mean = x.mean(axis=0)
+        scale = x.std(axis=0) + 1e-6
+        bits = (np.arange(2 ** group)[:, None]
+                >> np.arange(group)[None, :]) & 1          # (ksub, group)
+        signs = 2.0 * bits.astype(np.float32) - 1.0
+        books = (mean.reshape(mc, 1, group)
+                 + scale.reshape(mc, 1, group) * signs[None, :, :])
+        return PQCodebook(jnp.asarray(books, jnp.float32))
+    raise ValueError(f"unknown plane backend {backend!r}; "
+                     f"choose from {PLANE_BACKENDS}")
+
+
+def encode_plane(codec, vectors) -> np.ndarray:
+    """Encode vectors against a plane codec -> (n, Mc) uint8 (< ksub).
+
+    For ``binary`` codecs the nearest corner separates per dimension
+    into sign(x - mean), so this *is* the sign-bit extraction.
+    """
+    from repro.core.pq import pq_encode
+    if np.asarray(vectors).shape[0] == 0:
+        return np.zeros((0, int(codec.codebooks.shape[0])), np.uint8)
+    return np.asarray(pq_encode(codec, jnp.asarray(vectors, jnp.float32)),
+                      np.uint8)
+
+
+def plane_block_codes(codes: np.ndarray, block_ids) -> jnp.ndarray:
+    """Gather per-id plane codes into the SEIL block layout and pack.
+
+    codes (n, Mc) uint8, block_ids (TB, BLK) int32 with -1 invalid ->
+    (TB, BLK, ceil(Mc/2)) uint8.  Invalid slots carry zero codes; the
+    scan masks them by id exactly as it does for the full plane, so the
+    phantom values never surface.  Pure host-side gather — deterministic,
+    so compaction and reload re-derive the identical array.
+    """
+    ids = np.asarray(block_ids)
+    safe = np.maximum(ids, 0)
+    per_block = np.asarray(codes)[safe] * (ids >= 0)[..., None].astype(np.uint8)
+    return jnp.asarray(pack_nibbles(per_block))
+
+
+def build_plane(backend: str, key, vectors, block_ids, *,
+                codec=None, iters: int = 10) -> PlanePack:
+    """Train (unless a codec is carried over) + encode + lay out a plane."""
+    if codec is None:
+        codec = train_plane(backend, key, vectors, iters=iters)
+    codes = encode_plane(codec, vectors)
+    return PlanePack(backend=backend, codec=codec, codes=codes,
+                     block_codes=plane_block_codes(codes, block_ids))
+
+
+__all__ = ["PLANE_BACKENDS", "PlanePack", "build_plane", "compact_subdim",
+           "encode_plane", "pack_nibbles", "packed_width",
+           "plane_block_codes", "train_plane"]

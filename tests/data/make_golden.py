@@ -62,7 +62,16 @@ def main():
     stream.delete([2, 7, 11])
     v2 = os.path.join(HERE, "golden_v2.npz")
     save_index(stream, v2, extra={"fixture": "golden_v2"})
-    for p in (v1, v2):
+
+    # v4: the same streaming bundle with both compact planes attached
+    # (quant ladder, DESIGN.md §12).  Planes are attached only AFTER the
+    # v2 save so the v1/v2 bytes stay exactly what the old writers
+    # produced — a plane-free save must remain byte-identical v2.
+    idx.plane("pq4")
+    idx.plane("binary")
+    v4 = os.path.join(HERE, "golden_v4.npz")
+    save_index(stream, v4, extra={"fixture": "golden_v4"})
+    for p in (v1, v2, v4):
         print(f"{p}: {os.path.getsize(p)} bytes")
 
 

@@ -12,13 +12,15 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import (INDEX_FORMAT, SearchParams, RairsIndex,
-                        SHARDED_FORMAT_VERSION, StreamingIndex, load_index,
-                        read_index_meta, save_index)
+from repro.core import (INDEX_FORMAT, PLANE_FORMAT_VERSION, RefineParams,
+                        SearchParams, RairsIndex, SHARDED_FORMAT_VERSION,
+                        StreamingIndex, load_index, read_index_meta,
+                        save_index)
 
 DATA = os.path.join(os.path.dirname(__file__), "data")
 GOLDEN_V1 = os.path.join(DATA, "golden_v1.npz")
 GOLDEN_V2 = os.path.join(DATA, "golden_v2.npz")
+GOLDEN_V4 = os.path.join(DATA, "golden_v4.npz")
 
 _ARRAY_FIELDS = ("centroids", "vectors", "assigns", "codes")
 _SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
@@ -39,6 +41,19 @@ def assert_indexes_equal(a, b):
                                       np.asarray(getattr(bb, f)), err_msg=f)
     np.testing.assert_array_equal(
         np.asarray(ab.codebook.codebooks), np.asarray(bb.codebook.codebooks))
+    pa = getattr(ab, "_planes", None) or {}
+    pb = getattr(bb, "_planes", None) or {}
+    assert sorted(pa) == sorted(pb)
+    for backend in pa:
+        for f in ("codes", "block_codes"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pa[backend], f)),
+                np.asarray(getattr(pb[backend], f)),
+                err_msg=f"plane_{backend}.{f}")
+        np.testing.assert_array_equal(
+            np.asarray(pa[backend].codec.codebooks),
+            np.asarray(pb[backend].codec.codebooks),
+            err_msg=f"plane_{backend}.codebooks")
     for f in _SEIL_FIELDS:
         np.testing.assert_array_equal(np.asarray(getattr(ab.arrays, f)),
                                       np.asarray(getattr(bb.arrays, f)),
@@ -82,8 +97,36 @@ def test_golden_v2_loads_unchanged():
     assert stream.delete([0]) == 1
 
 
-@pytest.mark.parametrize("golden", [GOLDEN_V1, GOLDEN_V2],
-                         ids=["v1", "v2"])
+def test_golden_v4_loads_unchanged():
+    """The quant-ladder bundle: v2's streaming state + both compact
+    planes, written by the build that introduced format v4."""
+    meta = read_index_meta(GOLDEN_V4)
+    assert meta["format_version"] == PLANE_FORMAT_VERSION == 4
+    assert meta["planes"] == ["binary", "pq4"]
+    assert meta["streaming"]["delta_count"] == 12
+    stream = load_index(GOLDEN_V4)
+    assert isinstance(stream, StreamingIndex)
+    assert stream.n_base == 96 and stream.n_dead == 6
+    assert sorted(stream.base._planes) == ["binary", "pq4"]
+    # the restored codecs are the carried ones: searcher resolution and
+    # future compactions reuse them instead of retraining
+    assert sorted(stream._plane_codecs) == ["binary", "pq4"]
+    for b in ("binary", "pq4"):
+        assert stream._plane_codecs[b] is stream.base._planes[b].codec
+        assert stream.base.plane(b) is stream.base._planes[b]
+    # restored planes serve two-tier, and rf=1 still matches single-tier
+    q = np.asarray(stream.base.vectors)[:8]
+    r2 = stream.searcher(SearchParams(
+        k=5, nprobe=2, refine=RefineParams(plane="pq4")))(q)
+    assert np.asarray(r2.ids).shape == (8, 5)
+    r0 = stream.searcher(SearchParams(k=5, nprobe=2))(q)
+    r1 = stream.searcher(SearchParams(
+        k=5, nprobe=2, refine=RefineParams(plane="pq4", refine_factor=1)))(q)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+
+
+@pytest.mark.parametrize("golden", [GOLDEN_V1, GOLDEN_V2, GOLDEN_V4],
+                         ids=["v1", "v2", "v4"])
 def test_golden_round_trips_byte_for_byte(golden, tmp_path):
     first = load_index(golden)
     resaved = tmp_path / "resaved.npz"
@@ -108,6 +151,20 @@ def test_golden_through_v3_sharded(golden, shards, tmp_path):
     assert_indexes_equal(first, second)
 
 
+@pytest.mark.parametrize("shards", [1, 3])
+def test_golden_v4_through_sharded(shards, tmp_path):
+    """Plane-carrying bundles shard like any other — the manifest is
+    stamped v4 and the plane arrays live in the common (unsharded) file."""
+    first = load_index(GOLDEN_V4)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=shards)
+    meta = read_index_meta(out)
+    assert meta["format_version"] == PLANE_FORMAT_VERSION
+    assert meta["planes"] == ["binary", "pq4"]
+    second = load_index(out)
+    assert_indexes_equal(first, second)
+
+
 def test_v3_rejects_unknown_version(tmp_path):
     import json
     first = load_index(GOLDEN_V1)
@@ -125,3 +182,4 @@ def test_fixtures_match_generator_shape():
     """Guard against silently-regenerated fixtures drifting in shape."""
     assert os.path.getsize(GOLDEN_V1) < 64 * 1024
     assert os.path.getsize(GOLDEN_V2) < 64 * 1024
+    assert os.path.getsize(GOLDEN_V4) < 64 * 1024

@@ -191,6 +191,25 @@ def test_tile_signatures_follow_working_set():
         (4, 0), (9, 0), (9, 1), (17, 0)]
 
 
+def test_tile_signatures_deep_split_same_lead():
+    """At large nprobe the deep key separates tiles that share a hot
+    lead list but probe different working sets: the probe prefix beyond
+    the lead joins the key, so drift cannot reshuffle their cached
+    unions into each other — while tiles with identical prefixes still
+    coalesce under run indexing exactly as lead-only keys do."""
+    rows = np.array([[4, 7, 2], [4, 11, 5], [4, 7, 2]])
+    lead_only = tile_signatures(rows[:, 0])
+    assert lead_only == [(4, 0), (4, 1), (4, 2)]       # positional only
+    deep = tile_signatures(rows[:, 0], deep=rows)
+    # distinct prefixes -> distinct identities; the repeat of (4,(7,2))
+    # restarts its own run count instead of inheriting position 2
+    assert deep == [(4, (7, 2), 0), (4, (11, 5), 0), (4, (7, 2), 0)]
+    # identical consecutive working sets still coalesce by run index
+    same = np.array([[4, 7, 2], [4, 7, 2]])
+    assert tile_signatures(same[:, 0], deep=same) == [
+        (4, (7, 2), 0), (4, (7, 2), 1)]
+
+
 # ---------------------------------------------------------------------------
 # incremental plans (plan_reuse)
 # ---------------------------------------------------------------------------

@@ -232,10 +232,3 @@ def test_distributed_search_compat(rairs_index, unit_data, mesh):
         distributed_search(rairs_index, mesh, qs,
                            params=SearchParams(k=10, nprobe=8,
                                                max_scan=4096))
-
-
-def test_make_distributed_serve_step_deprecated():
-    from repro.core.distributed import make_distributed_serve_step
-    with pytest.warns(DeprecationWarning, match="index.shard"):
-        make_distributed_serve_step(nlist=64, nprobe=8, bigk=100, k=10,
-                                    max_scan_local=512)
