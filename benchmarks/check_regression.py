@@ -30,7 +30,8 @@ from typing import Callable, Dict
 
 _REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 _SCHEMA_EXPECTED = {"engine": 1, "stream": 1, "dist": 1, "plan": 1,
-                    "fused": 1, "serve": 1, "trace": 1, "refine": 1}
+                    "fused": 1, "serve": 1, "trace": 1, "refine": 1,
+                    "overload": 1}
 
 
 class Gate:
@@ -208,10 +209,62 @@ def check_refine(g: Gate, d: dict) -> None:
             f"frontier={fr}")
 
 
+def check_overload(g: Gate, d: dict) -> None:
+    modes = d.get("modes", {})
+    # every submission accounted for with a result or a *typed* error —
+    # the no-silent-drops contract, exact on any machine at any scale
+    for mode, md in sorted(modes.items()):
+        for pt in md.get("points", []):
+            total = (pt["n_ok"] + pt["shed"] + pt["deadline_failed"]
+                     + pt["closed"] + pt["errors"])
+            g.check(total == pt["n_requests"],
+                    f"overload[{mode}/x{pt.get('load_factor')}]: every "
+                    f"request resolves typed",
+                    f"ok+shed+deadline+closed+errors={total} "
+                    f"!= n_requests={pt['n_requests']}")
+            g.check(pt["errors"] == 0,
+                    f"overload[{mode}/x{pt.get('load_factor')}]: zero "
+                    f"untyped failures", f"errors={pt['errors']}")
+    # shed fraction monotone in offered load for the bounded modes; the
+    # plain bounded queue must actually shed at top load (the degrade
+    # mode may legitimately absorb it all — that is what the ladder is
+    # for — so only engagement is asserted there, below)
+    for mode in ("shed", "degrade"):
+        pts = modes.get(mode, {}).get("points", [])
+        fr = [pt["shed"] / pt["n_requests"] for pt in pts] or [0.0]
+        g.check(all(b >= a - 0.01 for a, b in zip(fr, fr[1:])),
+                f"overload[{mode}]: shed fraction monotone in offered "
+                f"load", f"shed_fractions={[round(f, 3) for f in fr]}")
+        if mode == "shed":
+            g.check(fr[-1] > 0.0,
+                    f"overload[{mode}]: top offered load actually sheds",
+                    f"shed_fractions={[round(f, 3) for f in fr]}")
+    g.check(all(pt["shed"] == 0
+                for pt in modes.get("unbounded", {}).get("points", [])),
+            "overload[unbounded]: the unbounded gateway never sheds")
+    # degradation has a documented price: answered recall stays above
+    # the floor at every load point, ladder fully engaged or not
+    floor = d.get("recall_floor", 0.0)
+    want_floor = 0.4 if d.get("dataset") == "sift1m" else 0.2
+    recalls = [pt["recall"] for pt in modes.get("degrade", {})
+               .get("points", []) if pt["n_ok"]]
+    g.check(floor >= want_floor,
+            f"overload: documented recall floor >= {want_floor}",
+            f"recall_floor={floor}")
+    g.check(bool(recalls) and min(recalls) >= floor,
+            "overload[degrade]: answered recall above the documented "
+            "floor at every load point",
+            f"recalls={[round(r, 3) for r in recalls]} floor={floor}")
+    g.check(bool(d.get("ladder_engaged")),
+            "overload[degrade]: the quality ladder engaged at top load",
+            f"counters={modes.get('degrade', {}).get('counters')}")
+
+
 _CHECKERS: Dict[str, Callable[[Gate, dict], None]] = {
     "engine": check_engine, "stream": check_stream, "dist": check_dist,
     "plan": check_plan, "fused": check_fused, "serve": check_serve,
     "trace": check_trace, "refine": check_refine,
+    "overload": check_overload,
 }
 
 

@@ -27,7 +27,12 @@ BENCH_dist.json multi-device cliff; DESIGN.md §11), and the two-tier
 quantization-ladder bench with ``BENCH_refine.json`` (backend x
 refine_factor x nprobe sweep: recall and the weighted total-ops model
 vs single-tier, rf=1 bitwise-parity count, and the frontier config —
-the CI ``refine-smoke`` guard; DESIGN.md §12).
+the CI ``refine-smoke`` guard; DESIGN.md §12), and the
+overload-resilience bench with ``BENCH_overload.json`` (unbounded vs
+bounded-admission vs degradation-ladder serving at 0.5/1/2x the
+measured saturating load: typed shed/deadline accounting, answered
+recall vs the documented floor, ladder engagement — the CI
+``chaos-smoke`` guard; DESIGN.md §13).
 
 ``benchmarks/check_regression.py`` consumes the committed BENCH_*.json
 files and gates CI on machine-checkable invariants (never wall-clock).
@@ -59,6 +64,8 @@ TRACE_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_trace.json")
 REFINE_JSON_DEFAULT = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_refine.json")
+OVERLOAD_JSON_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_overload.json")
 BENCH_JSON_SCHEMA_VERSION = 1
 STREAM_JSON_SCHEMA_VERSION = 1
 DIST_JSON_SCHEMA_VERSION = 1
@@ -67,6 +74,7 @@ FUSED_JSON_SCHEMA_VERSION = 1
 SERVE_JSON_SCHEMA_VERSION = 1
 TRACE_JSON_SCHEMA_VERSION = 1
 REFINE_JSON_SCHEMA_VERSION = 1
+OVERLOAD_JSON_SCHEMA_VERSION = 1
 
 
 def _write_summary_json(label: str, schema_version: int, body: dict,
@@ -160,6 +168,15 @@ def write_refine_json(refine_out: dict, dataset: str, path: str) -> None:
                         dataset, path)
 
 
+def write_overload_json(overload_out: dict, dataset: str, path: str) -> None:
+    """Persist the overload-resilience bench (bounded admission vs
+    unbounded at 0.5/1/2x saturating load: typed shed/deadline
+    accounting, degradation-ladder engagement, answered recall vs the
+    documented floor — DESIGN.md §13)."""
+    _write_summary_json("overload", OVERLOAD_JSON_SCHEMA_VERSION,
+                        overload_out, dataset, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -187,6 +204,10 @@ def main() -> None:
                          "readable summary ('' disables)")
     ap.add_argument("--refine-json", type=str, default=REFINE_JSON_DEFAULT,
                     help="where the quantization-ladder bench writes its "
+                         "machine-readable summary ('' disables)")
+    ap.add_argument("--overload-json", type=str,
+                    default=OVERLOAD_JSON_DEFAULT,
+                    help="where the overload-resilience bench writes its "
                          "machine-readable summary ('' disables)")
     ap.add_argument("--bench-dataset", type=str, default="sift1m",
                     help="dataset for the engine/stream benches and their "
@@ -218,6 +239,9 @@ def main() -> None:
                 write_trace_json(out, args.bench_dataset, args.trace_json)
             if name == "refine" and args.refine_json:
                 write_refine_json(out, args.bench_dataset, args.refine_json)
+            if name == "overload" and args.overload_json:
+                write_overload_json(out, args.bench_dataset,
+                                    args.overload_json)
         except Exception:
             failures += 1
             traceback.print_exc()
@@ -260,6 +284,8 @@ def _bench_list(args):
         ("serve", lambda: suite.bench_serve(dataset=args.bench_dataset)),
         ("trace", lambda: suite.bench_trace(dataset=args.bench_dataset)),
         ("refine", lambda: suite.bench_refine(dataset=args.bench_dataset)),
+        ("overload",
+         lambda: suite.bench_overload(dataset=args.bench_dataset)),
         ("kernels", lambda: suite.bench_kernels()),
     ]
 

@@ -1145,3 +1145,114 @@ def bench_serve(dataset="sift1m", k=10, nprobe=4, max_scan=16,
         f"deadline-batched gateway only {top:.2f}x per-request dispatch "
         f"at its best offered load point — coalescing regressed")
     return out
+
+
+def bench_overload(dataset="sift1m", k=10, nprobe=8, max_scan=16,
+                   load_factors=(0.5, 1.0, 2.0), n_requests=512,
+                   max_batch=32, max_delay_ms=2.0, max_queue=64,
+                   recall_floor=None):
+    """Overload-resilience bench (-> BENCH_overload.json, DESIGN.md
+    §13): the same open-loop Poisson stream at 0.5x / 1x / 2x the
+    *measured* saturating throughput, served three ways —
+
+      unbounded   today's default: no admission bound, queueing delay
+                  grows without limit past saturation
+      shed        bounded queue (``max_queue``), reject policy: excess
+                  arrivals fail fast with ``Overloaded``
+      degrade     bounded queue + the quality ladder: under sustained
+                  pressure the gateway steps down a pre-compiled
+                  reduced-effort ``SearchParams`` rung instead of (or
+                  before) shedding, and steps back up when load recedes
+
+    Each point carries a full typed accounting (ok / shed / deadline /
+    closed / untyped) plus recall@k of every answered query against the
+    offline ground truth — degradation has a *price*, and the bench
+    publishes it next to the latency it buys.  The regression gate
+    asserts the machine-independent invariants: nothing dropped without
+    a typed error, shed fraction monotone in offered load, the
+    unbounded mode never sheds, answered recall above the documented
+    floor, and the ladder actually engaging at top load — never a
+    wall-clock number.
+    """
+    from repro.core import SearchParams
+    from repro.gateway import (Gateway, GatewayConfig, degrade_ladder,
+                               run_open_loop)
+
+    ctx = get_context(dataset, n_queries=256)
+    idx = ctx.index("rair", True)
+    q = np.asarray(ctx.q)
+    gt = np.asarray(ctx.gt(k))
+    if recall_floor is None:
+        # documented floors (DESIGN.md §13): the deepest ladder rung
+        # (nprobe/4, max_scan/4) stays above these on answered queries
+        # (the level-0 operating point itself is latency-budgeted:
+        # nprobe=8/max_scan=16 sits near 0.48 recall@10 on sift1m)
+        recall_floor = 0.4 if dataset == "sift1m" else 0.2
+    params = SearchParams(k=k, nprobe=nprobe, max_scan=max_scan)
+    ladder = degrade_ladder(params, levels=2)
+    modes = {
+        "unbounded": GatewayConfig(max_delay_ms=max_delay_ms,
+                                   max_batch=max_batch),
+        "shed": GatewayConfig(max_delay_ms=max_delay_ms,
+                              max_batch=max_batch,
+                              max_queue=max_queue, overload="reject"),
+        "degrade": GatewayConfig(max_delay_ms=max_delay_ms,
+                                 max_batch=max_batch,
+                                 max_queue=max_queue, overload="reject",
+                                 degrade=ladder[1:], degrade_hold=2),
+    }
+    # calibrate: saturating throughput of the (batched) serving config.
+    # One search first so session creation + width warmup compile
+    # outside the measured window — calibrating against cold-compile
+    # wall time understates capacity and the "2x" sweep never overloads
+    with Gateway(idx, params, config=modes["unbounded"]) as gw:
+        gw.search(q[0])
+        cal = run_open_loop(gw, q, 1e6, max(n_requests // 3, 32), seed=99)
+    sat_qps = cal["achieved_qps"]
+    offered = tuple(f * sat_qps for f in load_factors)
+    emit(f"overload/{dataset}/calibration", 0.0,
+         f"saturating={sat_qps:.0f}qps "
+         f"offered={[f'{o:.0f}' for o in offered]}")
+
+    out_modes = {}
+    for mode, cfg in modes.items():
+        points = []
+        with Gateway(idx, params, config=cfg) as gw:
+            gw.search(q[0])       # compile outside the measured points
+            for i, qps in enumerate(offered):
+                pt = run_open_loop(gw, q, qps, n_requests, seed=i,
+                                   collect=True)
+                ids = pt.pop("ok_ids")
+                qi = pt.pop("ok_query_idx")
+                pt["load_factor"] = load_factors[i]
+                pt["recall"] = (float(per_query_recall(
+                    ids, gt[qi]).mean()) if len(qi) else 0.0)
+                points.append(pt)
+                emit(f"overload/{dataset}/{mode}/x{load_factors[i]:g}", 0.0,
+                     f"ok={pt['n_ok']} shed={pt['shed']} "
+                     f"recall={pt['recall']:.3f} "
+                     f"p99={pt['p99_ms']:.1f}ms levels={pt['levels']}")
+            tel = gw.stats()["telemetry"]
+        out_modes[mode] = {"points": points, "counters": tel["counters"]}
+
+    top = len(offered) - 1
+    p99_u = out_modes["unbounded"]["points"][top]["p99_ms"]
+    p99_d = out_modes["degrade"]["points"][top]["p99_ms"]
+    out = {"k": k, "nprobe": nprobe, "max_scan": max_scan,
+           "max_batch": max_batch, "max_delay_ms": max_delay_ms,
+           "max_queue": max_queue, "n_requests": n_requests,
+           "saturating_qps": sat_qps,
+           "load_factors": list(load_factors),
+           "ladder": [{"nprobe": p.nprobe, "max_scan": p.max_scan}
+                      for p in ladder],
+           "recall_floor": recall_floor,
+           "ladder_engaged": out_modes["degrade"]["counters"].get(
+               "degrade_steps_down", 0) >= 1,
+           "p99_top_load_degrade_over_unbounded": p99_d / max(p99_u, 1e-9),
+           "modes": out_modes}
+    save_json("overload", out)
+    emit(f"overload/{dataset}/summary", 0.0,
+         f"p99@2x degrade/unbounded="
+         f"{out['p99_top_load_degrade_over_unbounded']:.3f} "
+         f"ladder_engaged={out['ladder_engaged']}")
+    return out

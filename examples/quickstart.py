@@ -173,3 +173,35 @@ print(f"two-tier pq4/rf4: recall@10="
       f"tier-1 scans {model['m_compact']} of {model['m_full']} "
       f"subquantizers -> modeled total-ops "
       f"{model['total_ops_reduction_x']:.2f}x cheaper; rf=1 == single-tier")
+
+# 13. overload resilience (DESIGN.md §13): the same gateway, now with a
+#     bounded queue.  Unbounded, a burst past capacity just queues (and
+#     p99 grows with the backlog); bounded with overload="reject", the
+#     excess fails *fast and typed* — submit returns an already-failed
+#     handle carrying Overloaded, so every request resolves either way.
+#     Add degrade= (a pre-compiled reduced-effort ladder) and sustained
+#     pressure steps quality down instead of shedding, stepping back up
+#     when the burst passes — each answer is tagged with the level that
+#     served it.
+from repro.gateway import Overloaded, degrade_ladder
+
+burst = np.asarray(queries[:192])
+with Gateway(index, params,
+             config=GatewayConfig(max_delay_ms=2.0, max_batch=32)) as gw:
+    answered = [gw.submit(q).result(30.0) for q in burst]   # all served
+with Gateway(index, params,
+             config=GatewayConfig(max_delay_ms=2.0, max_batch=32,
+                                  max_queue=16, overload="reject",
+                                  degrade=degrade_ladder(params)[1:],
+                                  degrade_hold=1)) as gw:
+    pending = [gw.submit(q) for q in burst]
+    ok, shed = [], 0
+    for p in pending:
+        try:
+            ok.append(p.result(30.0))
+        except Overloaded:
+            shed += 1
+    levels = sorted({r.level for r in ok})
+print(f"overload: unbounded served {len(answered)}/{len(burst)}; "
+      f"bounded served {len(ok)} + shed {shed} typed "
+      f"(quality levels used: {levels}) — nothing dropped silently")

@@ -14,9 +14,11 @@ from .engine import (EXEC_MODES, BlockStore, ListSelection, ListTables,  # noqa
                      tile_signatures, tile_unions, union_dims, union_live,
                      merge_unions_host)
 from .index import IndexConfig, RairsIndex, build_index, insert_batch  # noqa
-from .io import (INDEX_FORMAT, INDEX_FORMAT_VERSION,  # noqa
-                 PLANE_FORMAT_VERSION, SHARDED_FORMAT_VERSION, load_index,
-                 read_index_meta, save_index)
+from ..errors import CorruptBundleError  # noqa
+from .io import (CHECKSUM_FORMAT_VERSION, INDEX_FORMAT,  # noqa
+                 INDEX_FORMAT_VERSION, PLANE_FORMAT_VERSION,
+                 SHARDED_FORMAT_VERSION, load_index, read_index_meta,
+                 save_index)
 from .params import (MAX_AUTO_BUCKET, REFINE_PLANES, RefineParams,  # noqa
                      SearchParams)
 from .searcher import PlanStats, Searcher, SearcherStats  # noqa

@@ -45,17 +45,39 @@ gather), so the scan-form array never needs to travel.  A bundle is
 written as v4 **only when planes are attached**; an index without
 planes round-trips byte-identically to the v2/v3 writer, and v1-v3
 bundles load exactly as before — v4 is strictly additive.
+
+Format v5 (DESIGN.md §13) is *crash-safe, checksummed* persistence —
+the layouts above, hardened:
+
+  * every file is written to a temp name, fsynced, and atomically
+    renamed into place (``os.replace``), so a crash mid-save never
+    leaves a half-written file under the bundle's name;
+  * sharded bundles write content-addressed member files
+    (``shard_0000-<crc>.npz``) and commit by atomically replacing the
+    manifest *last* — an interrupted save leaves the previous
+    manifest, and therefore the previous complete bundle, loadable
+    (stale members from the failed attempt are swept on the next
+    successful commit);
+  * the meta carries a per-array crc32 table; ``load_index`` verifies
+    every array it materializes and rejects truncated or bit-flipped
+    bundles with ``CorruptBundleError`` naming the bad member.
+
+v1-v4 bundles predate the checksum table and load unchanged (no table
+-> nothing to verify); every new save writes v5.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Optional, Union
+import zlib
+from typing import Callable, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from .. import faults
+from ..errors import CorruptBundleError
 from .index import IndexConfig, RairsIndex
 from .pq import PQCodebook
 from .seil import SeilArrays, SeilStats
@@ -65,7 +87,8 @@ INDEX_FORMAT = "rairs-index"
 INDEX_FORMAT_VERSION = 2          # single-file bundles without planes
 SHARDED_FORMAT_VERSION = 3        # manifest + per-shard bundles
 PLANE_FORMAT_VERSION = 4          # either layout + attached compact planes
-READ_FORMAT_VERSIONS = (1, 2, 3, 4)  # v1 = v2 without the streaming section
+CHECKSUM_FORMAT_VERSION = 5       # atomic writes + per-array crc32 table
+READ_FORMAT_VERSIONS = (1, 2, 3, 4, 5)  # v1 = v2 minus the streaming section
 MANIFEST_NAME = "MANIFEST.json"
 
 _SEIL_FIELDS = ("block_codes", "block_ids", "block_other", "owned",
@@ -79,6 +102,52 @@ _STREAM_FIELDS = ("delta_vectors", "delta_codes", "delta_assigns",
                   "delta_live", "base_live")
 
 
+def _fsync_dir(dirname: str) -> None:
+    """Best-effort directory fsync so the rename itself is durable
+    (no-op on platforms/filesystems that refuse O_RDONLY dir opens)."""
+    try:
+        fd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(path: Union[str, os.PathLike],
+                  write: Callable) -> None:
+    """Crash-safe file write: temp name in the same directory, fsync,
+    then ``os.replace`` into place — readers only ever see the old
+    complete file or the new complete file, never a torn one."""
+    path = os.fspath(path)
+    d = os.path.dirname(path) or "."
+    tmp = os.path.join(d, f".{os.path.basename(path)}.tmp.{os.getpid()}")
+    try:
+        with open(tmp, "wb") as fh:
+            write(fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    _fsync_dir(d)
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _checksums(arrays: dict) -> dict:
+    return {name: _crc(a) for name, a in arrays.items()}
+
+
 def _gather_arrays(index: Union[RairsIndex, StreamingIndex],
                    extra: Optional[dict]) -> tuple:
     """(meta, arrays) shared by the single-file and sharded writers."""
@@ -86,7 +155,7 @@ def _gather_arrays(index: Union[RairsIndex, StreamingIndex],
     base = stream.base if stream is not None else index
     meta = {
         "format": INDEX_FORMAT,
-        "format_version": INDEX_FORMAT_VERSION,
+        "format_version": CHECKSUM_FORMAT_VERSION,
         "config": dataclasses.asdict(base.config),
         "stats": dataclasses.asdict(base.stats),
         "build_seconds": base.build_seconds,
@@ -116,12 +185,11 @@ def _gather_arrays(index: Union[RairsIndex, StreamingIndex],
         arrays["delta_assigns"] = d.assigns[:d.count]
         arrays["delta_live"] = d.live[:d.count]
         arrays["base_live"] = np.packbits(stream._base_live)
-    # quantization-ladder planes (v4): codec books + per-id codes only —
+    # quantization-ladder planes (v4+): codec books + per-id codes only —
     # the packed block layout is a deterministic gather, re-derived on
-    # load.  Indexes with no attached planes keep the v2 byte layout.
+    # load.
     planes = getattr(base, "_planes", None) or {}
     if planes:
-        meta["format_version"] = PLANE_FORMAT_VERSION
         meta["planes"] = sorted(planes)
         for b in sorted(planes):
             pp = planes[b]
@@ -149,10 +217,11 @@ def save_index(index, path: Union[str, os.PathLike], extra: dict = None,
         index = index.index
     meta, arrays = _gather_arrays(index, extra)
     if shards is None:
+        meta["checksums"] = _checksums(arrays)
         arrays["meta_json"] = np.frombuffer(
             json.dumps(meta).encode("utf-8"), np.uint8)
-        with open(path, "wb") as fh:
-            np.savez_compressed(fh, **arrays)
+        _atomic_write(path,
+                      lambda fh: np.savez_compressed(fh, **arrays))
         return
     _save_sharded(meta, arrays, path, int(shards))
 
@@ -163,6 +232,15 @@ def _splits(n: int, shards: int):
     return [(int(bounds[i]), int(bounds[i + 1])) for i in range(shards)]
 
 
+def _member_token(checksums: dict) -> str:
+    """Short content token for a member file, derived from its arrays'
+    crc32 table — two saves of different content never collide on a
+    member name, so a crashed save cannot tear a file the committed
+    manifest still points at."""
+    blob = json.dumps(checksums, sort_keys=True).encode()
+    return f"{zlib.crc32(blob):08x}"
+
+
 def _save_sharded(meta: dict, arrays: dict, path, shards: int) -> None:
     if shards < 1:
         raise ValueError(f"shards must be >= 1, got {shards}")
@@ -171,7 +249,7 @@ def _save_sharded(meta: dict, arrays: dict, path, shards: int) -> None:
     n = arrays["vectors"].shape[0]
     block_rows = _splits(tb, shards)
     vector_rows = _splits(n, shards)
-    shard_files = []
+    shard_files, checksums = [], {}
     for s in range(shards):
         blo, bhi = block_rows[s]
         vlo, vhi = vector_rows[s]
@@ -179,10 +257,12 @@ def _save_sharded(meta: dict, arrays: dict, path, shards: int) -> None:
         for f in _VECTOR_FIELDS:
             if f in arrays:
                 payload[f] = arrays[f][vlo:vhi]
-        fname = f"shard_{s:04d}.npz"
-        with open(os.path.join(path, fname), "wb") as fh:
-            np.savez_compressed(fh, **payload)
+        crcs = _checksums(payload)
+        fname = f"shard_{s:04d}-{_member_token(crcs)}.npz"
+        _atomic_write(os.path.join(path, fname),
+                      lambda fh, p=payload: np.savez_compressed(fh, **p))
         shard_files.append(fname)
+        checksums[fname] = crcs
     common = {f: arrays[f] for f in ("centroids", "codebooks")}
     for f in _TABLE_FIELDS + _STREAM_FIELDS:
         if f in arrays:
@@ -191,23 +271,48 @@ def _save_sharded(meta: dict, arrays: dict, path, shards: int) -> None:
     for f in arrays:
         if f.startswith("plane_"):
             common[f] = arrays[f]
-    with open(os.path.join(path, "common.npz"), "wb") as fh:
-        np.savez_compressed(fh, **common)
-    version = (PLANE_FORMAT_VERSION if "planes" in meta
-               else SHARDED_FORMAT_VERSION)
+    common_crcs = _checksums(common)
+    common_name = f"common-{_member_token(common_crcs)}.npz"
+    _atomic_write(os.path.join(path, common_name),
+                  lambda fh: np.savez_compressed(fh, **common))
+    checksums[common_name] = common_crcs
     manifest = {
         "format": INDEX_FORMAT,
-        "format_version": version,
+        "format_version": CHECKSUM_FORMAT_VERSION,
         "shards": shards,
-        "common": "common.npz",
+        "common": common_name,
         "shard_files": shard_files,
         "block_rows": block_rows,
         "vector_rows": vector_rows,
-        "meta": dict(meta, format_version=version),
+        "checksums": checksums,
+        "meta": dict(meta, format_version=CHECKSUM_FORMAT_VERSION),
     }
-    with open(os.path.join(path, MANIFEST_NAME), "w") as fh:
-        json.dump(manifest, fh, indent=1)
-        fh.write("\n")
+    # the manifest is the commit point: every member is already durable
+    # under a content-addressed name, so atomically replacing the
+    # manifest flips the whole bundle old -> new; a crash anywhere
+    # before this line leaves the previous bundle fully loadable
+    _atomic_write(os.path.join(path, MANIFEST_NAME),
+                  lambda fh: fh.write(
+                      (json.dumps(manifest, indent=1) + "\n").encode()))
+    _sweep_orphans(path, {common_name, *shard_files})
+
+
+def _sweep_orphans(path, live: set) -> None:
+    """Post-commit cleanup: drop member files no manifest references
+    any more (left by superseded saves or crashed attempts).  Strictly
+    best-effort — the bundle is already committed."""
+    try:
+        entries = os.listdir(path)
+    except OSError:
+        return
+    for fname in entries:
+        if fname in live or not fname.endswith(".npz"):
+            continue
+        if fname.startswith(("shard_", "common")):
+            try:
+                os.remove(os.path.join(path, fname))
+            except OSError:
+                pass
 
 
 def _manifest_path(path) -> Optional[str]:
@@ -235,13 +340,18 @@ def _check_meta(path, meta: dict) -> dict:
 def _load_npz_meta(path, z) -> dict:
     if "meta_json" not in z:
         raise ValueError(f"{path}: not a {INDEX_FORMAT} bundle")
-    meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
+    fname = os.path.basename(os.fspath(path))
+    raw = _read_members(fname, z, skip=[k for k in z.files
+                                        if k != "meta_json"])
+    meta = json.loads(bytes(raw["meta_json"].tobytes()).decode("utf-8"))
     _check_meta(path, meta)
     if meta["format_version"] not in (1, INDEX_FORMAT_VERSION,
-                                      PLANE_FORMAT_VERSION):
+                                      PLANE_FORMAT_VERSION,
+                                      CHECKSUM_FORMAT_VERSION):
         raise ValueError(
             f"{path}: single-file bundles carry format_version 1, "
-            f"{INDEX_FORMAT_VERSION} or {PLANE_FORMAT_VERSION}, got "
+            f"{INDEX_FORMAT_VERSION}, {PLANE_FORMAT_VERSION} or "
+            f"{CHECKSUM_FORMAT_VERSION}, got "
             f"{meta['format_version']} (v{SHARDED_FORMAT_VERSION} bundles "
             f"are directories with a {MANIFEST_NAME})")
     return meta
@@ -254,12 +364,75 @@ def _read_manifest(mpath: str) -> dict:
         manifest = json.load(fh)
     _check_meta(mpath, manifest)
     if manifest.get("format_version") not in (SHARDED_FORMAT_VERSION,
-                                              PLANE_FORMAT_VERSION):
+                                              PLANE_FORMAT_VERSION,
+                                              CHECKSUM_FORMAT_VERSION):
         raise ValueError(
             f"{mpath}: manifest version "
             f"{manifest.get('format_version')} not in "
-            f"({SHARDED_FORMAT_VERSION}, {PLANE_FORMAT_VERSION})")
+            f"({SHARDED_FORMAT_VERSION}, {PLANE_FORMAT_VERSION}, "
+            f"{CHECKSUM_FORMAT_VERSION})")
     return manifest
+
+
+def _open_member(path: str):
+    """np.load a bundle member, turning truncation / not-a-zip / torn
+    header failures into ``CorruptBundleError`` naming the file."""
+    import zipfile
+    try:
+        return np.load(path, allow_pickle=False)
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        if not os.path.exists(path):
+            raise CorruptBundleError(
+                f"{os.path.basename(path)}: bundle member missing") from e
+        raise CorruptBundleError(
+            f"{os.path.basename(path)}: unreadable "
+            f"({type(e).__name__}: {e})") from e
+
+
+def _read_members(fname: str, z, skip=()) -> dict:
+    """Extract every array from an open npz, turning zip-stream decode
+    failures (numpy reads members lazily, so a mid-file bitflip only
+    surfaces here, not at ``_open_member``) into ``CorruptBundleError``
+    naming the offending ``file:member``."""
+    import zipfile
+    import zlib
+    out = {}
+    for name in z.files:
+        if name in skip:
+            continue
+        try:
+            out[name] = z[name]
+        except (zipfile.BadZipFile, zlib.error, EOFError, OSError,
+                ValueError) as e:
+            raise CorruptBundleError(
+                f"{fname}:{name}: unreadable "
+                f"({type(e).__name__}: {e})") from e
+    return out
+
+
+def _verify_members(fname: str, members: dict,
+                    checksums: Optional[dict]) -> dict:
+    """Apply the fault-injection read hook, then verify each array
+    against the bundle's crc32 table (v5; earlier formats have no
+    table and skip verification).  Raises ``CorruptBundleError``
+    naming the offending ``file:member``."""
+    out = {}
+    for name, arr in members.items():
+        arr = faults.corrupt_array("io.read_array", f"{fname}:{name}", arr)
+        if checksums is not None:
+            want = checksums.get(name)
+            if want is None:
+                raise CorruptBundleError(
+                    f"{fname}:{name}: member absent from the bundle's "
+                    f"checksum table")
+            got = _crc(arr)
+            if got != want:
+                raise CorruptBundleError(
+                    f"{fname}:{name}: crc32 mismatch "
+                    f"(stored {want:#010x}, computed {got:#010x}) — "
+                    f"bundle is truncated or bit-flipped")
+        out[name] = arr
+    return out
 
 
 def read_index_meta(path: Union[str, os.PathLike]) -> dict:
@@ -270,7 +443,7 @@ def read_index_meta(path: Union[str, os.PathLike]) -> dict:
     if mpath is not None:
         manifest = _read_manifest(mpath)
         return dict(manifest["meta"], shards=manifest["shards"])
-    with np.load(path, allow_pickle=False) as z:
+    with _open_member(os.fspath(path)) as z:
         return _load_npz_meta(path, z)
 
 
@@ -324,13 +497,15 @@ def _index_from(meta: dict, get):
 def _load_sharded(mpath: str):
     manifest = _read_manifest(mpath)
     root = os.path.dirname(mpath)
+    table = manifest.get("checksums")
     parts = []
-    for fname in manifest["shard_files"]:
-        with np.load(os.path.join(root, fname), allow_pickle=False) as z:
-            parts.append({k: z[k] for k in z.files})
-    with np.load(os.path.join(root, manifest["common"]),
-                 allow_pickle=False) as z:
-        common = {k: z[k] for k in z.files}
+    for fname in manifest["shard_files"] + [manifest["common"]]:
+        with _open_member(os.path.join(root, fname)) as z:
+            members = _verify_members(
+                fname, _read_members(fname, z),
+                table.get(fname) if table is not None else None)
+        parts.append(members)
+    common = parts.pop()
 
     def get(name):
         if name in common:
@@ -356,9 +531,13 @@ def load_index(path: Union[str, os.PathLike], *, mesh=None, axes=("data",),
     if mpath is not None:
         index = _load_sharded(mpath)
     else:
-        with np.load(path, allow_pickle=False) as z:
+        fname = os.path.basename(os.fspath(path))
+        with _open_member(os.fspath(path)) as z:
             meta = _load_npz_meta(path, z)
-            index = _index_from(meta, lambda name: z[name])
+            members = _verify_members(
+                fname, _read_members(fname, z, skip=("meta_json",)),
+                meta.get("checksums"))
+        index = _index_from(meta, members.__getitem__)
     if mesh is not None:
         return index.shard(mesh, axes=axes, max_scan_local=max_scan_local)
     return index

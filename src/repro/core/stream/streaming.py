@@ -58,12 +58,13 @@ from ..params import SearchParams
 from ..search import SearchResult
 from ..searcher import Searcher
 from ..seil import build_seil
+from ...errors import RairsError
 from .delta import DeltaSegment
 from .search import (scan_finalize_stream, streaming_search,
                      streaming_search_traced)
 
 
-class StaleSessionError(RuntimeError):
+class StaleSessionError(RairsError, RuntimeError):
     """A searcher session outlived the index state it compiled against."""
 
 

@@ -11,8 +11,17 @@ streaming indexes, and first-class pluggable telemetry::
                  sinks=(LogSink(),)) as gw:
         ids = gw.search(q).ids          # blocking, or gw.submit(q) async
         print(gw.stats()["telemetry"]["batch_fill"])
+
+Overload resilience (DESIGN.md §13): ``GatewayConfig(max_queue=...,
+overload="reject"|"block")`` bounds admission (shed requests fail with
+``repro.errors.Overloaded``), ``degrade=degrade_ladder(params)`` steps
+quality down under sustained queue pressure and back up when load
+recedes, and requests past their deadline fail typed at dequeue.
 """
-from .gateway import Gateway, GatewayConfig, Handover  # noqa: F401
+from ..errors import (DeadlineExceeded, GatewayClosed,  # noqa: F401
+                      HandoverFailed, Overloaded, RairsError)
+from .gateway import (Gateway, GatewayConfig, Handover,  # noqa: F401
+                      degrade_ladder)
 from .loadgen import run_open_loop  # noqa: F401
 from .queue import PendingRequest, RequestQueue, RequestResult  # noqa: F401
 from .telemetry import (LatencyHistogram, LogSink, MemorySink,  # noqa: F401

@@ -36,13 +36,39 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .. import obs
+from .. import faults, obs
 from ..core.params import SearchParams
 from ..core.stream.streaming import StaleSessionError, StreamingIndex
+from ..errors import (DeadlineExceeded, GatewayClosed, HandoverFailed,
+                      Overloaded)
 from .queue import PendingRequest, RequestQueue, RequestResult
 from .telemetry import Telemetry, TelemetrySink
 
 _ADMISSION_MODES = ("signature", "fifo")
+_OVERLOAD_POLICIES = ("reject", "block")
+
+
+def degrade_ladder(params: SearchParams, levels: int = 2,
+                   factor: float = 0.5) -> Tuple[SearchParams, ...]:
+    """Derive a quality/cost ladder below ``params``: each level scales
+    ``nprobe`` (and any explicit ``max_scan``) by ``factor`` over the
+    previous one, floored at 1 probe.  Level 0 is ``params`` itself —
+    full quality; RAIRS's redundant assignment means the early probes
+    carry most of the recall, so halving nprobe sheds scan cost much
+    faster than it sheds recall (the knob the ladder exists to turn)."""
+    if levels < 1:
+        raise ValueError(f"levels must be >= 1, got {levels}")
+    out = [params]
+    for _ in range(levels):
+        p = out[-1]
+        nprobe = max(1, int(p.nprobe * factor))
+        if nprobe == p.nprobe and p.nprobe > 1:
+            nprobe = p.nprobe - 1
+        kw = {"nprobe": nprobe}
+        if p.max_scan is not None:
+            kw["max_scan"] = max(p.k, int(p.max_scan * factor))
+        out.append(dataclasses.replace(p, **kw))
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +91,28 @@ class GatewayConfig:
                         this fraction of the base (None = explicit only)
     compact_dead_frac   background-handover trigger: tombstones exceed
                         this fraction of the id space (None = explicit)
+    max_queue           bounded admission (DESIGN.md §13): queue depth
+                        cap; None = unbounded (no shedding, no degrade)
+    overload            policy when the bounded queue is full:
+                        "reject" sheds the arrival with ``Overloaded``,
+                        "block" applies producer backpressure
+    drain_s             close() grace window: how long the dispatcher
+                        keeps flushing queued work before failing
+                        leftovers with ``GatewayClosed``; None drains
+                        until empty, 0 fails queued work immediately
+    degrade             quality/cost ladder: SearchParams tuple *below*
+                        level 0 (= the gateway params), stepped down
+                        under sustained queue pressure and back up when
+                        load recedes; see ``degrade_ladder``.  Requires
+                        max_queue (watermarks are depth fractions)
+    degrade_high        step-down watermark, fraction of max_queue
+    degrade_low         step-up watermark, fraction of max_queue
+    degrade_hold        hysteresis: consecutive dispatch cycles the
+                        depth must sit past a watermark before stepping
+    handover_retries    extra fold attempts before a failed async
+                        compaction rolls back and surfaces
+                        ``HandoverFailed``
+    handover_backoff_s  sleep before fold retry i, scaled by 2**i
     """
     max_delay_ms: float = 2.0
     max_batch: int = 256
@@ -73,6 +121,15 @@ class GatewayConfig:
     telemetry_interval_s: float = 0.0
     compact_delta_frac: Optional[float] = None
     compact_dead_frac: Optional[float] = None
+    max_queue: Optional[int] = None
+    overload: str = "reject"
+    drain_s: Optional[float] = None
+    degrade: Optional[Tuple[SearchParams, ...]] = None
+    degrade_high: float = 0.75
+    degrade_low: float = 0.25
+    degrade_hold: int = 3
+    handover_retries: int = 2
+    handover_backoff_s: float = 0.05
 
     def __post_init__(self):
         if self.max_delay_ms < 0:
@@ -87,6 +144,35 @@ class GatewayConfig:
             v = getattr(self, name)
             if v is not None and not v > 0:
                 raise ValueError(f"{name} must be > 0 or None, got {v!r}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 or None, got {self.max_queue}")
+        if self.overload not in _OVERLOAD_POLICIES:
+            raise ValueError(f"overload must be one of {_OVERLOAD_POLICIES}, "
+                             f"got {self.overload!r}")
+        if self.drain_s is not None and self.drain_s < 0:
+            raise ValueError(
+                f"drain_s must be >= 0 or None, got {self.drain_s}")
+        if self.degrade is not None:
+            if self.max_queue is None:
+                raise ValueError("degrade ladder needs max_queue: the "
+                                 "watermarks are fractions of the bound")
+            if not self.degrade:
+                raise ValueError("degrade must be a non-empty tuple of "
+                                 "SearchParams (or None)")
+            if not 0.0 < self.degrade_low < self.degrade_high <= 1.0:
+                raise ValueError(
+                    f"need 0 < degrade_low < degrade_high <= 1, got "
+                    f"low={self.degrade_low} high={self.degrade_high}")
+            if self.degrade_hold < 1:
+                raise ValueError(
+                    f"degrade_hold must be >= 1, got {self.degrade_hold}")
+        if self.handover_retries < 0:
+            raise ValueError(f"handover_retries must be >= 0, "
+                             f"got {self.handover_retries}")
+        if self.handover_backoff_s < 0:
+            raise ValueError(f"handover_backoff_s must be >= 0, "
+                             f"got {self.handover_backoff_s}")
 
 
 class Handover:
@@ -134,7 +220,24 @@ class Gateway:
                                     or cfg.compact_dead_frac is not None):
             raise ValueError("compact_*_frac thresholds need a "
                              "StreamingIndex (nothing to compact otherwise)")
-        self.queue = RequestQueue(grouped=cfg.admission == "signature")
+        # quality/cost ladder: level 0 is the configured params, lower
+        # levels are cheaper SearchParams served under queue pressure
+        ladder = [self.params]
+        for p in (cfg.degrade or ()):
+            p = p.resolve(index)
+            if p.k != self.params.k:
+                raise ValueError(
+                    f"every degrade level must keep k={self.params.k} "
+                    f"(result shape is part of the response contract), "
+                    f"got k={p.k}")
+            ladder.append(p)
+        self._ladder: Tuple[SearchParams, ...] = tuple(ladder)
+        self._level = 0
+        self._hold_down = 0          # cycles spent above the high mark
+        self._hold_up = 0            # cycles spent below the low mark
+        self.queue = RequestQueue(grouped=cfg.admission == "signature",
+                                  max_queue=cfg.max_queue,
+                                  policy=cfg.overload)
         # host-side probe-signature scorer: centroids are frozen across
         # compaction, so one copy serves every epoch
         self._centroids = np.asarray(index.centroids, np.float32)
@@ -143,10 +246,12 @@ class Gateway:
         self._dim = int(self._centroids.shape[1])
         self._lock = threading.RLock()   # session use + mutations + install
         self._last_session = None
+        self._warm_epoch: object = None  # last epoch the ladder was warmed on
         self._handover: Optional[Handover] = None
         self._last_handover: Optional[dict] = None
         self._last_emit = time.perf_counter()
         self._closed = threading.Event()
+        self._drain_deadline: Optional[float] = None
         with self._lock:
             self._session_locked()       # build + warm the serving session
         self._thread = threading.Thread(
@@ -160,9 +265,16 @@ class Gateway:
                ) -> PendingRequest:
         """Enqueue one query vector; returns a future-like handle.
         ``deadline_s`` tightens this request's flush deadline below the
-        gateway-wide ``max_delay_ms`` (it never loosens it)."""
+        gateway-wide ``max_delay_ms`` (it never loosens it) — and a
+        request still queued past its deadline is failed with
+        ``DeadlineExceeded`` at dequeue, never dispatched.
+
+        Bounded admission (``max_queue``) never raises from here: a
+        shed arrival comes back as an already-failed handle whose
+        ``result()`` raises ``Overloaded``, so open-loop producers keep
+        a uniform submit -> result error path under overload."""
         if self._closed.is_set():
-            raise RuntimeError("gateway is closed")
+            raise GatewayClosed("gateway is closed")
         with obs.span("gateway.submit", cat="gateway"):
             q = np.asarray(query, np.float32)
             if q.ndim == 2 and q.shape[0] == 1:
@@ -175,7 +287,11 @@ class Gateway:
                         if deadline_s is not None else None)
             req = PendingRequest(q, sig, deadline=deadline)
             self.telemetry.inc("requests")
-            self.queue.put(req)
+            try:
+                self.queue.put(req)
+            except Overloaded as e:
+                self.telemetry.inc("shed")
+                req._fail(e)
         return req
 
     def search(self, query, timeout: Optional[float] = None) -> RequestResult:
@@ -229,17 +345,46 @@ class Gateway:
         return h
 
     def _fold_worker(self, h: Handover) -> None:
-        try:
-            h.pending.fold()
-            h.state = "ready"
-        except BaseException as e:   # surface through the handle
-            h.error = e
-            h.state = "failed"
-            h.pending.abort()
-            with self._lock:
-                self._handover = None
-            h._done.set()
+        cfg = self.config
+        last = None
+        for attempt in range(cfg.handover_retries + 1):
+            if attempt:
+                self.telemetry.inc("handover_retries")
+                time.sleep(cfg.handover_backoff_s * 2 ** (attempt - 1))
+            try:
+                faults.injected("gateway.fold")
+                h.pending.fold()
+                h.state = "ready"
+                break
+            except BaseException as e:
+                # a failed fold leaves the snapshot intact (state stays
+                # "folding"), so retrying is safe; serving meanwhile
+                # continues on the pinned old epoch
+                last = e
+        else:
+            self._handover_failed(h, last, "fold")
         self.queue.kick()            # wake the dispatcher to install
+
+    def _handover_failed(self, h: Handover, cause: BaseException,
+                         stage: str) -> None:
+        """Roll back: abort the pending compaction (the old epoch stays
+        installed and keeps serving; the id-remap chain is untouched)
+        and surface ``HandoverFailed`` through the handle."""
+        err = HandoverFailed(
+            f"epoch handover failed at {stage} after "
+            f"{self.config.handover_retries + 1} attempt(s): {cause!r}")
+        err.__cause__ = cause
+        h.error = err
+        h.state = "failed"
+        h.pending.abort()
+        with self._lock:
+            self._handover = None
+        self.telemetry.inc("handover_failures")
+        tr = obs.tracer()
+        if tr is not None:
+            tr.event("gateway.handover_failed", time.perf_counter(), 0.0,
+                     cat="gateway", stage=stage, error=repr(cause))
+        h._done.set()
 
     def _maybe_auto_handover(self) -> None:
         c = self.config
@@ -268,6 +413,8 @@ class Gateway:
             "closed": self._closed.is_set(),
             "handover": {"state": h.state if h is not None else "idle",
                          "last": self._last_handover},
+            "quality": {"level": self._level,
+                        "ladder_levels": len(self._ladder)},
         }
         sess = self._last_session
         if sess is not None:
@@ -280,11 +427,16 @@ class Gateway:
         return out
 
     def close(self, timeout: float = 30.0) -> None:
-        """Drain the queue, stop the dispatcher, emit a final record."""
+        """Stop accepting work, drain queued requests for up to
+        ``config.drain_s``, stop the dispatcher, emit a final record.
+        Requests still queued when the drain window closes fail with
+        ``GatewayClosed`` — typed, never a bare RuntimeError."""
         if self._closed.is_set():
             return
+        if self.config.drain_s is not None:
+            self._drain_deadline = time.perf_counter() + self.config.drain_s
         self._closed.set()
-        self.queue.kick()
+        self.queue.close()           # wake dispatcher + blocked producers
         self._thread.join(timeout)
         if self._sinks:
             self.telemetry.emit(self._sinks, kind="gateway_final",
@@ -304,10 +456,10 @@ class Gateway:
             raise TypeError(f"{what} needs a StreamingIndex-backed gateway "
                             f"(got {type(self.index).__name__})")
 
-    def _bucket_ladder(self) -> list:
+    def _bucket_ladder(self, p: Optional[SearchParams] = None) -> list:
         """Every dispatch bucket a flush can land in: deadline flushes
         carry anywhere from 1 to ``max_batch`` requests."""
-        p = self.params
+        p = p or self.params
         top = p.bucket_for(min(self.config.max_batch, p.max_chunk))
         if p.batch_buckets is not None:
             return [b for b in p.batch_buckets if b <= top]
@@ -324,30 +476,30 @@ class Gateway:
         return int(np.argmin(self._c2 - 2.0 * (self._centroids @ q)))
 
     def _session_locked(self):
-        """The current serving session; refreshed (and, on an epoch
-        change, width-warmed) when the index has moved past it."""
-        if self._is_stream:
-            sess = self.index.searcher(self.params)
-        elif self._last_session is None:
-            sess = self.index.searcher(self.params)
-        else:
-            sess = self._last_session
-        if sess is not self._last_session:
-            prev_epoch = getattr(self._last_session, "epoch", None)
-            if self.config.warmup and sess.epoch != prev_epoch:
-                # a new epoch starts with cold executable caches: pre-pay
-                # the compiles now, not on the first request — every
-                # batch bucket a partial flush can dispatch at (and with
-                # plan_reuse, each bucket's union-width ladder).  A
-                # pristine streaming session delegates to its base
-                # session — warm the delegate.
-                target = getattr(sess, "_delegate", None) or sess
+        """The serving session for the *current quality level*;
+        refreshed (and, on an epoch change, width-warmed across every
+        ladder level) when the index has moved past it."""
+        params = self._ladder[self._level]
+        sess = self.index.searcher(params)
+        epoch = getattr(sess, "epoch", 0)
+        if self.config.warmup and epoch != self._warm_epoch:
+            # a new epoch starts with cold executable caches: pre-pay
+            # the compiles now, not on the first request — every batch
+            # bucket a partial flush can dispatch at (and with
+            # plan_reuse, each bucket's union-width ladder), for every
+            # degradation level a pressure step can switch to (a step-
+            # down must never stall on a compile).  A pristine streaming
+            # session delegates to its base session — warm the delegate.
+            self._warm_epoch = epoch
+            for p in self._ladder:
+                s = self.index.searcher(p)
+                target = getattr(s, "_delegate", None) or s
                 before = target.stats.warmup_compiles
-                target.warmup_widths(*self._bucket_ladder())
+                target.warmup_widths(*self._bucket_ladder(p))
                 self.telemetry.inc(
                     "warmup_compiles",
                     target.stats.warmup_compiles - before)
-            self._last_session = sess
+        self._last_session = sess
         return sess
 
     def _serve_loop(self) -> None:
@@ -355,8 +507,18 @@ class Gateway:
             while True:
                 self._install_if_ready()
                 self._maybe_emit()
-                if self._closed.is_set() and self.queue.depth == 0:
-                    break
+                # true deadline enforcement: a request the dispatcher
+                # could not reach by its deadline is failed here, at
+                # dequeue, never dispatched — the check runs *before*
+                # this cycle's flush wait, so a healthy request taken
+                # exactly at its deadline still rides its flush
+                self._fail_expired(time.perf_counter())
+                if self._closed.is_set():
+                    dd = self._drain_deadline
+                    if self.queue.depth == 0 or (
+                            dd is not None
+                            and time.perf_counter() >= dd):
+                        break
                 due = self.queue.oldest_flush_at(
                     self.config.max_delay_ms / 1e3)
                 if due is None:
@@ -364,12 +526,61 @@ class Gateway:
                     continue
                 if not self._closed.is_set():        # draining flushes now
                     self.queue.wait_for_flush(self.config.max_batch, due)
+                self._adjust_level()
                 batch = self.queue.take_batch(self.config.max_batch)
                 if batch:
                     self._dispatch(batch)
         finally:
             for req in self.queue.take_batch(1 << 30):   # never strand
-                req._fail(RuntimeError("gateway closed"))
+                req._fail(GatewayClosed("gateway closed before this "
+                                        "request could be dispatched"))
+
+    def _fail_expired(self, now: float) -> None:
+        expired = self.queue.take_expired(now)
+        if not expired:
+            return
+        self.telemetry.inc("deadline_failures", len(expired))
+        for r in expired:
+            late_ms = (now - r.deadline) * 1e3
+            r._fail(DeadlineExceeded(
+                f"request deadline passed {late_ms:.1f}ms before dispatch"))
+
+    def _adjust_level(self) -> None:
+        """Degradation-ladder hysteresis, one decision per dispatch
+        cycle: sustained depth above the high watermark steps quality
+        down a level; sustained depth below the low watermark steps
+        back up.  Transitions are telemetry counters + trace events."""
+        cfg = self.config
+        if len(self._ladder) == 1 or cfg.max_queue is None:
+            return
+        depth = self.queue.take_peak()   # high-watermark since last cycle
+        if depth >= cfg.degrade_high * cfg.max_queue:
+            self._hold_up = 0
+            if self._level < len(self._ladder) - 1:
+                self._hold_down += 1
+                if self._hold_down >= cfg.degrade_hold:
+                    self._step_to(self._level + 1, depth)
+        elif depth <= cfg.degrade_low * cfg.max_queue:
+            self._hold_down = 0
+            if self._level > 0:
+                self._hold_up += 1
+                if self._hold_up >= cfg.degrade_hold:
+                    self._step_to(self._level - 1, depth)
+        else:
+            self._hold_down = self._hold_up = 0
+
+    def _step_to(self, level: int, depth: int) -> None:
+        down = level > self._level
+        self._level = level
+        self._hold_down = self._hold_up = 0
+        tm = self.telemetry
+        tm.inc("degrade_steps_down" if down else "degrade_steps_up")
+        tm.gauge("quality_level", level)
+        tr = obs.tracer()
+        if tr is not None:
+            tr.event("gateway.degrade", time.perf_counter(), 0.0,
+                     cat="gateway", level=level, queue_depth=depth,
+                     direction="down" if down else "up")
 
     def _install_if_ready(self) -> None:
         h = self._handover
@@ -380,14 +591,16 @@ class Gateway:
                 info = h.pending.install()
                 self._session_locked()   # refresh + warm the new epoch
         except BaseException as e:
-            h.error = e
-            h.state = "failed"
-        else:
-            h.info = info
-            h.state = "installed"
-            self._last_handover = {k: v for k, v in info.items()
-                                   if k != "id_remap"}
-            self.telemetry.inc("handovers")
+            # a failed install rolls back like a failed fold: abort the
+            # pending compaction so the old epoch (still installed)
+            # resumes auto-compaction eligibility, and surface typed
+            self._handover_failed(h, e, "install")
+            return
+        h.info = info
+        h.state = "installed"
+        self._last_handover = {k: v for k, v in info.items()
+                               if k != "id_remap"}
+        self.telemetry.inc("handovers")
         with self._lock:
             self._handover = None
         h._done.set()
@@ -395,13 +608,16 @@ class Gateway:
     def _dispatch(self, batch) -> None:
         tm = self.telemetry
         t_take = time.perf_counter()
-        for r in batch:
-            tm.record_latency(tm.queue_wait, t_take - r.t_enqueue)
-        tm.gauge("queue_depth", self.queue.depth)
+        tm.observe(
+            gauges={"queue_depth": self.queue.depth},
+            latencies=[(tm.queue_wait, t_take - r.t_enqueue)
+                       for r in batch])
+        level = self._level
         with obs.span("gateway.flush", cat="gateway",
                       batch=len(batch)) as fsp:
             q = np.stack([r.query for r in batch])
             try:
+                faults.injected("gateway.dispatch")
                 with self._lock:
                     res, epoch = self._search_locked(q)
                     ids = np.asarray(res.ids)
@@ -421,21 +637,30 @@ class Gateway:
                 return
             fsp.add(approx_dco=approx, refine_dco=refine)
         t_done = time.perf_counter()
-        tm.record_latency(tm.dispatch, t_done - t_take)
-        tm.inc("batches")
-        tm.inc("responses", len(batch))
-        tm.inc("bucket_rows", self.params.bucket_for(
-            min(len(batch), self.params.max_chunk)))
-        tm.add("approx_dco", approx)
-        tm.add("refine_dco", refine)
-        tm.add("result_slots", float(ids.size))
-        tm.add("result_filled", float((ids >= 0).sum()))
-        # exact top-1 distances are signed under the ip metric (finalize
-        # scores are negated inner products) — not a monotone counter
-        tm.add_signed("top1_dist", float(dists[:, 0].sum()))
+        counters = {
+            "batches": 1,
+            "responses": len(batch),
+            "bucket_rows": self.params.bucket_for(
+                min(len(batch), self.params.max_chunk)),
+        }
+        if len(self._ladder) > 1:
+            counters[f"responses_level_{level}"] = len(batch)
+        # one atomic multi-metric update per dispatch: a snapshot racing
+        # this sees the batch fully counted or not at all, so derived
+        # cross-metric invariants (latency.count == responses) are exact
+        tm.observe(
+            counters=counters,
+            sums={"approx_dco": approx, "refine_dco": refine,
+                  "result_slots": float(ids.size),
+                  "result_filled": float((ids >= 0).sum())},
+            # exact top-1 distances are signed under the ip metric
+            # (finalize scores are negated inner products) — not monotone
+            signed={"top1_dist": float(dists[:, 0].sum())},
+            latencies=[(tm.dispatch, t_done - t_take)]
+                      + [(tm.latency, t_done - r.t_enqueue)
+                         for r in batch])
         tr = obs.tracer()
         for i, r in enumerate(batch):
-            tm.record_latency(tm.latency, t_done - r.t_enqueue)
             if tr is not None and tr.sampled():
                 # one exemplar complete-event per sampled request,
                 # spanning enqueue -> fulfill on a virtual request track
@@ -446,7 +671,7 @@ class Gateway:
             r._fulfill(RequestResult(
                 ids=ids[i], dists=dists[i], latency_s=t_done - r.t_enqueue,
                 queued_s=t_take - r.t_enqueue, batch=len(batch),
-                epoch=epoch))
+                epoch=epoch, level=level))
 
     def _search_locked(self, q: np.ndarray):
         """Dispatch through the current session; a session staled by an

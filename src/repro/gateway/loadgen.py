@@ -21,6 +21,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..errors import DeadlineExceeded, GatewayClosed, Overloaded
+
 
 def _pct(sorted_vals, q: float) -> float:
     if not sorted_vals:
@@ -34,8 +36,8 @@ def run_open_loop(gateway, queries: np.ndarray, offered_qps: float,
                   timeout_s: float = 60.0,
                   exponential: bool = True,
                   tick_ms: float = 2.0,
-                  on_request: Optional[Callable[[int], None]] = None
-                  ) -> dict:
+                  on_request: Optional[Callable[[int], None]] = None,
+                  collect: bool = False) -> dict:
     """Drive ``n_requests`` single-query submissions at ``offered_qps``
     and block for every response.
 
@@ -52,9 +54,18 @@ def run_open_loop(gateway, queries: np.ndarray, offered_qps: float,
     on_request    optional hook called after every submit with the
                   request index — the churn/handover tests use it to
                   interleave mutations with live traffic
+    collect       also return the raw per-answer arrays (query index,
+                  result ids) so a caller can score recall offline —
+                  the overload bench needs this to price degradation
 
-    Returns one load-point summary: achieved qps, error count, latency
-    percentiles (ms), and the mean coalesced batch size.
+    Returns one load-point summary: achieved qps, latency percentiles
+    (ms), the mean coalesced batch size, and a full typed accounting of
+    every submission — ``n_ok + shed + deadline_failed + closed +
+    errors == n_requests`` is the no-silent-drops invariant the
+    regression gate asserts.  ``shed``/``deadline_failed``/``closed``
+    count requests the gateway failed *typed* (``Overloaded`` /
+    ``DeadlineExceeded`` / ``GatewayClosed``); ``errors`` is anything
+    untyped — a healthy run, overloaded or not, keeps it at zero.
     """
     if offered_qps <= 0:
         raise ValueError(f"offered_qps must be > 0, got {offered_qps}")
@@ -80,12 +91,30 @@ def run_open_loop(gateway, queries: np.ndarray, offered_qps: float,
             time.sleep(max(wait, tick_ms / 1e3) if tick_ms > 0
                        else max(wait, 0.0))
 
-    results, errors = [], 0
-    for req in pending:
+    results = []
+    shed = deadline_failed = closed = errors = 0
+    ok_idx, ok_ids = [], []
+    levels: dict = {}
+    for i, req in enumerate(pending):
         try:
-            results.append(req.result(timeout_s))
+            r = req.result(timeout_s)
+        except Overloaded:
+            shed += 1
+            continue
+        except DeadlineExceeded:
+            deadline_failed += 1
+            continue
+        except GatewayClosed:
+            closed += 1
+            continue
         except Exception:
             errors += 1
+            continue
+        results.append(r)
+        levels[r.level] = levels.get(r.level, 0) + 1
+        if collect:
+            ok_idx.append(i % len(queries))
+            ok_ids.append(np.asarray(r.ids))
     t1 = time.perf_counter()
 
     lat = sorted(r.latency_s for r in results)
@@ -95,8 +124,15 @@ def run_open_loop(gateway, queries: np.ndarray, offered_qps: float,
         "achieved_qps": len(results) / wall,
         "n_requests": n_requests,
         "n_ok": len(results),
+        "shed": shed,
+        "deadline_failed": deadline_failed,
+        "closed": closed,
         "errors": errors,
+        "levels": {str(k): v for k, v in sorted(levels.items())},
         "wall_s": wall,
+        **({"ok_query_idx": np.asarray(ok_idx, np.int64),
+            "ok_ids": (np.stack(ok_ids) if ok_ids
+                       else np.zeros((0, 0), np.int64))} if collect else {}),
         "p50_ms": _pct(lat, 50) * 1e3,
         "p95_ms": _pct(lat, 95) * 1e3,
         "p99_ms": _pct(lat, 99) * 1e3,

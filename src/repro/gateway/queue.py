@@ -17,6 +17,13 @@ the same hot lists).  FIFO order is preserved *within* a lane, and
 lanes are served by the age of their oldest request, so signature
 grouping can reorder requests only within one flush window — bounded
 by the deadline, never starvation.
+
+Admission is *bounded* (DESIGN.md §13): with ``max_queue`` set, a full
+queue either sheds the arrival (``policy="reject"`` raises
+``Overloaded`` — the producer was never enqueued, retry after backoff
+is safe) or applies backpressure (``policy="block"`` parks the
+producer thread until the dispatcher frees a slot).  Unbounded is the
+default only because the gateway owns choosing a bound.
 """
 from __future__ import annotations
 
@@ -24,6 +31,10 @@ import collections
 import threading
 import time
 from typing import List, NamedTuple, Optional
+
+from ..errors import GatewayClosed, Overloaded
+
+_OVERLOAD_POLICIES = ("reject", "block")
 
 
 class RequestResult(NamedTuple):
@@ -34,6 +45,7 @@ class RequestResult(NamedTuple):
     queued_s: float        # enqueue -> taken into a batch
     batch: int             # coalesced batch size this request rode in
     epoch: int             # index epoch that served it
+    level: int = 0         # degradation-ladder quality level (0 = full)
 
 
 class PendingRequest:
@@ -77,8 +89,17 @@ class RequestQueue:
     """Signature-laned FIFO with a condition variable the dispatcher
     sleeps on.  All methods are thread-safe."""
 
-    def __init__(self, grouped: bool = True):
+    def __init__(self, grouped: bool = True,
+                 max_queue: Optional[int] = None, policy: str = "reject"):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, "
+                             f"got {max_queue}")
+        if policy not in _OVERLOAD_POLICIES:
+            raise ValueError(f"policy must be one of {_OVERLOAD_POLICIES}, "
+                             f"got {policy!r}")
         self.grouped = grouped
+        self.max_queue = max_queue
+        self.policy = policy
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         # one FIFO lane per probe signature (signature 0 lane only when
@@ -86,24 +107,60 @@ class RequestQueue:
         self._lanes: "collections.OrderedDict[int, collections.deque]" = \
             collections.OrderedDict()
         self._depth = 0
+        self._peak = 0
+        self._closed = False
 
     @property
     def depth(self) -> int:
         return self._depth
 
+    def take_peak(self) -> int:
+        """High-watermark depth since the last call (and reset to the
+        current depth).  The degradation ladder keys on this, not on an
+        instantaneous sample: the dispatcher wakes the moment a full
+        batch accumulates, so sampling depth right after the flush wait
+        systematically reads ~max_batch even while the queue saturates
+        and sheds *between* wakeups."""
+        with self._lock:
+            peak = self._peak
+            self._peak = self._depth
+            return peak
+
     def put(self, req: PendingRequest) -> None:
+        """Enqueue one request, applying the overload policy when the
+        queue is bounded and full: "reject" raises ``Overloaded``
+        without enqueuing; "block" parks this producer until the
+        dispatcher frees a slot (raising ``GatewayClosed`` if the
+        gateway shuts down while it waits)."""
         key = req.signature if self.grouped else 0
         with self._cond:
+            if self.max_queue is not None and self._depth >= self.max_queue:
+                if self.policy == "reject":
+                    raise Overloaded(
+                        f"queue at max_queue={self.max_queue}; shed")
+                while self._depth >= self.max_queue and not self._closed:
+                    self._cond.wait()
+            if self._closed:
+                raise GatewayClosed("gateway is closed")
             lane = self._lanes.get(key)
             if lane is None:
                 lane = self._lanes[key] = collections.deque()
             lane.append(req)
             self._depth += 1
+            if self._depth > self._peak:
+                self._peak = self._depth
             self._cond.notify()
 
     def kick(self) -> None:
         """Wake the dispatcher without enqueuing (close, handover-ready)."""
         with self._cond:
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        """Mark closed and wake everyone: blocked producers raise
+        ``GatewayClosed``, the dispatcher sees the flag and drains."""
+        with self._cond:
+            self._closed = True
             self._cond.notify_all()
 
     def oldest_flush_at(self, max_delay: float) -> Optional[float]:
@@ -138,10 +195,36 @@ class RequestQueue:
                     return
                 self._cond.wait(remaining)
 
+    def take_expired(self, now: float) -> List[PendingRequest]:
+        """Remove (and return) every queued request whose deadline is
+        already past at ``now`` — the dispatcher fails these with
+        ``DeadlineExceeded`` instead of dispatching them (a scan whose
+        client has given up is pure wasted capacity)."""
+        with self._cond:
+            if self._depth == 0:
+                return []
+            out: List[PendingRequest] = []
+            for key in list(self._lanes):
+                lane = self._lanes[key]
+                kept = collections.deque(
+                    r for r in lane
+                    if r.deadline is None or r.deadline >= now)
+                if len(kept) != len(lane):
+                    out.extend(r for r in lane
+                               if r.deadline is not None and r.deadline < now)
+                    if kept:
+                        self._lanes[key] = kept
+                    else:
+                        del self._lanes[key]
+            self._depth -= len(out)
+            if out:
+                self._cond.notify_all()   # free slots for blocked producers
+            return out
+
     def take_batch(self, max_batch: int) -> List[PendingRequest]:
         """Drain up to ``max_batch`` requests, whole signature lanes at a
         time, lanes ordered by their oldest member (never starves)."""
-        with self._lock:
+        with self._cond:
             if self._depth == 0:
                 return []
             order = sorted(
@@ -157,4 +240,6 @@ class RequestQueue:
                 if len(out) >= max_batch:
                     break
             self._depth -= len(out)
+            if out:
+                self._cond.notify_all()   # free slots for blocked producers
             return out

@@ -168,6 +168,40 @@ class Telemetry:
         with self._lock:
             hist.record(seconds)
 
+    def observe(self, counters: Optional[dict] = None,
+                sums: Optional[dict] = None,
+                signed: Optional[dict] = None,
+                gauges: Optional[dict] = None,
+                latencies=()) -> None:
+        """Apply one multi-metric update *atomically* — a single lock
+        acquisition covers every counter, sum, gauge, and histogram
+        record, so a concurrent ``snapshot()`` sees either none or all
+        of it.  This is what keeps cross-metric invariants exact under
+        load (e.g. ``latency.count == counters["responses"]`` after
+        every dispatch, asserted by the threaded consistency test).
+
+        ``latencies`` is an iterable of ``(histogram, seconds)`` pairs.
+        Monotonicity is validated up front so a bad delta rejects the
+        whole update instead of applying half of it.
+        """
+        for name, v in (sums or {}).items():
+            if v < 0:
+                raise ValueError(
+                    f"accumulator {name!r}: negative delta {v!r} breaks "
+                    f"the monotone-counters contract; use the signed= "
+                    f"mapping for sums that are legitimately signed")
+        with self._lock:
+            for name, v in (counters or {}).items():
+                self._counters[name] = self._counters.get(name, 0) + v
+            for name, v in (sums or {}).items():
+                self._sums[name] = self._sums.get(name, 0.0) + v
+            for name, v in (signed or {}).items():
+                self._sums[name] = self._sums.get(name, 0.0) + v
+            for name, v in (gauges or {}).items():
+                self._gauges[name] = v
+            for hist, seconds in latencies:
+                hist.record(seconds)
+
     def counter(self, name: str) -> int:
         with self._lock:
             return self._counters.get(name, 0)

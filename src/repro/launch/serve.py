@@ -135,18 +135,25 @@ def run_gateway(serving, args, q, compact_async: bool = False):
     """Serve an open-loop synthetic arrival stream through the async
     gateway at each offered load point; with ``compact_async``, kick a
     zero-downtime epoch handover mid-stream (streaming indexes)."""
-    from repro.gateway import Gateway, GatewayConfig, LogSink, run_open_loop
+    from repro.gateway import (Gateway, GatewayConfig, LogSink,
+                               degrade_ladder, run_open_loop)
 
-    cfg = GatewayConfig(max_delay_ms=args.max_delay_ms,
-                        max_batch=args.max_batch,
-                        admission=args.admission,
-                        telemetry_interval_s=args.telemetry_interval)
-    sinks = (LogSink(),) if args.telemetry_interval > 0 else ()
     params = SearchParams(
         k=args.k, nprobe=args.nprobe, max_scan=args.max_scan,
         exec_mode=args.exec_mode, use_kernel=args.use_kernel,
         fused_topk=args.fused_topk, plan_reuse=args.plan_reuse,
         refine=refine_params(args))
+    ladder = (degrade_ladder(params, levels=args.degrade_levels)[1:]
+              if args.degrade_levels else None)
+    cfg = GatewayConfig(max_delay_ms=args.max_delay_ms,
+                        max_batch=args.max_batch,
+                        admission=args.admission,
+                        max_queue=args.max_queue,
+                        overload=args.overload,
+                        drain_s=args.drain_s,
+                        degrade=ladder,
+                        telemetry_interval_s=args.telemetry_interval)
+    sinks = (LogSink(),) if args.telemetry_interval > 0 else ()
     with Gateway(serving, params, config=cfg, sinks=sinks) as gw:
         for point, qps in enumerate(args.offered_qps):
             handover = None
@@ -168,6 +175,7 @@ def run_gateway(serving, args, q, compact_async: bool = False):
                   f"p50={out['p50_ms']:.2f}ms p95={out['p95_ms']:.2f}ms "
                   f"p99={out['p99_ms']:.2f}ms "
                   f"mean_batch={out['mean_batch']:.1f} "
+                  f"shed={out['shed']} levels={out['levels']} "
                   f"errors={out['errors']}")
             if handover is not None:
                 info = handover.wait(300)
@@ -262,6 +270,24 @@ def main():
     ap.add_argument("--max-batch", type=int, default=64,
                     help="gateway coalescing target (flushes early when "
                          "a full bucket accumulates)")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bounded admission: cap the gateway queue at N "
+                         "requests (default: unbounded; DESIGN.md §13)")
+    ap.add_argument("--overload", default="reject",
+                    choices=("reject", "block"),
+                    help="policy when the bounded queue is full: reject "
+                         "sheds typed (Overloaded), block applies "
+                         "backpressure to producers")
+    ap.add_argument("--drain-s", type=float, default=None, metavar="S",
+                    help="close() grace window: drain queued requests "
+                         "for up to S seconds, then fail leftovers with "
+                         "GatewayClosed (default: drain fully; 0 = "
+                         "fail-fast)")
+    ap.add_argument("--degrade-levels", type=int, default=0, metavar="L",
+                    help="arm a graceful-degradation ladder with L "
+                         "reduced-effort rungs below the configured "
+                         "params (halved nprobe/max_scan per rung; "
+                         "needs --max-queue; 0 = off)")
     ap.add_argument("--admission", default="signature",
                     choices=("signature", "fifo"),
                     help="gateway admission: group requests by rank-0 "

@@ -27,9 +27,9 @@ import pytest
 
 from repro.core import (IndexConfig, SearchParams, StreamConfig,
                         StreamingIndex, build_index)
-from repro.gateway import (Gateway, GatewayConfig, LatencyHistogram,
-                           MemorySink, PendingRequest, RequestQueue,
-                           run_open_loop)
+from repro.gateway import (Gateway, GatewayClosed, GatewayConfig,
+                           LatencyHistogram, MemorySink, PendingRequest,
+                           RequestQueue, run_open_loop)
 
 
 @pytest.fixture()
@@ -79,6 +79,9 @@ def test_submit_validates_and_close_rejects(rairs_index, unit_data):
         with pytest.raises(TypeError):
             gw.compact_async()
     assert gw.stats()["closed"]
+    # typed close error — and still a RuntimeError for legacy callers
+    with pytest.raises(GatewayClosed):
+        gw.submit(q[0])
     with pytest.raises(RuntimeError):
         gw.submit(q[0])
 
@@ -313,3 +316,49 @@ def test_handover_under_live_traffic(stream_index, unit_data):
             [np.asarray(r.ids) for r in results]))
         all_ids = all_ids[all_ids >= 0]
         assert (gw.resolve_ids(all_ids) >= 0).all()
+
+
+def test_telemetry_observe_atomic_under_threads():
+    """The batched ``observe`` path keeps cross-metric invariants exact
+    in *every* snapshot: a dispatch records responses and its latency
+    samples under one lock acquisition, so a concurrent reader can
+    never see the counter move without the histogram (or half a
+    multi-sum update)."""
+    from repro.gateway.telemetry import Telemetry
+    tm = Telemetry()
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            tm.observe(counters={"responses": 2, "batches": 1},
+                       sums={"result_slots": 20.0, "result_filled": 18.0},
+                       latencies=[(tm.latency, 1e-3), (tm.latency, 2e-3)])
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        bad = []
+        for _ in range(300):
+            snap = tm.snapshot()
+            c, s = snap["counters"], snap["latency"]
+            if c.get("responses", 0) != s["count"]:
+                bad.append((c.get("responses", 0), s["count"]))
+            if c.get("responses", 0) != 2 * c.get("batches", 0):
+                bad.append(("responses/batches", c))
+            # multi-sum atomicity: slots and filled move together
+            slots = snap["counters"].get("responses", 0) * 10.0
+            if abs(slots * 0.9 -
+                   (snap["result_fill_rate"] * slots)) > 1e-6:
+                bad.append(("fill_rate", snap["result_fill_rate"]))
+        assert not bad, bad[:5]
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(10.0)
+    # a torn observe (negative sum) must reject before mutating anything
+    before = tm.snapshot()
+    with pytest.raises(ValueError):
+        tm.observe(counters={"responses": 1}, sums={"approx_dco": -1.0})
+    after = tm.snapshot()
+    assert after["counters"] == before["counters"]

@@ -12,10 +12,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import (INDEX_FORMAT, PLANE_FORMAT_VERSION, RefineParams,
-                        SearchParams, RairsIndex, SHARDED_FORMAT_VERSION,
-                        StreamingIndex, load_index, read_index_meta,
-                        save_index)
+from repro.core import (CHECKSUM_FORMAT_VERSION, INDEX_FORMAT,
+                        PLANE_FORMAT_VERSION, RefineParams, SearchParams,
+                        RairsIndex, SHARDED_FORMAT_VERSION, StreamingIndex,
+                        load_index, read_index_meta, save_index)
 
 DATA = os.path.join(os.path.dirname(__file__), "data")
 GOLDEN_V1 = os.path.join(DATA, "golden_v1.npz")
@@ -145,7 +145,7 @@ def test_golden_through_v3_sharded(golden, shards, tmp_path):
     out = tmp_path / "sharded"
     save_index(first, out, shards=shards)
     meta = read_index_meta(out)
-    assert meta["format_version"] == SHARDED_FORMAT_VERSION
+    assert meta["format_version"] == CHECKSUM_FORMAT_VERSION
     assert meta["shards"] == shards
     second = load_index(out)
     assert_indexes_equal(first, second)
@@ -153,13 +153,13 @@ def test_golden_through_v3_sharded(golden, shards, tmp_path):
 
 @pytest.mark.parametrize("shards", [1, 3])
 def test_golden_v4_through_sharded(shards, tmp_path):
-    """Plane-carrying bundles shard like any other — the manifest is
-    stamped v4 and the plane arrays live in the common (unsharded) file."""
+    """Plane-carrying bundles shard like any other — the plane arrays
+    live in the common (unsharded) file."""
     first = load_index(GOLDEN_V4)
     out = tmp_path / "sharded"
     save_index(first, out, shards=shards)
     meta = read_index_meta(out)
-    assert meta["format_version"] == PLANE_FORMAT_VERSION
+    assert meta["format_version"] == CHECKSUM_FORMAT_VERSION
     assert meta["planes"] == ["binary", "pq4"]
     second = load_index(out)
     assert_indexes_equal(first, second)
@@ -183,3 +183,119 @@ def test_fixtures_match_generator_shape():
     assert os.path.getsize(GOLDEN_V1) < 64 * 1024
     assert os.path.getsize(GOLDEN_V2) < 64 * 1024
     assert os.path.getsize(GOLDEN_V4) < 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# v5: per-array checksums + atomic commit (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_v5_single_file_carries_checksums(tmp_path):
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "idx.npz"
+    save_index(first, out)
+    meta = read_index_meta(out)
+    assert meta["format_version"] == CHECKSUM_FORMAT_VERSION
+    assert meta["checksums"]                 # every member covered
+    assert "centroids" in meta["checksums"]
+
+
+def test_v5_sharded_manifest_checksums_cover_every_member(tmp_path):
+    import json
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    manifest = json.loads((out / "MANIFEST.json").read_text())
+    table = manifest["checksums"]
+    for fname in manifest["shard_files"] + [manifest["common"]]:
+        assert table[fname]                  # non-empty per-member map
+    # shard member names are content-addressed: no bare shard_NNNN.npz
+    assert all("-" in f for f in manifest["shard_files"])
+
+
+def test_v5_bitflipped_member_rejected_by_name(tmp_path):
+    from repro.core import CorruptBundleError
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    import json
+    manifest = json.loads((out / "MANIFEST.json").read_text())
+    victim = manifest["shard_files"][0]
+    # rewrite one member with different bytes but a *valid* zip, so
+    # only the manifest crc32 can catch it
+    with np.load(out / victim) as z:
+        members = {k: np.array(z[k]) for k in z.files}
+    name = sorted(members)[0]
+    arr = members[name].copy()
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[0] ^= 0x01                          # one flipped bit
+    members[name] = arr
+    np.savez_compressed(out / victim, **members)
+    with pytest.raises(CorruptBundleError) as ei:
+        load_index(out)
+    assert victim in str(ei.value) and name in str(ei.value)
+
+
+def test_v5_raw_bitflip_in_zip_stream_rejected(tmp_path):
+    # flip a byte in the *file itself* (not a re-zipped member): the zip
+    # stream decodes bad, and numpy only notices at the lazy member
+    # read — that too must surface as CorruptBundleError, not BadZipFile
+    from repro.core import CorruptBundleError
+    first = load_index(GOLDEN_V1)
+    bundle = tmp_path / "single.npz"
+    save_index(first, bundle)
+    raw = bytearray(bundle.read_bytes())
+    raw[len(raw) // 2] ^= 0x10
+    bundle.write_bytes(bytes(raw))
+    with pytest.raises(CorruptBundleError, match="unreadable|crc32"):
+        load_index(bundle)
+
+
+def test_v5_truncated_member_rejected(tmp_path):
+    from repro.core import CorruptBundleError
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    import json
+    manifest = json.loads((out / "MANIFEST.json").read_text())
+    victim = out / manifest["shard_files"][1]
+    raw = victim.read_bytes()
+    victim.write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(CorruptBundleError):
+        load_index(out)
+
+
+def test_v5_missing_member_rejected(tmp_path):
+    from repro.core import CorruptBundleError
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    import json
+    manifest = json.loads((out / "MANIFEST.json").read_text())
+    os.remove(out / manifest["common"])
+    with pytest.raises(CorruptBundleError, match="missing"):
+        load_index(out)
+
+
+def test_v5_save_leaves_no_temp_files(tmp_path):
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    save_index(first, out, shards=3)         # overwrite in place
+    leftovers = [f for f in os.listdir(out) if ".tmp." in f]
+    assert leftovers == []
+    assert_indexes_equal(first, load_index(out))
+
+
+def test_v4_manifest_without_checksums_still_loads(tmp_path):
+    """A v4-era manifest (no checksum table) must load with
+    verification skipped — back-compat over integrity."""
+    import json
+    first = load_index(GOLDEN_V1)
+    out = tmp_path / "sharded"
+    save_index(first, out, shards=2)
+    mpath = out / "MANIFEST.json"
+    manifest = json.loads(mpath.read_text())
+    manifest.pop("checksums")
+    manifest["format_version"] = 4
+    mpath.write_text(json.dumps(manifest))
+    assert_indexes_equal(first, load_index(out))

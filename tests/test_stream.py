@@ -344,7 +344,7 @@ def test_v1_bundle_still_loads(small_index, unit_data, tmp_path):
     with np.load(path) as z:
         arrays = {k: z[k] for k in z.files}
     meta = json.loads(bytes(arrays["meta_json"].tobytes()).decode())
-    assert meta["format_version"] == 2
+    assert meta["format_version"] == 5   # current writer (checksummed)
     meta["format_version"] = 1
     arrays["meta_json"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
     v1 = os.path.join(tmp_path, "v1.npz")
